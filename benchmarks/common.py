@@ -1,0 +1,75 @@
+"""Shared benchmark utilities: method cost evaluation + table formatting."""
+from __future__ import annotations
+
+import math
+
+from repro.core import apps, arch, circuits
+from repro.core.arch import StochIMCConfig
+from repro.core.scheduler import schedule
+
+CFG = StochIMCConfig()          # the paper's evaluation setup: [16,16], BL=256
+
+# Binary-IMC counterpart builders for each stochastic circuit (8-bit
+# fixed-point, Section 5-1's constructions).
+BINARY_OF = {
+    "sc_multiply": lambda: circuits.binary_multiplier(8),
+    "sc_scaled_add": lambda: circuits.binary_ripple_carry_adder(8),
+    "sc_scaled_add_var": lambda: circuits.binary_ripple_carry_adder(8),
+    "sc_abs_sub": lambda: circuits.binary_subtractor(8),
+    "sc_scaled_div": lambda: circuits.binary_divider(8),
+    "sc_sqrt": lambda: circuits.binary_sqrt(8),
+    "sc_exp_c1": lambda: circuits.binary_exp(8),
+    "sc_exp_c0.8": lambda: circuits.binary_exp(8),
+}
+
+
+def binary_builder_for(netlist_name: str):
+    for prefix, builder in BINARY_OF.items():
+        if netlist_name.startswith(prefix):
+            return builder
+    raise KeyError(netlist_name)
+
+
+def stoch_cost(net, n_instances=1, q=None, cfg=CFG):
+    """Stoch-IMC cost: bit-parallel across subarrays; q lanes per subarray."""
+    lanes = q if q is not None else min(cfg.bitstream_length, cfg.subarray_rows)
+    sch = schedule(net, n_lanes=lanes)
+    return arch.evaluate_stoch_imc(net, sch, cfg, n_instances=n_instances)
+
+
+def cram_cost(net, n_instances=1, cfg=CFG):
+    """[22] SC-CRAM cost: bit-serial in a single subarray."""
+    sch = schedule(net, n_lanes=1)
+    return arch.evaluate_sc_cram(net, sch, cfg, n_instances=n_instances)
+
+
+def binary_cost(net, n_instances=1, cfg=CFG):
+    # Binary compositions (sqrt 32x1413-scale, exp 17x1255) exceed the
+    # reliable 256x256 subarray — the paper reports their *minimum array
+    # size* as-is and flags the reliability problem (Section 5-2); we
+    # schedule them unconstrained for the same accounting.
+    sch = schedule(net, r_available=1 << 16, c_available=1 << 16)
+    return arch.evaluate_binary_imc(net, sch, cfg, n_instances=n_instances)
+
+
+def compute_cycles(cost):
+    """Computation-part cycles (Table 2 convention: no StoB accumulation)."""
+    return cost.total_cycles - cost.accumulation_cycles
+
+
+def fmt_table(headers, rows, title=None):
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(headers)]
+    out = []
+    if title:
+        out.append(title)
+    out.append(" | ".join(str(h).ljust(w) for h, w in zip(headers, widths)))
+    out.append("-+-".join("-" * w for w in widths))
+    for r in rows:
+        out.append(" | ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+    return "\n".join(out)
+
+
+def geomean(xs):
+    xs = [x for x in xs if x > 0]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 0.0

@@ -1,0 +1,40 @@
+"""End-to-end training driver example (deliverable b): train a small LM for a
+few hundred steps with checkpoint/restart, on whatever devices exist.
+
+  PYTHONPATH=src python examples/train_lm.py               # CPU-sized (~2M)
+  PYTHONPATH=src python examples/train_lm.py --preset 100m # ~100M (real hw)
+
+Interrupt and re-run: training resumes from the latest atomic checkpoint.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="cpu", choices=["cpu", "100m"])
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt_dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    if args.preset == "cpu":
+        # reduced qwen3-family config (~2M params): loss visibly falls on CPU
+        argv = ["--arch", "qwen3-8b", "--smoke", "--steps",
+                str(args.steps or 300), "--seq", "64", "--batch", "8",
+                "--lr", "3e-3", "--ckpt_dir", args.ckpt_dir,
+                "--ckpt_every", "100", "--log_every", "25"]
+    else:
+        # ~100M-scale run for real hardware (full qwen3-8b reduced x16)
+        argv = ["--arch", "qwen3-8b", "--steps", str(args.steps or 300),
+                "--seq", "1024", "--batch", "32", "--lr", "3e-4",
+                "--ckpt_dir", args.ckpt_dir, "--ckpt_every", "50",
+                "--accum", "4"]
+    train_mod.main(argv)
+
+
+if __name__ == "__main__":
+    main()

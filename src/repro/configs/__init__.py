@@ -1,0 +1,6 @@
+from .registry import (ARCHS, LONG_CONTEXT_ARCHS, SHAPES, ShapeSpec,
+                       get_config, reduced_config, runnable_cells,
+                       skipped_cells, token_specs)
+
+__all__ = ["ARCHS", "LONG_CONTEXT_ARCHS", "SHAPES", "ShapeSpec", "get_config",
+           "reduced_config", "runnable_cells", "skipped_cells", "token_specs"]

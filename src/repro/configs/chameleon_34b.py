@@ -1,0 +1,28 @@
+"""chameleon-34b [vlm] — early-fusion VQ image tokens [arXiv:2405.09818].
+
+48L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=65536.  The VQ image
+tokenizer is a stub: image tokens share the 65536-entry vocabulary
+(frontend.vq_stub_tokens); the backbone is a dense decoder with qk-norm
+(Chameleon's training-stability fix).
+"""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="chameleon-34b", family="vlm",
+        n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+        d_ff=22016, vocab_size=65536,
+        qk_norm=True, layer_pattern=("attn",), mlp_kind="dense",
+        frontend="vq_stub", remat="full",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="chameleon-34b-smoke", family="vlm",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=512,
+        qk_norm=True, layer_pattern=("attn",), mlp_kind="dense",
+        frontend="vq_stub",
+    )

@@ -1,0 +1,38 @@
+"""deepseek-v2-lite-16b [moe] — MLA + fine-grained MoE [arXiv:2405.04434; hf].
+
+27L d_model=2048 16H d_ff_expert=1408 vocab=102400; MLA kv_lora=512
+(qk_nope=128, qk_rope=64, v_head=128); 2 shared + 64 routed experts, top-6;
+layer 0 uses a dense MLP (d_ff=10944), per the HF config.
+
+NOTE: the assignment line reads "2 shared+160 routed"; 160 routed belongs to
+full DeepSeek-V2 — the Lite model (and the same line's "MoE 64e top-6") has
+64 routed experts [hf:deepseek-ai/DeepSeek-V2-Lite].  We implement 64
+(documented in DESIGN.md §Arch-applicability).
+"""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-lite-16b", family="moe",
+        n_layers=27, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_ff=10944, vocab_size=102400,
+        layer_pattern=("mla",), mlp_kind="moe",
+        use_mla=True, kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64,
+        v_head_dim=128,
+        n_experts=64, n_shared_experts=2, top_k=6, d_ff_expert=1408,
+        first_layer_dense=True, d_ff_first=10944, remat="full",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-lite-16b-smoke", family="moe",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=256, vocab_size=512,
+        layer_pattern=("mla",), mlp_kind="moe",
+        use_mla=True, kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+        v_head_dim=16,
+        n_experts=8, n_shared_experts=2, top_k=2, d_ff_expert=64,
+        first_layer_dense=True, d_ff_first=256,
+    )

@@ -1,0 +1,31 @@
+"""gemma3-27b [dense] — 5:1 local:global attention, 128k context
+[hf:google/gemma-3-27b].
+
+62L d_model=5376 32H (GQA kv=16) d_ff=21504 vocab=262144; head_dim=128
+(explicit, not d_model/n_heads — the Gemma convention); sliding window 1024
+on local layers; qk-norm.  Runs long_500k: 5/6 of layers are windowed
+(ring-buffer caches); the 1-in-6 global layers keep a full, seq-sharded KV
+cache.
+"""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-27b", family="dense",
+        n_layers=62, d_model=5376, n_heads=32, n_kv_heads=16, head_dim=128,
+        d_ff=21504, vocab_size=262144,
+        qk_norm=True, local_window=1024,
+        layer_pattern=("local_attn",) * 5 + ("attn",), mlp_kind="dense",
+        remat="full",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-27b-smoke", family="dense",
+        n_layers=7, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=512,
+        qk_norm=True, local_window=16,
+        layer_pattern=("local_attn",) * 5 + ("attn",), mlp_kind="dense",
+    )

@@ -1,0 +1,30 @@
+"""llama4-scout-17b-a16e [moe] — top-1 MoE + shared expert, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E].
+
+48L d_model=5120 40H (GQA kv=8) d_ff_expert=8192 vocab=202048; 16 routed
+experts, top-1 routing, one always-on shared expert; early-fusion multimodal
+input via the VQ-token stub (text + image tokens share the vocabulary).
+"""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-scout-17b-a16e", family="moe",
+        n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+        d_ff=8192, vocab_size=202048,
+        layer_pattern=("attn",), mlp_kind="moe",
+        n_experts=16, n_shared_experts=1, top_k=1, d_ff_expert=8192,
+        frontend="vq_stub", remat="full",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-scout-smoke", family="moe",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=512,
+        layer_pattern=("attn",), mlp_kind="moe",
+        n_experts=4, n_shared_experts=1, top_k=1, d_ff_expert=128,
+        frontend="vq_stub",
+    )

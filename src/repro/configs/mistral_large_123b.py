@@ -1,0 +1,24 @@
+"""mistral-large-123b [dense] [hf:mistralai/Mistral-Large-Instruct-2407].
+
+88L d_model=12288 96H (GQA kv=8) d_ff=28672 vocab=32768; head_dim=128.
+The largest assigned dense model — the FSDP/TP stress test.
+"""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mistral-large-123b", family="dense",
+        n_layers=88, d_model=12288, n_heads=96, n_kv_heads=8, head_dim=128,
+        d_ff=28672, vocab_size=32768,
+        layer_pattern=("attn",), mlp_kind="dense", remat="full",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="mistral-large-smoke", family="dense",
+        n_layers=3, d_model=64, n_heads=8, n_kv_heads=2, head_dim=8,
+        d_ff=128, vocab_size=512,
+        layer_pattern=("attn",), mlp_kind="dense",
+    )

@@ -1,0 +1,24 @@
+"""qwen3-8b [dense] — qk-norm GQA [hf:Qwen/Qwen3-8B].
+
+36L d_model=4096 32H (GQA kv=8) d_ff=12288 vocab=151936; head_dim=128;
+per-head RMS qk-norm (the Qwen3 hallmark).
+"""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-8b", family="dense",
+        n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+        d_ff=12288, vocab_size=151936,
+        qk_norm=True, layer_pattern=("attn",), mlp_kind="dense", remat="full",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-8b-smoke", family="dense",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=512,
+        qk_norm=True, layer_pattern=("attn",), mlp_kind="dense",
+    )

@@ -1,0 +1,28 @@
+"""recurrentgemma-9b [hybrid] — RG-LRU + local attention, 1 attn : 2 recurrent
+[arXiv:2402.19427 (Griffin)].
+
+38L d_model=4096 16H (GQA kv=1) d_ff=12288 vocab=256000; sliding window 2048.
+Sub-quadratic (runs long_500k): recurrence is O(1)-state, attention is
+windowed.
+"""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b", family="hybrid",
+        n_layers=38, d_model=4096, n_heads=16, n_kv_heads=1, head_dim=256,
+        d_ff=12288, vocab_size=256000,
+        layer_pattern=("rglru", "rglru", "local_attn"), mlp_kind="dense",
+        local_window=2048, rglru_width=4096, conv_width=4, remat="full",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b-smoke", family="hybrid",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=1, head_dim=16,
+        d_ff=128, vocab_size=512,
+        layer_pattern=("rglru", "rglru", "local_attn"), mlp_kind="dense",
+        local_window=16, rglru_width=64, conv_width=4,
+    )

@@ -1,0 +1,114 @@
+"""Architecture registry: ``--arch <id>`` resolution, the four assigned input
+shapes, long-context applicability, and abstract ``input_specs`` for dry-runs.
+
+Shapes (assignment):
+    train_4k     seq=4096    global_batch=256   (training, lowers train_step)
+    prefill_32k  seq=32768   global_batch=32    (inference prefill)
+    decode_32k   seq=32768   global_batch=128   (one-token decode vs 32k cache)
+    long_500k    seq=524288  global_batch=1     (long-context decode;
+                 sub-quadratic archs only — skips documented in DESIGN.md §4)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+from . import (chameleon_34b, deepseek_v2_lite_16b, gemma3_27b,
+               llama4_scout_17b_a16e, mistral_large_123b, mistral_nemo_12b,
+               qwen3_8b, recurrentgemma_9b, rwkv6_1_6b, whisper_large_v3)
+
+_MODULES = {
+    "chameleon-34b": chameleon_34b,
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "deepseek-v2-lite-16b": deepseek_v2_lite_16b,
+    "llama4-scout-17b-a16e": llama4_scout_17b_a16e,
+    "gemma3-27b": gemma3_27b,
+    "mistral-large-123b": mistral_large_123b,
+    "qwen3-8b": qwen3_8b,
+    "mistral-nemo-12b": mistral_nemo_12b,
+    "whisper-large-v3": whisper_large_v3,
+    "rwkv6-1.6b": rwkv6_1_6b,
+}
+
+ARCHS = tuple(_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# Sub-quadratic architectures that run long_500k (DESIGN.md §4): windowed /
+# recurrent layers dominate; the rest are pure full-attention — skipped.
+LONG_CONTEXT_ARCHS = ("rwkv6-1.6b", "recurrentgemma-9b", "gemma3-27b")
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(_MODULES)}")
+    return _MODULES[arch].config()
+
+
+def reduced_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].reduced()
+
+
+def runnable_cells() -> list[tuple[str, str]]:
+    """All (arch, shape) dry-run cells, honoring the long_500k skip rule."""
+    cells = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+                continue
+            cells.append((arch, shape))
+    return cells
+
+
+def skipped_cells() -> list[tuple[str, str, str]]:
+    out = []
+    for arch in ARCHS:
+        if arch not in LONG_CONTEXT_ARCHS:
+            out.append((arch, "long_500k",
+                        "pure full attention — O(S^2)/O(S·cache) at 500k; "
+                        "sub-quadratic requirement not met (DESIGN.md §4)"))
+    return out
+
+
+# ------------------------------ input specs ---------------------------------------
+
+def token_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract inputs for the given entry point (ShapeDtypeStruct only)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        d = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+             "labels": jax.ShapeDtypeStruct((b, s), i32)}
+    elif shape.kind == "prefill":
+        d = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    else:  # decode
+        d = {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+             "pos": jax.ShapeDtypeStruct((), i32)}
+    if cfg.is_encoder_decoder:
+        if shape.kind == "decode":
+            # Decode consumes the precomputed encoder output.
+            d["enc_out"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model),
+                                                cfg.dtype)
+        else:
+            d["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model),
+                                               cfg.dtype)
+    return d

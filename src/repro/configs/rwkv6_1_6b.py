@@ -1,0 +1,27 @@
+"""rwkv6-1.6b [ssm] — Finch: attention-free, data-dependent decay
+[arXiv:2404.05892].
+
+24L d_model=2048 d_ff=7168 vocab=65536; WKV head_dim=64 (32 heads).
+Attention-free: O(1)-state decode, runs long_500k natively.
+"""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-1.6b", family="ssm",
+        n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32,
+        d_ff=7168, vocab_size=65536,
+        layer_pattern=("rwkv",), mlp_kind="rwkv",
+        rwkv_head_dim=64, remat="full",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-smoke", family="ssm",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=512,
+        layer_pattern=("rwkv",), mlp_kind="rwkv",
+        rwkv_head_dim=16,
+    )

@@ -1,0 +1,31 @@
+"""whisper-large-v3 [audio] — encoder-decoder [arXiv:2212.04356].
+
+32 encoder + 32 decoder layers, d_model=1280 20H (MHA kv=20) d_ff=5120
+vocab=51866; head_dim=64.  The conv+mel frontend is a STUB: input_specs()
+provides precomputed frame embeddings (B, 1500, 1280).  Decoder-only decode
+shapes attach a 32k self-attention cache (the assigned shape, beyond the
+model's native 448-token decoder context — shapes are exercised as given).
+"""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3", family="encdec",
+        n_layers=32, d_model=1280, n_heads=20, n_kv_heads=20, head_dim=64,
+        d_ff=5120, vocab_size=51866,
+        layer_pattern=("attn",), mlp_kind="dense",
+        is_encoder_decoder=True, n_encoder_layers=32, encoder_seq=1500,
+        frontend="audio_stub", remat="full",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3-smoke", family="encdec",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=512,
+        layer_pattern=("attn",), mlp_kind="dense",
+        is_encoder_decoder=True, n_encoder_layers=2, encoder_seq=16,
+        frontend="audio_stub",
+    )

@@ -1,0 +1,20 @@
+"""Stoch-IMC core: the paper's contribution as a composable library.
+
+Layers:
+  mtj        — STT-MRAM switching physics (Eqs. 1-2) + BtoS pulse LUT
+  bitstream  — packed unipolar bitstreams + IMC primitive gates (JAX)
+  gates      — gate-level netlist IR for the 2T-1MTJ method
+  circuits   — stochastic (Fig. 5) and binary netlist builders
+  scheduler  — Algorithm 1 (co-scheduling + mapping)
+  executor   — netlist interpreter (functional validation, fault injection)
+  sc_ops     — vectorized functional stochastic arithmetic
+  energy     — Eq. (3)-(4) energy model (paper SPICE gate energies)
+  arch       — Stoch-IMC [n, m] architecture model + baselines (Table 3)
+  apps       — LIT / OL / HDP / KDE applications (Fig. 9, Tables 3-4)
+"""
+from . import apps, arch, bitstream, circuits, energy, executor, gates, mtj, sc_ops, scheduler
+
+__all__ = [
+    "apps", "arch", "bitstream", "circuits", "energy", "executor", "gates",
+    "mtj", "sc_ops", "scheduler",
+]

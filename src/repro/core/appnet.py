@@ -1,0 +1,201 @@
+"""Composed per-bit application netlists with instance-per-row placement —
+the input Algorithm 1 actually receives in the paper's evaluation
+(Section 5.3.2: the OL circuit is batched 16 pixel-circuits at a time, LIT
+maps its 81 window operations across rows of a 128x128 subarray, etc.).
+
+Each operation instance is placed row-locally; independent same-type gates
+in different rows with column-aligned inputs fire in a single cycle
+(Algorithm 1's intra-subarray parallelism), and cross-row operand moves
+become scheduler-inserted BUFF copies — the paper's observation that LIT
+needs "numerous copy operations" emerges naturally.
+
+The resulting per-bit netlist executes bit-parallel across the [n, m]
+subarrays: bit i of the 256-bit stream evaluates the same schedule in
+subarray i (one pass for BL <= n*m).
+"""
+from __future__ import annotations
+
+from .gates import Netlist, PIKind
+
+_UID = [0]
+
+
+def _u(prefix: str) -> str:
+    _UID[0] += 1
+    return f"{prefix}_{_UID[0]}"
+
+
+def mul_at(net: Netlist, row: int, a: str, b: str) -> str:
+    n1 = net.add_gate("NAND", [a, b], _u("mn"), row=row)
+    return net.add_gate("NOT", [n1], _u("m"), row=row)
+
+
+def sadd_at(net: Netlist, row: int, a: str, b: str, sel: str) -> str:
+    sb = net.add_gate("NOT", [sel], _u("sb"), row=row)
+    n1 = net.add_gate("NAND", [a, sel], _u("s1"), row=row)
+    n2 = net.add_gate("NAND", [b, sb], _u("s2"), row=row)
+    return net.add_gate("NAND", [n1, n2], _u("sa"), row=row)
+
+
+def xor_at(net: Netlist, row: int, a: str, b: str) -> str:
+    n1 = net.add_gate("NAND", [a, b], _u("x1"), row=row)
+    n2 = net.add_gate("NAND", [a, n1], _u("x2"), row=row)
+    n3 = net.add_gate("NAND", [b, n1], _u("x3"), row=row)
+    return net.add_gate("NAND", [n2, n3], _u("x"), row=row)
+
+
+def sqrt_at(net: Netlist, row: int, a1: str, a2: str, c1: str, c2: str) -> str:
+    n1 = net.add_gate("NAND", [a1, c1], _u("q1"), row=row)
+    n2 = net.add_gate("NAND", [a2, c2], _u("q2"), row=row)
+    return net.add_gate("NAND", [n1, n2], _u("q"), row=row)
+
+
+def div_at(net: Netlist, row: int, a: str, b: str) -> str:
+    """JK divider combinational core (per-bit; state feedback is the
+    wavefront across subarrays — cost accounted per the paper's per-bit
+    schedule)."""
+    q = net.add_pi(_u("Q"), kind=PIKind.STATE, row=row)
+    qb = net.add_gate("NOT", [q], _u("dqb"), row=row)
+    bb = net.add_gate("NOT", [b], _u("dbb"), row=row)
+    n1 = net.add_gate("NAND", [a, qb], _u("d1"), row=row)
+    n2 = net.add_gate("NAND", [bb, q], _u("d2"), row=row)
+    out = net.add_gate("NAND", [n1, n2], _u("d"), row=row)
+    net.bind_state(q, out, init=0.0)
+    return out
+
+
+def exp_at(net: Netlist, row: int, a_copies: list[str], consts: list[str]) -> str:
+    order = len(a_copies)
+    s = net.add_gate("NAND", [a_copies[-1], consts[-1]], _u("e"), row=row)
+    for k in range(order - 1, 0, -1):
+        t = net.add_gate("NAND", [a_copies[k - 1], consts[k - 1]], _u("et"),
+                         row=row)
+        u = net.add_gate("NOT", [t], _u("eu"), row=row)
+        s = net.add_gate("NAND", [u, s], _u("es"), row=row)
+    return s
+
+
+def pi_at(net: Netlist, row: int, value_key=None, const=None, corr=None,
+          copy=0) -> str:
+    kind = PIKind.CONSTANT if const is not None else PIKind.STOCHASTIC
+    return net.add_pi(_u("I"), kind=kind, value_key=value_key,
+                      const_value=const, corr_group=corr, indep_copy=copy,
+                      row=row)
+
+
+def mean_tree(net: Netlist, leaves: list[tuple[str, int]]) -> tuple[str, int]:
+    """Balanced MUX mean tree over (node, row) leaves; returns (root, row).
+
+    Pair partners live in different rows — the scheduler inserts the BUFF
+    moves (the paper's LIT copy overhead)."""
+    level = list(leaves)
+    while len(level) > 1:
+        nxt = []
+        for i in range(0, len(level) - 1, 2):
+            (a, ra), (b, rb) = level[i], level[i + 1]
+            s = pi_at(net, ra, const=0.5)
+            nxt.append((sadd_at(net, ra, a, b, s), ra))
+        if len(level) % 2:
+            nxt.append(level[-1])
+        level = nxt
+    return level[0]
+
+
+# ------------------------------- applications --------------------------------------
+
+def lit_netlist(window: int = 81) -> Netlist:
+    """LIT per-bit circuit (Fig. 9(a)): rows 0..window-1 hold per-pixel work."""
+    net = Netlist("lit_app")
+    squares, a1s, a2s = [], [], []
+    for i in range(window):
+        a1 = pi_at(net, i, value_key=f"a{i}", copy=0)
+        a2 = pi_at(net, i, value_key=f"a{i}", copy=1)
+        squares.append((mul_at(net, i, a1, a2), i))
+        a1s.append((a1, i))
+        a2s.append((a2, i))
+    m_sq, r1 = mean_tree(net, squares)              # E[a^2]
+    m_a1, r2 = mean_tree(net, a1s)                  # E[a]
+    m_a2, r3 = mean_tree(net, a2s)                  # E[a] (independent copy)
+    m_a_sq = mul_at(net, r2, m_a1, m_a2)            # E[a]^2
+    var = xor_at(net, r1, m_sq, m_a_sq)             # |.| (correlated-ish, cost)
+    c1 = pi_at(net, r1, const=0.9)
+    c2 = pi_at(net, r1, const=0.9)
+    var2 = net.add_gate("BUFF", [var], "var_cp", row=r1)
+    sigma = sqrt_at(net, r1, var, var2, c1, c2)
+    ones = pi_at(net, r1, const=1.0)
+    half = pi_at(net, r1, const=0.5)
+    scaled = sadd_at(net, r1, sigma, ones, half)    # (sigma+1)/2
+    t = mul_at(net, r1, m_a1, scaled)
+    net.set_outputs([t])
+    return net
+
+
+def ol_netlist(batch: int = 16) -> Netlist:
+    """OL per-bit circuit batched ``batch`` pixels (paper Section 5.3.2)."""
+    net = Netlist("ol_app")
+    outs = []
+    for r in range(batch):
+        pis = [pi_at(net, r, value_key=f"p{r}_{j}") for j in range(6)]
+        acc = pis[0]
+        for j in range(1, 6):
+            acc = mul_at(net, r, acc, pis[j])
+        outs.append(acc)
+    net.set_outputs(outs)
+    return net
+
+
+def hdp_netlist() -> Netlist:
+    """HDP per-bit circuit (Fig. 9(c) / Eqs. (8)-(9)), ~8 rows."""
+    net = Netlist("hdp_app")
+    p_ed = pi_at(net, 0, value_key="p_ed")
+    p_end = pi_at(net, 0, value_key="p_end")
+    p_d0 = pi_at(net, 0, value_key="p_d")
+    inner_e = sadd_at(net, 0, p_ed, p_end, p_d0)
+    p_ned = pi_at(net, 1, value_key="p_ned")
+    p_nend = pi_at(net, 1, value_key="p_nend")
+    p_d1 = pi_at(net, 1, value_key="p_d", copy=1)
+    inner_ne = sadd_at(net, 1, p_ned, p_nend, p_d1)
+    p_e = pi_at(net, 0, value_key="p_e")
+    p_hd = sadd_at(net, 0, inner_e, inner_ne, p_e)
+    p_bp = pi_at(net, 2, value_key="p_bp")
+    p_cp = pi_at(net, 2, value_key="p_cp")
+    num1 = mul_at(net, 2, p_bp, p_cp)
+    num = mul_at(net, 2, num1, p_hd)
+    nbp_i = pi_at(net, 3, value_key="p_bp", copy=1)
+    ncp_i = pi_at(net, 3, value_key="p_cp", copy=1)
+    nbp = net.add_gate("NOT", [nbp_i], "nbp", row=3)
+    ncp = net.add_gate("NOT", [ncp_i], "ncp", row=3)
+    den1 = mul_at(net, 3, nbp, ncp)
+    nhd = net.add_gate("NOT", [p_hd], "nhd", row=0)
+    den = mul_at(net, 3, den1, nhd)
+    q = div_at(net, 4, num, den)
+    net.set_outputs([q])
+    return net
+
+
+def kde_netlist(n_hist: int = 8, n_factors: int = 5, order: int = 5) -> Netlist:
+    """KDE per-bit circuit (Fig. 9(d) / Eq. (10)), 32 rows (paper 32x64)."""
+    net = Netlist("kde_app")
+    terms = []
+    for i in range(n_hist):
+        factor = None
+        for f in range(n_factors):
+            row = i * 4 + (f % 4)
+            xa = pi_at(net, row, value_key="x_t", corr=f"c{i}_{f}", copy=2 * f)
+            xb = pi_at(net, row, value_key=f"h{i}", corr=f"c{i}_{f}",
+                       copy=2 * f + 1)
+            d = xor_at(net, row, xa, xb)
+            copies = [d] + [net.add_gate("BUFF", [d], _u("dc"), row=row)
+                            for _ in range(order - 1)]
+            consts = [pi_at(net, row, const=0.8 / k)
+                      for k in range(1, order + 1)]
+            e = exp_at(net, row, copies, consts)
+            factor = e if factor is None else mul_at(net, row, factor, e)
+        terms.append((factor, i * 4))
+    pdf, _ = mean_tree(net, terms)
+    net.set_outputs([pdf])
+    return net
+
+
+APP_NETLISTS = {"lit": lit_netlist, "ol": ol_netlist, "hdp": hdp_netlist,
+                "kde": kde_netlist}

@@ -1,0 +1,226 @@
+"""Stoch-IMC memory-architecture model (Section 4-3, Fig. 8).
+
+An [n, m] bank: ``n`` groups x ``m`` subarrays (square layout, n == m in the
+paper's evaluation, 256x256-cell subarrays).  Bit-parallelism: bit ``i`` of
+the application bitstream executes in subarray ``i``; when the bitstream is
+longer than n*m*q (q bits per subarray), the bank either *pipelines*
+(sequential passes, minimum area — the paper's evaluation choice) or
+*parallelizes* over more banks.
+
+Stochastic->binary accumulation is hierarchical: m-step local accumulation in
+every group (in parallel), then n-step global accumulation: n + m steps
+instead of the n*m of an ungrouped organization (validated in
+tests/test_arch.py against the paper's 32-vs-256-step example).
+
+This model turns a Schedule (one subarray's cycle/energy/write accounting)
+into application-level totals: cycles, energy breakdown (Fig. 10), lifetime
+proxies (Eq. 11).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from . import energy as energy_model
+from .gates import Netlist
+from .scheduler import Schedule, input_init_cycles
+
+
+@dataclasses.dataclass(frozen=True)
+class StochIMCConfig:
+    """[n, m] configuration (defaults = the paper's evaluation setup)."""
+
+    n_groups: int = 16
+    m_subarrays: int = 16
+    subarray_rows: int = 256
+    subarray_cols: int = 256
+    n_banks: int = 1
+    bitstream_length: int = 256      # 8-bit resolution
+    mode: str = "pipeline"           # "pipeline" | "parallel" (Section 4-3)
+
+    @property
+    def subarrays_per_bank(self) -> int:
+        return self.n_groups * self.m_subarrays
+
+    def accumulation_steps(self) -> int:
+        """n + m hierarchical accumulation (vs n*m ungrouped)."""
+        return self.n_groups + self.m_subarrays
+
+    def accumulation_steps_ungrouped(self) -> int:
+        return self.n_groups * self.m_subarrays
+
+
+@dataclasses.dataclass
+class AppCost:
+    """Application-level totals for one method (one full evaluation)."""
+
+    method: str
+    total_cycles: int
+    logic_cycles: int
+    init_cycles: int
+    accumulation_cycles: int
+    n_passes: int
+    energy: energy_model.EnergyBreakdown
+    cells_used: int                  # distinct cells across all subarrays
+    subarray_rows: int
+    subarray_cols: int
+    cell_writes: int                 # total write events (lifetime, Eq. 11)
+
+    @property
+    def total_energy_j(self) -> float:
+        return self.energy.total_j
+
+    def lifetime_proxy(self) -> float:
+        """Eq. (11) with utilized cells: lifetime ∝ cells_used / writes-per-cell
+        = cells_used^2 / total_writes . . . normalized across methods as
+        (cells_used / cell_writes) — see lifetime_improvement()."""
+        return self.cells_used / max(self.cell_writes, 1)
+
+
+def evaluate_stoch_imc(net: Netlist, sch: Schedule, cfg: StochIMCConfig,
+                       n_instances: int = 1) -> AppCost:
+    """Cost of executing a scheduled stochastic netlist on the architecture.
+
+    ``sch`` must have been produced with ``n_lanes = q * instances_per_pass``;
+    the subarray handles ``sch.n_lanes`` lanes per pass.  The total lane
+    demand is ``bitstream_length * n_instances``; lanes are spread across the
+    n*m subarrays and, beyond that, across sequential passes (pipeline mode)
+    or extra banks (parallel mode).
+    """
+    total_lanes = cfg.bitstream_length * n_instances
+    lanes_per_pass = sch.n_lanes * cfg.subarrays_per_bank * cfg.n_banks
+    n_passes = math.ceil(total_lanes / lanes_per_pass)
+
+    init = input_init_cycles(net)
+    per_pass_cycles = sch.total_cycles(init_cycles=init)
+    acc_cycles = cfg.accumulation_steps()
+
+    if cfg.mode == "pipeline":
+        compute_cycles = per_pass_cycles * n_passes
+    else:  # parallel across banks: passes collapse, plus transfer overhead
+        compute_cycles = per_pass_cycles + 2  # global-bus transfer cycles
+    total_cycles = compute_cycles + acc_cycles
+
+    active_subarrays = min(math.ceil(total_lanes / sch.n_lanes),
+                           cfg.subarrays_per_bank * cfg.n_banks)
+    comp = energy_model.computation_energy(sch, stochastic=True)
+    # Each subarray executes the schedule once per pass it participates in.
+    per_subarray_passes = math.ceil(total_lanes / (sch.n_lanes * active_subarrays))
+    scale = active_subarrays * per_subarray_passes
+    groups_active = math.ceil(active_subarrays / cfg.m_subarrays)
+    peripheral = energy_model.peripheral_energy(
+        active_subarrays, groups_active, sch.logic_cycles, sch.n_cols,
+        n_local_acc_steps=cfg.m_subarrays, n_global_acc_steps=cfg.n_groups,
+        stochastic=True)
+    breakdown = energy_model.EnergyBreakdown(
+        logic_j=comp.logic_j * scale,
+        preset_j=comp.preset_j * scale,
+        input_init_j=comp.input_init_j * scale,
+        peripheral_j=peripheral * per_subarray_passes,
+    )
+    return AppCost(
+        method="stoch-imc",
+        total_cycles=total_cycles,
+        logic_cycles=sch.logic_cycles * (n_passes if cfg.mode == "pipeline" else 1),
+        init_cycles=init * (n_passes if cfg.mode == "pipeline" else 1),
+        accumulation_cycles=acc_cycles,
+        n_passes=n_passes,
+        energy=breakdown,
+        cells_used=sch.cells_used * active_subarrays,
+        subarray_rows=sch.n_rows,
+        subarray_cols=sch.n_cols,
+        cell_writes=sch.cell_writes * scale,
+    )
+
+
+def evaluate_binary_imc(net: Netlist, sch: Schedule, cfg: StochIMCConfig,
+                        n_instances: int = 1) -> AppCost:
+    """Cost of the binary 2T-1MTJ baseline [3, 8] for the same computation.
+
+    Binary IMC executes one (multi-bit) instance per subarray region; the
+    intra-subarray-parallel implementation packs as many instances as rows
+    allow, then iterates.
+    """
+    init = input_init_cycles(net)
+    instances_per_subarray = max(cfg.subarray_rows // max(sch.n_rows, 1), 1)
+    lanes_per_pass = instances_per_subarray * cfg.subarrays_per_bank * cfg.n_banks
+    n_passes = math.ceil(n_instances / lanes_per_pass)
+    per_pass_cycles = sch.total_cycles(init_cycles=init)
+    total_cycles = per_pass_cycles * n_passes
+
+    active_subarrays = min(math.ceil(n_instances / instances_per_subarray),
+                           cfg.subarrays_per_bank * cfg.n_banks)
+    comp = energy_model.computation_energy(sch, stochastic=False)
+    scale = n_instances  # each instance executes the netlist once
+    peripheral = energy_model.peripheral_energy(
+        active_subarrays, math.ceil(active_subarrays / cfg.m_subarrays),
+        sch.logic_cycles, sch.n_cols,
+        n_local_acc_steps=0, n_global_acc_steps=0, stochastic=False)
+    breakdown = energy_model.EnergyBreakdown(
+        logic_j=comp.logic_j * scale,
+        preset_j=comp.preset_j * scale,
+        input_init_j=comp.input_init_j * scale,
+        peripheral_j=peripheral * n_passes,
+    )
+    return AppCost(
+        method="binary-imc",
+        total_cycles=total_cycles,
+        logic_cycles=sch.logic_cycles * n_passes,
+        init_cycles=init * n_passes,
+        accumulation_cycles=0,
+        n_passes=n_passes,
+        energy=breakdown,
+        cells_used=sch.cells_used * min(n_instances, active_subarrays * instances_per_subarray),
+        subarray_rows=sch.n_rows * min(instances_per_subarray, n_instances),
+        subarray_cols=sch.n_cols,
+        cell_writes=sch.cell_writes * scale,
+    )
+
+
+def evaluate_sc_cram(net: Netlist, sch_1lane: Schedule, cfg: StochIMCConfig,
+                     n_instances: int = 1) -> AppCost:
+    """Cost model of the in-memory SC method of [22] (SC-CRAM).
+
+    Per the paper's related-work discussion: bit-serial — the per-bit
+    stochastic circuit executes once per bitstream bit *sequentially in a
+    single subarray* ("computations for each bit are presented and repeated
+    according to the bitstream length"; "relies on a single memory array").
+    No result-accumulation architecture is provided, so StoB conversion is
+    done by a serial counter over the bitstream (BL steps).
+    """
+    init = input_init_cycles(net)
+    per_bit_cycles = sch_1lane.total_cycles(init_cycles=init)
+    bl = cfg.bitstream_length
+    total_cycles = per_bit_cycles * bl * n_instances + bl  # + serial count
+    comp = energy_model.computation_energy(sch_1lane, stochastic=True)
+    scale = bl * n_instances
+    peripheral = energy_model.peripheral_energy(
+        1, 1, sch_1lane.logic_cycles * bl, sch_1lane.n_cols,
+        n_local_acc_steps=bl, n_global_acc_steps=0, stochastic=True)
+    # [22] has no accumulator hierarchy: its StoB is a serial counter; we
+    # charge it the local-accumulator energy per bit (already in the call).
+    breakdown = energy_model.EnergyBreakdown(
+        logic_j=comp.logic_j * scale,
+        preset_j=comp.preset_j * scale,
+        input_init_j=comp.input_init_j * scale,
+        peripheral_j=peripheral * n_instances,
+    )
+    return AppCost(
+        method="sc-cram[22]",
+        total_cycles=total_cycles,
+        logic_cycles=sch_1lane.logic_cycles * scale,
+        init_cycles=init * scale,
+        accumulation_cycles=bl,
+        n_passes=scale,
+        energy=breakdown,
+        cells_used=sch_1lane.cells_used,   # single subarray, cells reused
+        subarray_rows=sch_1lane.n_rows,
+        subarray_cols=sch_1lane.n_cols,
+        cell_writes=sch_1lane.cell_writes * scale,
+    )
+
+
+def lifetime_improvement(a: AppCost, baseline: AppCost) -> float:
+    """Eq. (11) ratio: (E_max * C / B) relative to baseline, with C = utilized
+    cells and B = write traffic (write accesses dominate endurance)."""
+    return (a.cells_used / a.cell_writes) / (baseline.cells_used / baseline.cell_writes)

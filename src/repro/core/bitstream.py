@@ -1,0 +1,178 @@
+"""Packed stochastic bitstreams (unipolar encoding) in JAX.
+
+A stochastic number (SN) of value ``p`` in [0, 1] is a bitstream whose bits are
+i.i.d. Bernoulli(p) (Section 2-3).  We store bitstreams *packed*, 32 bits per
+``uint32`` word, so every bitwise op processes 32 bitstream bits per lane —
+this is the TPU translation of the paper's bit-parallelism across subarrays
+(DESIGN.md Section 2).
+
+Shapes: a bitstream tensor for values of shape ``S`` with bitstream length
+``BL`` is ``S + (BL // 32,)`` of dtype uint32.
+
+Generation uses counter-based PRNG (stands in for the MTJ intrinsic
+stochastic switching of Eqs. (1)-(2)); correlated streams share their
+underlying uniforms so that XOR computes exact |a-b| (Fig. 4(c)/5(c)).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+_LANE_SHIFTS = np.arange(WORD_BITS, dtype=np.uint32)
+
+
+def n_words(bitstream_length: int) -> int:
+    if bitstream_length % WORD_BITS != 0:
+        raise ValueError(f"bitstream length {bitstream_length} must be a multiple of {WORD_BITS}")
+    return bitstream_length // WORD_BITS
+
+
+def _threshold_u32(p: jax.Array) -> jax.Array:
+    """Map probability p in [0,1] to a uint32 compare threshold.
+
+    This is the digital analogue of the BtoS voltage-pulse LUT: the value is
+    quantized to a threshold such that P(rand_u32 < threshold) = p.
+    """
+    p = jnp.clip(p.astype(jnp.float64) if jax.config.read("jax_enable_x64") else p.astype(jnp.float32), 0.0, 1.0)
+    # 2**32 cannot be represented in uint32; clamp to the max so p=1.0 gives
+    # an (almost-surely) all-ones stream: threshold 0xFFFFFFFF covers all but
+    # one value in 2^32.
+    scaled = jnp.round(p * jnp.float32(4294967296.0))
+    return jnp.minimum(scaled, jnp.float32(4294967295.0)).astype(jnp.uint32)
+
+
+def _uniform_u32(key: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    return jax.random.bits(key, shape=shape, dtype=jnp.uint32)
+
+
+@partial(jax.jit, static_argnames=("bitstream_length",))
+def generate(key: jax.Array, p: jax.Array, bitstream_length: int) -> jax.Array:
+    """Generate packed bitstreams: shape p.shape + (BL//32,) uint32.
+
+    Models the stochastic-number-generation step: each bit is '1' with
+    probability p, independently (MTJ stochastic write per cell).
+    """
+    w = n_words(bitstream_length)
+    u = _uniform_u32(key, p.shape + (w, WORD_BITS))
+    bits = (u < _threshold_u32(p)[..., None, None]).astype(jnp.uint32)
+    return pack_bits(bits)
+
+
+@partial(jax.jit, static_argnames=("bitstream_length",))
+def generate_correlated(key: jax.Array, ps: tuple[jax.Array, ...] | list[jax.Array],
+                        bitstream_length: int) -> tuple[jax.Array, ...]:
+    """Generate maximally-correlated packed streams for several values.
+
+    All streams share the same underlying uniforms (same RNG cells written
+    with different pulse amplitudes, in paper terms), so
+    XOR(stream_a, stream_b) has value exactly |a - b| in expectation.
+    Values must be broadcast-compatible.
+    """
+    shape = jnp.broadcast_shapes(*[jnp.shape(p) for p in ps])
+    w = n_words(bitstream_length)
+    u = _uniform_u32(key, shape + (w, WORD_BITS))
+    outs = []
+    for p in ps:
+        p = jnp.broadcast_to(jnp.asarray(p), shape)
+        bits = (u < _threshold_u32(p)[..., None, None]).astype(jnp.uint32)
+        outs.append(pack_bits(bits))
+    return tuple(outs)
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack a (..., W, 32) {0,1} tensor into (..., W) uint32 words."""
+    shifts = jnp.asarray(_LANE_SHIFTS)
+    return jnp.sum(bits.astype(jnp.uint32) << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array) -> jax.Array:
+    """Unpack (..., W) uint32 words into (..., W, 32) {0,1} uint32 bits."""
+    shifts = jnp.asarray(_LANE_SHIFTS)
+    return (words[..., None] >> shifts) & jnp.uint32(1)
+
+
+def popcount(words: jax.Array) -> jax.Array:
+    """Total number of set bits along the last (word) axis.
+
+    This is the StoB conversion (Section 2-3 step 3): counting ones recovers
+    the binary value.  ``lax.population_count`` is the per-word popcount; the
+    sum over words mirrors the local-accumulator -> global-accumulator
+    hierarchy of the Stoch-IMC architecture (Fig. 8).
+    """
+    per_word = jax.lax.population_count(words)
+    return jnp.sum(per_word.astype(jnp.int32), axis=-1)
+
+
+def to_value(words: jax.Array, bitstream_length: int) -> jax.Array:
+    """Decode a packed bitstream back to its unipolar value in [0, 1]."""
+    return popcount(words).astype(jnp.float32) / jnp.float32(bitstream_length)
+
+
+# --- packed boolean algebra (the IMC primitive gates) ---------------------------
+
+def not_(a: jax.Array) -> jax.Array:
+    return ~a
+
+
+def buff(a: jax.Array) -> jax.Array:
+    return a
+
+
+def and_(a: jax.Array, b: jax.Array) -> jax.Array:
+    return a & b
+
+
+def nand(a: jax.Array, b: jax.Array) -> jax.Array:
+    return ~(a & b)
+
+
+def or_(a: jax.Array, b: jax.Array) -> jax.Array:
+    return a | b
+
+
+def nor(a: jax.Array, b: jax.Array) -> jax.Array:
+    return ~(a | b)
+
+
+def xor(a: jax.Array, b: jax.Array) -> jax.Array:
+    # Not an IMC primitive: realized as AND(NAND(a,b), OR(a,b)) in netlists.
+    return a ^ b
+
+
+def mux(a: jax.Array, b: jax.Array, sel: jax.Array) -> jax.Array:
+    """Scaled addition (Fig. 4(a)): out = sel ? a : b, value = s*a + (1-s)*b."""
+    return (a & sel) | (b & ~sel)
+
+
+def maj3(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    return (a & b) | (a & c) | (b & c)
+
+
+def maj5(a, b, c, d, e) -> jax.Array:
+    # Majority-of-5 as a boolean identity over packed words.
+    ab, ac, ad, ae = a & b, a & c, a & d, a & e
+    bc, bd, be = b & c, b & d, b & e
+    cd, ce, de = c & d, c & e, d & e
+    return (
+        (ab & c) | (ab & d) | (ab & e) | (ac & d) | (ac & e) | (ad & e)
+        | (bc & d) | (bc & e) | (bd & e) | (cd & e)
+    )
+
+
+GATE_FNS = {
+    "NOT": not_,
+    "BUFF": buff,
+    "AND": and_,
+    "NAND": nand,
+    "OR": or_,
+    "NOR": nor,
+    "XOR": xor,
+    "MAJ3": maj3,
+    "MAJ5": maj5,
+    "NMAJ3": lambda a, b, c: ~maj3(a, b, c),
+    "NMAJ5": lambda a, b, c, d, e: ~maj5(a, b, c, d, e),
+}

@@ -1,0 +1,560 @@
+"""Netlist builders: stochastic arithmetic (Fig. 5) and binary IMC baselines.
+
+Stochastic circuits use only the reliability-preferred gate subset
+{NOT, BUFF, NAND} (Section 5-1).  Binary circuits use the NMAJ3/NMAJ5 full
+adder of [3, 8] with the polarity-alternating carry trick of Fig. 7(a)
+(DESIGN.md §7).  Where the paper's figures are unavailable, reconstruction
+choices are documented inline and in DESIGN.md §7.
+"""
+from __future__ import annotations
+
+from .gates import ALL_ROWS, Netlist, PIKind
+
+
+# =============================== stochastic ops ===================================
+
+def sc_multiply() -> Netlist:
+    """Fig. 5(b): multiplication = AND = NOT(NAND).  value = a*b."""
+    n = Netlist("sc_multiply")
+    a = n.add_pi("A", value_key="a")
+    b = n.add_pi("B", value_key="b")
+    t = n.add_gate("NAND", [a, b], "n1")
+    n.add_gate("NOT", [t], "out")
+    n.set_outputs(["out"])
+    return n
+
+
+def sc_scaled_add(select: float = 0.5) -> Netlist:
+    """Fig. 5(a): scaled addition = MUX.  value = s*a + (1-s)*b.
+
+    NAND form: out = NAND(NAND(A,S), NAND(B,S_bar)) — 4 gates / 7 columns,
+    matching Table 2's 256x7 array and Fig. 7(b)'s 4-cycle schedule.
+    """
+    n = Netlist("sc_scaled_add")
+    a = n.add_pi("A", value_key="a")
+    b = n.add_pi("B", value_key="b")
+    s = n.add_pi("S", kind=PIKind.CONSTANT, const_value=select)
+    sb = n.add_gate("NOT", [s], "S_bar")
+    n1 = n.add_gate("NAND", [a, s], "n1")
+    n2 = n.add_gate("NAND", [b, sb], "n2")
+    n.add_gate("NAND", [n1, n2], "out")
+    n.set_outputs(["out"])
+    return n
+
+
+def sc_scaled_add_var() -> Netlist:
+    """Scaled addition with a *variable* (stochastic) select stream.
+
+    Used by the HDP application (Eq. (9)): MUX with select P(D)/P(E) computes
+    s*a + (1-s)*b, i.e. probability-weighted mixing.
+    """
+    n = Netlist("sc_scaled_add_var")
+    a = n.add_pi("A", value_key="a")
+    b = n.add_pi("B", value_key="b")
+    s = n.add_pi("S", value_key="s")
+    sb = n.add_gate("NOT", [s], "S_bar")
+    n1 = n.add_gate("NAND", [a, s], "n1")
+    n2 = n.add_gate("NAND", [b, sb], "n2")
+    n.add_gate("NAND", [n1, n2], "out")
+    n.set_outputs(["out"])
+    return n
+
+
+def sc_abs_sub() -> Netlist:
+    """Fig. 5(c): |a-b| = XOR over *correlated* streams (shared randomness).
+
+    Four-NAND XOR: n1=NAND(A,B); out=NAND(NAND(A,n1), NAND(B,n1)).
+    """
+    n = Netlist("sc_abs_sub")
+    a = n.add_pi("A", value_key="a", corr_group="g0")
+    b = n.add_pi("B", value_key="b", corr_group="g0")
+    n1 = n.add_gate("NAND", [a, b], "n1")
+    n2 = n.add_gate("NAND", [a, n1], "n2")
+    n3 = n.add_gate("NAND", [b, n1], "n3")
+    n.add_gate("NAND", [n2, n3], "out")
+    n.set_outputs(["out"])
+    return n
+
+
+def sc_scaled_div() -> Netlist:
+    """Fig. 5(d): scaled division via the Gaines JK feedback unit.
+
+    Q <- (A AND Q_bar) OR (B_bar AND Q), Q init 0 (per the paper)
+       = NAND(NAND(A, Q_bar), NAND(B_bar, Q));  E[Q] -> a / (a + b).
+    Sequential across bitstream bits: executed as a wavefront across
+    subarrays in the Stoch-IMC architecture (DESIGN.md §7(d)).
+    """
+    n = Netlist("sc_scaled_div")
+    a = n.add_pi("A", value_key="a")
+    b = n.add_pi("B", value_key="b")
+    q = n.add_pi("Q", kind=PIKind.STATE)
+    qb = n.add_gate("NOT", [q], "Q_bar")
+    bb = n.add_gate("NOT", [b], "B_bar")
+    n1 = n.add_gate("NAND", [a, qb], "n1")
+    n2 = n.add_gate("NAND", [bb, q], "n2")
+    qn = n.add_gate("NAND", [n1, n2], "Q_next")
+    n.bind_state(q, qn, init=0.0)
+    n.set_outputs([qn])
+    return n
+
+
+SQRT_C = 0.9  # least-squares fit of 1-(1-c*x)^2 to sqrt(x) on [0,1]
+
+
+def sc_sqrt() -> Netlist:
+    """Fig. 5(e): square root — reconstructed circuit (DESIGN.md §7(e)).
+
+    Two independently-generated copies A1, A2 of the same value and two
+    constant streams C1, C2 (paper's description); combinational form
+    out = NAND(NAND(A1,C1), NAND(A2,C2)) = 1-(1-c x)^2 = 2c*x - c^2*x^2,
+    c = 0.9.  Used for cycle/energy/area accounting; the accuracy path of the
+    applications uses a value-faithful sqrt sampling model (apps.py), since no
+    two-copy combinational circuit can match sqrt near 0.
+    """
+    n = Netlist("sc_sqrt")
+    a1 = n.add_pi("A1", value_key="a", indep_copy=0)
+    a2 = n.add_pi("A2", value_key="a", indep_copy=1)
+    c1 = n.add_pi("C1", kind=PIKind.CONSTANT, const_value=SQRT_C)
+    c2 = n.add_pi("C2", kind=PIKind.CONSTANT, const_value=SQRT_C)
+    n1 = n.add_gate("NAND", [a1, c1], "n1")
+    n2 = n.add_gate("NAND", [a2, c2], "n2")
+    n.add_gate("NAND", [n1, n2], "out")
+    n.set_outputs(["out"])
+    return n
+
+
+def sc_exp(c: float = 1.0, order: int = 5) -> Netlist:
+    """Fig. 5(f): exp(-c*a), 0 < c <= 1, 5th-order Maclaurin in Horner form.
+
+    s_5 = NAND(A5, C5) = 1 - (c/5) a
+    s_k = NAND(AND(A_k, C_k), s_{k+1}) = 1 - (c/k) a s_{k+1},   k = 4..1
+    with independent copies A_k and constant streams C_k = c/k.  Unbiased
+    under independence (each A_k independent of s_{k+1}).
+    """
+    if not (0.0 < c <= 1.0):
+        raise ValueError("exp(-c a) requires 0 < c <= 1 for unipolar encoding")
+    n = Netlist(f"sc_exp_c{c:g}")
+    a_copies = [n.add_pi(f"A{k}", value_key="a", indep_copy=k - 1)
+                for k in range(1, order + 1)]
+    consts = [n.add_pi(f"C{k}", kind=PIKind.CONSTANT, const_value=c / k)
+              for k in range(1, order + 1)]
+    s = n.add_gate("NAND", [a_copies[order - 1], consts[order - 1]], f"s{order}")
+    for k in range(order - 1, 0, -1):
+        t = n.add_gate("NAND", [a_copies[k - 1], consts[k - 1]], f"t{k}")
+        u = n.add_gate("NOT", [t], f"u{k}")
+        s = n.add_gate("NAND", [u, s], f"s{k}")
+    n.set_outputs([s])
+    return n
+
+
+def sc_mux_tree(leaf_names: list[str], netlist: Netlist, prefix: str = "m") -> str:
+    """Balanced MUX tree computing the *mean* of the leaves (scaled adds, S=0.5).
+
+    Returns the root node name.  Leaves must already exist in ``netlist``.
+    Used by the application circuits (LIT window mean, KDE history mean).
+    """
+    level = list(leaf_names)
+    const_id = 0
+    depth = 0
+    while len(level) > 1:
+        nxt: list[str] = []
+        for i in range(0, len(level) - 1, 2):
+            s = netlist.add_pi(f"{prefix}_S{depth}_{i}", kind=PIKind.CONSTANT,
+                               const_value=0.5)
+            sb = netlist.add_gate("NOT", [s], f"{prefix}_Sb{depth}_{i}")
+            n1 = netlist.add_gate("NAND", [level[i], s], f"{prefix}_n1_{depth}_{i}")
+            n2 = netlist.add_gate("NAND", [level[i + 1], sb], f"{prefix}_n2_{depth}_{i}")
+            nxt.append(netlist.add_gate("NAND", [n1, n2], f"{prefix}_o{depth}_{i}"))
+            const_id += 1
+        if len(level) % 2 == 1:
+            # Odd leaf passes through at half weight next round: pair it with
+            # itself is biased; standard practice pads with the leaf itself.
+            nxt.append(level[-1])
+        level = nxt
+        depth += 1
+    return level[0]
+
+
+# ================================ binary ops =====================================
+
+def binary_ripple_carry_adder(n_bits: int) -> Netlist:
+    """n-bit in-memory binary adder (Fig. 7(a)), one bit lane per row.
+
+    Per-row full adder of [3, 8]: carry-out = NMAJ3(a, b, c); sum via NMAJ5
+    with the doubled complemented-carry operand (its BUFF copy).  Rows
+    alternate stored-input polarity so the complemented carry feeds the next
+    row directly: even rows store (a, b) true and produce the inverted carry;
+    odd rows store (a_bar, b_bar) and produce the true carry (DESIGN.md §7).
+    Schedules to 2(n-1)+3 cycles (even n) / 2(n-1)+4 (odd n) — the paper's
+    formula; 9 cycles at n=4.
+    """
+    net = Netlist(f"bin_add_{n_bits}")
+    a = [net.add_pi(f"A{i}", kind=PIKind.BINARY, value_key="a", row=i)
+         for i in range(n_bits)]
+    b = [net.add_pi(f"B{i}", kind=PIKind.BINARY, value_key="b", row=i)
+         for i in range(n_bits)]
+    c0 = net.add_pi("C0", kind=PIKind.BINARY, const_value=0.0, row=0)
+
+    carry = c0  # carry node resident in row i (polarity alternates)
+    sums: list[str] = []
+    for i in range(n_bits):
+        nc = net.add_gate("NMAJ3", [a[i], b[i], carry], f"nc{i + 1}", row=i)
+        cc = net.add_gate("BUFF", [nc], f"cc{i}", row=i)  # doubled operand copy
+        ns = net.add_gate("NMAJ5", [a[i], b[i], carry, nc, cc], f"ns{i}", row=i)
+        if i % 2 == 0:
+            sums.append(net.add_gate("NOT", [ns], f"s{i}", row=i))
+        else:
+            sums.append(ns)  # inverted-polarity row yields the true sum directly
+        if i + 1 < n_bits:
+            carry = net.add_gate("BUFF", [nc], f"c{i + 1}", row=i + 1)  # cross-row
+        else:
+            carry = nc  # final carry (complemented on even-polarity MSB rows)
+    net.set_outputs(sums + [carry])
+    return net
+
+
+def rca_prepare_inputs(a: "jnp.ndarray", b: "jnp.ndarray", n_bits: int) -> dict:
+    """Pack integer operand vectors into the Fig. 7(a) polarity convention.
+
+    Lane ``t`` of each PI word is test-vector ``t``.  Odd rows store inverted
+    bits (the alternating-polarity carry trick).
+    """
+    import jax.numpy as jnp
+    a = jnp.asarray(a, jnp.uint32)
+    b = jnp.asarray(b, jnp.uint32)
+    bits = {}
+    full = jnp.uint32(0xFFFFFFFF)
+    for i in range(n_bits):
+        abit = jnp.where((a >> i) & 1 == 1, full, jnp.uint32(0))
+        bbit = jnp.where((b >> i) & 1 == 1, full, jnp.uint32(0))
+        if i % 2 == 1:
+            abit, bbit = ~abit, ~bbit
+        bits[f"A{i}"] = abit
+        bits[f"B{i}"] = bbit
+    return bits
+
+
+def rca_decode_outputs(outs: dict, n_bits: int) -> "jnp.ndarray":
+    """Decode the adder outputs (sum bits + final carry) to integers."""
+    import jax.numpy as jnp
+    assert n_bits < 31, "decode uses uint32 accumulation"
+    total = jnp.zeros_like(next(iter(outs.values())), dtype=jnp.uint32)
+    for i in range(n_bits):
+        name = f"s{i}" if i % 2 == 0 else f"ns{i}"
+        total = total + (outs[name] & jnp.uint32(1)) * jnp.uint32(1 << i)
+    carry = outs[f"nc{n_bits}"]
+    if (n_bits - 1) % 2 == 0:  # MSB row even polarity -> carry stored inverted
+        carry = ~carry
+    total = total + (carry & jnp.uint32(1)) * jnp.uint32(1 << n_bits)
+    return total
+
+
+def binary_adder_nand_serial(n_bits: int) -> Netlist:
+    """Single-row serial binary adder from 9-NAND full adders.
+
+    Matches the paper's Table 2 binary scaled-addition layout (1 x 88 for
+    8 bits: 17 input cells + ~9 gates per FA), which serializes completely in
+    one row — the baseline the stochastic 0.056X timing ratio is against.
+    """
+    net = Netlist(f"bin_add_nand_{n_bits}")
+    a = [net.add_pi(f"A{i}", kind=PIKind.BINARY, value_key="a", row=0)
+         for i in range(n_bits)]
+    b = [net.add_pi(f"B{i}", kind=PIKind.BINARY, value_key="b", row=0)
+         for i in range(n_bits)]
+    carry = net.add_pi("C0", kind=PIKind.BINARY, const_value=0.0, row=0)
+    sums = []
+    for i in range(n_bits):
+        # 9-NAND full adder (all gates in row 0).
+        n1 = net.add_gate("NAND", [a[i], b[i]], f"n1_{i}", row=0)
+        n2 = net.add_gate("NAND", [a[i], n1], f"n2_{i}", row=0)
+        n3 = net.add_gate("NAND", [b[i], n1], f"n3_{i}", row=0)
+        h = net.add_gate("NAND", [n2, n3], f"h_{i}", row=0)       # a xor b
+        n4 = net.add_gate("NAND", [h, carry], f"n4_{i}", row=0)
+        n5 = net.add_gate("NAND", [h, n4], f"n5_{i}", row=0)
+        n6 = net.add_gate("NAND", [carry, n4], f"n6_{i}", row=0)
+        sums.append(net.add_gate("NAND", [n5, n6], f"s{i}", row=0))
+        carry = net.add_gate("NAND", [n4, n1], f"c{i + 1}", row=0)
+    net.set_outputs(sums + [carry])
+    return net
+
+
+def binary_multiplier(n_bits: int) -> Netlist:
+    """n x n-bit in-memory multiplier: AND partial products + adder-tree
+    reduction (Wallace-style) built from the same NMAJ3/NMAJ5 full adders.
+
+    The structure (not the exact Wallace wiring) is what drives cycle/energy
+    counts; partial products of weight w map to row w so that same-weight
+    reductions are intra-row.  AND = NOT(NAND).
+    """
+    net = Netlist(f"bin_mul_{n_bits}")
+    a = [net.add_pi(f"A{i}", kind=PIKind.BINARY, value_key="a", row=i)
+         for i in range(n_bits)]
+    b = [net.add_pi(f"B{j}", kind=PIKind.BINARY, value_key="b", row=j)
+         for j in range(n_bits)]
+
+    # Partial products: pp[i][j] = a_i AND b_j at weight i+j, mapped to row (i+j) % n.
+    columns: dict[int, list[str]] = {}
+    for i in range(n_bits):
+        for j in range(n_bits):
+            w = i + j
+            row = w % n_bits
+            ai, bj = a[i], b[j]
+            nn = net.add_gate("NAND", [ai, bj], f"pp_n_{i}_{j}", row=row)
+            pp = net.add_gate("NOT", [nn], f"pp_{i}_{j}", row=row)
+            columns.setdefault(w, []).append(pp)
+
+    # Carry-save reduction: repeatedly compress 3 same-weight terms with a FA.
+    fa_id = 0
+
+    def full_add(x: str, y: str, z: str, row: int) -> tuple[str, str]:
+        nonlocal fa_id
+        nc = net.add_gate("NMAJ3", [x, y, z], f"fa{fa_id}_nc", row=row)
+        cc = net.add_gate("BUFF", [nc], f"fa{fa_id}_cc", row=row)
+        ns = net.add_gate("NMAJ5", [x, y, z, nc, cc], f"fa{fa_id}_ns", row=row)
+        s = net.add_gate("NOT", [ns], f"fa{fa_id}_s", row=row)
+        c = net.add_gate("NOT", [nc], f"fa{fa_id}_c", row=row)
+        fa_id += 1
+        return s, c
+
+    max_w = 2 * n_bits - 2
+    w = 0
+    while w <= max_w:
+        terms = columns.get(w, [])
+        while len(terms) >= 3:
+            x, y, z = terms.pop(), terms.pop(), terms.pop()
+            s, c = full_add(x, y, z, row=w % n_bits)
+            terms.append(s)
+            columns.setdefault(w + 1, []).append(c)
+            max_w = max(max_w, w + 1)
+        w += 1
+
+    # Final ripple over remaining <=2-term columns.
+    outs: list[str] = []
+    carry: str | None = None
+    for w in range(2 * n_bits):
+        terms = list(columns.get(w, []))
+        if carry is not None:
+            terms.append(carry)
+        row = w % n_bits
+        if not terms:
+            break
+        if len(terms) == 1:
+            outs.append(terms[0])
+            carry = None
+        elif len(terms) == 2:
+            zero = net.add_pi(f"Z{w}", kind=PIKind.BINARY, const_value=0.0, row=row)
+            s, c = full_add(terms[0], terms[1], zero, row)
+            outs.append(s)
+            carry = c
+        else:
+            s, c = full_add(terms[0], terms[1], terms[2], row)
+            outs.append(s)
+            carry = c
+    net.set_outputs(outs)
+    return net
+
+
+def binary_subtractor(n_bits: int) -> Netlist:
+    """a - b via two's complement: invert b (NOT per row) and add with c0=1."""
+    net = Netlist(f"bin_sub_{n_bits}")
+    a = [net.add_pi(f"A{i}", kind=PIKind.BINARY, value_key="a", row=i)
+         for i in range(n_bits)]
+    b = [net.add_pi(f"B{i}", kind=PIKind.BINARY, value_key="b", row=i)
+         for i in range(n_bits)]
+    c0 = net.add_pi("C0", kind=PIKind.BINARY, const_value=1.0, row=0)
+    nb = [net.add_gate("NOT", [b[i]], f"nb{i}", row=i) for i in range(n_bits)]
+    carry = c0
+    sums = []
+    for i in range(n_bits):
+        nc = net.add_gate("NMAJ3", [a[i], nb[i], carry], f"nc{i + 1}", row=i)
+        cc = net.add_gate("BUFF", [nc], f"cc{i}", row=i)
+        ns = net.add_gate("NMAJ5", [a[i], nb[i], carry, nc, cc], f"ns{i}", row=i)
+        s = net.add_gate("NOT", [ns], f"s{i}", row=i)
+        sums.append(s)
+        if i + 1 < n_bits:
+            # True-polarity carry for the next row needs an extra inversion
+            # (no polarity trick here: b is already inverted per-row).
+            c_true = net.add_gate("NOT", [nc], f"ct{i + 1}", row=i)
+            carry = net.add_gate("BUFF", [c_true], f"c{i + 1}", row=i + 1)
+        else:
+            carry = nc
+    net.set_outputs(sums + [carry])
+    return net
+
+
+def binary_divider(n_bits: int) -> Netlist:
+    """Non-restoring array divider: n_bits stages of conditional add/subtract.
+
+    Cost-accounting construction (the paper uses a "non-storing array
+    division unit"): n stages x (n-bit adder/subtractor + quotient logic).
+    """
+    net = Netlist(f"bin_div_{n_bits}")
+    a = [net.add_pi(f"A{i}", kind=PIKind.BINARY, value_key="a", row=i)
+         for i in range(n_bits)]
+    b = [net.add_pi(f"B{i}", kind=PIKind.BINARY, value_key="b", row=i)
+         for i in range(n_bits)]
+    rem = [net.add_pi(f"R{i}", kind=PIKind.BINARY, const_value=0.0, row=i)
+           for i in range(n_bits)]
+    quot: list[str] = []
+    for s_idx in range(n_bits):
+        # Shift-in handled by renaming; per stage: subtract b from remainder.
+        carry = net.add_pi(f"c_{s_idx}_0", kind=PIKind.BINARY, const_value=1.0, row=0)
+        new_rem: list[str] = []
+        for i in range(n_bits):
+            nb = net.add_gate("NOT", [b[i]], f"nb_{s_idx}_{i}", row=i)
+            x = rem[i] if s_idx == 0 else rem[i]
+            nc = net.add_gate("NMAJ3", [x, nb, carry], f"nc_{s_idx}_{i}", row=i)
+            cc = net.add_gate("BUFF", [nc], f"cc_{s_idx}_{i}", row=i)
+            ns = net.add_gate("NMAJ5", [x, nb, carry, nc, cc], f"ns_{s_idx}_{i}", row=i)
+            s = net.add_gate("NOT", [ns], f"s_{s_idx}_{i}", row=i)
+            new_rem.append(s)
+            if i + 1 < n_bits:
+                ct = net.add_gate("NOT", [nc], f"ct_{s_idx}_{i}", row=i)
+                carry = net.add_gate("BUFF", [ct], f"c_{s_idx}_{i + 1}", row=i + 1)
+        sign = net.add_gate("NOT", [nc], f"q_{s_idx}", row=n_bits - 1)
+        quot.append(sign)
+        # Restore-select: rem = sign ? new_rem : rem  (MUX per bit: 4 gates)
+        restored: list[str] = []
+        for i in range(n_bits):
+            if i != n_bits - 1:
+                sgn = net.add_gate("BUFF", [sign], f"sgncp_{s_idx}_{i}", row=i)
+            else:
+                sgn = sign
+            sb = net.add_gate("NOT", [sgn], f"sb_{s_idx}_{i}", row=i)
+            n1 = net.add_gate("NAND", [new_rem[i], sgn], f"mx1_{s_idx}_{i}", row=i)
+            n2 = net.add_gate("NAND", [rem[i], sb], f"mx2_{s_idx}_{i}", row=i)
+            restored.append(net.add_gate("NAND", [n1, n2], f"rem_{s_idx}_{i}", row=i))
+        rem = restored
+    net.set_outputs(quot)
+    return net
+
+
+def binary_subtractor_serial(n_bits: int) -> Netlist:
+    """Single-row serial subtractor (paper Table 2's 1x90 binary layout):
+    per bit, invert b then a 9-NAND full adder, all in row 0, c0 = 1."""
+    net = Netlist(f"bin_sub_serial_{n_bits}")
+    a = [net.add_pi(f"A{i}", kind=PIKind.BINARY, value_key="a", row=0)
+         for i in range(n_bits)]
+    b = [net.add_pi(f"B{i}", kind=PIKind.BINARY, value_key="b", row=0)
+         for i in range(n_bits)]
+    carry = net.add_pi("C0", kind=PIKind.BINARY, const_value=1.0, row=0)
+    sums = []
+    for i in range(n_bits):
+        nb = net.add_gate("NOT", [b[i]], f"nb{i}", row=0)
+        n1 = net.add_gate("NAND", [a[i], nb], f"n1_{i}", row=0)
+        n2 = net.add_gate("NAND", [a[i], n1], f"n2_{i}", row=0)
+        n3 = net.add_gate("NAND", [nb, n1], f"n3_{i}", row=0)
+        h = net.add_gate("NAND", [n2, n3], f"h_{i}", row=0)
+        n4 = net.add_gate("NAND", [h, carry], f"n4_{i}", row=0)
+        n5 = net.add_gate("NAND", [h, n4], f"n5_{i}", row=0)
+        n6 = net.add_gate("NAND", [carry, n4], f"n6_{i}", row=0)
+        sums.append(net.add_gate("NAND", [n5, n6], f"s{i}", row=0))
+        carry = net.add_gate("NAND", [n4, n1], f"c{i + 1}", row=0)
+    net.set_outputs(sums + [carry])
+    return net
+
+
+# --- composable sub-circuit builders (for the sqrt / exp compositions) ------------
+
+def _rca_into(net: Netlist, prefix: str, a: list, b: list, carry: str) -> list:
+    """Row-parallel ripple-carry adder over existing nodes; returns sums."""
+    n_bits = len(a)
+    sums = []
+    for i in range(n_bits):
+        nc = net.add_gate("NMAJ3", [a[i], b[i], carry], f"{prefix}_nc{i}", row=i)
+        cc = net.add_gate("BUFF", [nc], f"{prefix}_cc{i}", row=i)
+        ns = net.add_gate("NMAJ5", [a[i], b[i], carry, nc, cc],
+                          f"{prefix}_ns{i}", row=i)
+        sums.append(net.add_gate("NOT", [ns], f"{prefix}_s{i}", row=i))
+        if i + 1 < n_bits:
+            ct = net.add_gate("NOT", [nc], f"{prefix}_ct{i}", row=i)
+            carry = net.add_gate("BUFF", [ct], f"{prefix}_c{i + 1}", row=i + 1)
+    return sums
+
+
+def _mul_into(net: Netlist, prefix: str, a: list, b: list) -> list:
+    """Array multiplier over existing nodes (schoolbook rows of RCAs);
+    returns the low n_bits of the product (fixed-point truncation)."""
+    n_bits = len(a)
+    acc = None
+    for j in range(n_bits):
+        row_pp = []
+        for i in range(n_bits - j):
+            nn = net.add_gate("NAND", [a[i], b[j]], f"{prefix}_ppn{i}_{j}",
+                              row=(i + j) % n_bits)
+            row_pp.append(net.add_gate("NOT", [nn], f"{prefix}_pp{i}_{j}",
+                                       row=(i + j) % n_bits))
+        padded = [net.add_pi(f"{prefix}_z{j}_{i}", kind=PIKind.BINARY,
+                             const_value=0.0, row=i) for i in range(j)] + row_pp
+        if acc is None:
+            acc = padded
+        else:
+            c0 = net.add_pi(f"{prefix}_c0_{j}", kind=PIKind.BINARY,
+                            const_value=0.0, row=0)
+            acc = _rca_into(net, f"{prefix}_add{j}", acc, padded, c0)
+    return acc
+
+
+def _div_into(net: Netlist, prefix: str, a: list, b: list) -> list:
+    """Non-restoring array divider over existing nodes; returns quotient."""
+    n_bits = len(a)
+    rem = [net.add_pi(f"{prefix}_r{i}", kind=PIKind.BINARY, const_value=0.0,
+                      row=i) for i in range(n_bits)]
+    quot = []
+    for s_idx in range(n_bits):
+        carry = net.add_pi(f"{prefix}_c_{s_idx}", kind=PIKind.BINARY,
+                           const_value=1.0, row=0)
+        nb = [net.add_gate("NOT", [b[i]], f"{prefix}_nb_{s_idx}_{i}", row=i)
+              for i in range(n_bits)]
+        diff = _rca_into(net, f"{prefix}_sub{s_idx}", rem, nb, carry)
+        sign = net.add_gate("NOT", [diff[-1]], f"{prefix}_q{s_idx}",
+                            row=n_bits - 1)
+        quot.append(sign)
+        restored = []
+        for i in range(n_bits):
+            sg = (net.add_gate("BUFF", [sign], f"{prefix}_sg_{s_idx}_{i}", row=i)
+                  if i != n_bits - 1 else sign)
+            sb = net.add_gate("NOT", [sg], f"{prefix}_sb_{s_idx}_{i}", row=i)
+            m1 = net.add_gate("NAND", [diff[i], sg], f"{prefix}_m1_{s_idx}_{i}", row=i)
+            m2 = net.add_gate("NAND", [rem[i], sb], f"{prefix}_m2_{s_idx}_{i}", row=i)
+            restored.append(net.add_gate("NAND", [m1, m2],
+                                         f"{prefix}_rm_{s_idx}_{i}", row=i))
+        rem = restored
+    return quot
+
+
+def binary_sqrt(n_bits: int, newton_steps: int = 3) -> Netlist:
+    """Binary square root via ``newton_steps`` Newton-Raphson iterations
+    y' = (y + x/y) / 2 -- each step composes a full array divider and an
+    adder (paper Section 5-1; Table 2's 32x1413 scale)."""
+    net = Netlist(f"bin_sqrt_{n_bits}")
+    x = [net.add_pi(f"X{i}", kind=PIKind.BINARY, value_key="a", row=i)
+         for i in range(n_bits)]
+    cur = x
+    for step in range(newton_steps):
+        q = _div_into(net, f"st{step}_div", x, cur)         # x / y
+        c0 = net.add_pi(f"st{step}_ac", kind=PIKind.BINARY, const_value=0.0,
+                        row=0)
+        cur = _rca_into(net, f"st{step}_add", cur, q, c0)   # y + x/y (>>1 free)
+    net.set_outputs(cur)
+    return net
+
+
+def binary_exp(n_bits: int, order: int = 5) -> Netlist:
+    """Binary exp(-cx), 5th-order Maclaurin in Horner form: ``order`` stages
+    of (full array multiply + add) -- paper Section 5-1 (Table 2's 17x1255
+    scale)."""
+    net = Netlist(f"bin_exp_{n_bits}")
+    x = [net.add_pi(f"X{i}", kind=PIKind.BINARY, value_key="a", row=i)
+         for i in range(n_bits)]
+    acc = [net.add_pi(f"K{i}", kind=PIKind.BINARY, const_value=1.0, row=i)
+           for i in range(n_bits)]
+    for stage in range(order):
+        prod = _mul_into(net, f"e{stage}_mul", acc, x)      # acc * x
+        const = [net.add_pi(f"e{stage}_k{i}", kind=PIKind.BINARY,
+                            const_value=0.0, row=i) for i in range(n_bits)]
+        c0 = net.add_pi(f"e{stage}_c0", kind=PIKind.BINARY, const_value=1.0,
+                        row=0)
+        acc = _rca_into(net, f"e{stage}_add", prod, const, c0)
+    net.set_outputs(acc)
+    return net

@@ -1,0 +1,151 @@
+"""Netlist interpreter: executes gate netlists on packed bitstreams.
+
+Bridges the structural view (circuits.py netlists, used for scheduling and
+cost) and the value view (sc_ops.py): every netlist can be *run* and its
+output streams decoded, so tests can assert that the scheduled circuits
+compute what the paper says they compute — including sequential (stateful)
+circuits like the Gaines divider, and under injected bitflips (Table 4).
+
+Binary netlists execute on packed test-vector words: lane ``t`` of the packed
+words is test vector ``t``, so one call evaluates 32*W random input
+combinations at once.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import bitstream as bs
+from .gates import Netlist, PIKind
+from . import sc_ops
+
+
+def _gen_pi_streams(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
+                    bitstream_length: int) -> dict[str, jax.Array]:
+    """Generate packed streams for every PI, honoring correlation groups and
+    independent-copy indices."""
+    shape = jnp.broadcast_shapes(*[jnp.shape(jnp.asarray(v)) for v in values.values()]) \
+        if values else ()
+    streams: dict[str, jax.Array] = {}
+
+    # Correlated groups share underlying uniforms.
+    groups: dict[str, list] = {}
+    singles: list = []
+    for pi in net.pis:
+        if pi.kind == PIKind.STATE:
+            continue
+        if pi.corr_group is not None:
+            groups.setdefault(pi.corr_group, []).append(pi)
+        else:
+            singles.append(pi)
+
+    n_keys = len(groups) + len(singles)
+    keys = jax.random.split(key, max(n_keys, 1))
+    ki = 0
+    for gname, pis in sorted(groups.items()):
+        vals = []
+        for pi in pis:
+            v = values[pi.value_key] if pi.value_key else pi.const_value
+            vals.append(jnp.broadcast_to(jnp.asarray(v, jnp.float32), shape))
+        outs = bs.generate_correlated(keys[ki], vals, bitstream_length)
+        ki += 1
+        for pi, o in zip(pis, outs):
+            streams[pi.name] = o
+    for pi in singles:
+        v = values[pi.value_key] if pi.value_key is not None else pi.const_value
+        v = jnp.broadcast_to(jnp.asarray(v, jnp.float32), shape)
+        streams[pi.name] = bs.generate(keys[ki], v, bitstream_length)
+        ki += 1
+    return streams
+
+
+def execute(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
+            bitstream_length: int, bitflip_rate: float = 0.0,
+            flip_key: jax.Array | None = None) -> dict[str, jax.Array]:
+    """Execute a (possibly sequential) netlist; returns packed output streams.
+
+    ``bitflip_rate`` injects faults on the PI streams and on every gate
+    output stream (the paper injects at input/output nodes of the
+    arithmetic operations).
+    """
+    streams = _gen_pi_streams(net, values, key, bitstream_length)
+
+    if bitflip_rate > 0.0:
+        assert flip_key is not None
+        fkeys = jax.random.split(flip_key, len(streams) + len(net.gates))
+        for i, name in enumerate(sorted(streams)):
+            streams[name] = sc_ops.flip_bits(fkeys[i], streams[name], bitflip_rate)
+
+    if not net.is_sequential:
+        for gi, g in enumerate(net.gates):
+            out = bs.GATE_FNS[g.gtype](*[streams[i] for i in g.inputs])
+            if bitflip_rate > 0.0:
+                out = sc_ops.flip_bits(fkeys[len(streams) + gi], out, bitflip_rate)
+            streams[g.output] = out
+        return {o: streams[o] for o in net.outputs}
+
+    # Sequential: iterate the combinational core over bitstream bits.
+    state_pis = list(net.state_bindings.keys())
+    shape = next(iter(streams.values())).shape  # (..., W)
+    bl = bitstream_length
+
+    def unpack_time_major(w):
+        bits = bs.unpack_bits(w)                      # (..., W, 32)
+        flat = bits.reshape(bits.shape[:-2] + (bl,))
+        return jnp.moveaxis(flat, -1, 0)              # (BL, ...)
+
+    time_streams = {k: unpack_time_major(v) for k, v in streams.items()}
+
+    def step(state, xs):
+        env = dict(xs)
+        for s_name in state_pis:
+            env[s_name] = state[s_name]
+        for g in net.gates:
+            env[g.output] = bs.GATE_FNS[g.gtype](*[env[i] for i in g.inputs])
+        new_state = {s: env[net.state_bindings[s][0]] for s in state_pis}
+        outs = {o: env[o] for o in net.outputs}
+        return new_state, outs
+
+    init = {s: jnp.full(shape[:-1], jnp.uint32(round(net.state_bindings[s][1])))
+            for s in state_pis}
+    _, out_seq = jax.lax.scan(step, init, time_streams)
+    packed_outs = {}
+    for o, seq in out_seq.items():
+        seq = jnp.moveaxis(seq, 0, -1)                # (..., BL)
+        bits = seq.reshape(seq.shape[:-1] + (bl // 32, 32))
+        packed_outs[o] = bs.pack_bits(bits)
+    if bitflip_rate > 0.0:
+        for i, o in enumerate(sorted(packed_outs)):
+            packed_outs[o] = sc_ops.flip_bits(fkeys[len(streams) + i],
+                                              packed_outs[o], bitflip_rate)
+    return packed_outs
+
+
+def execute_value(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
+                  bitstream_length: int, **kw) -> dict[str, jax.Array]:
+    """Execute and decode each output stream to its unipolar value."""
+    outs = execute(net, values, key, bitstream_length, **kw)
+    return {k: bs.to_value(v, bitstream_length) for k, v in outs.items()}
+
+
+def execute_binary(net: Netlist, operand_bits: dict[str, jax.Array]) -> dict[str, jax.Array]:
+    """Execute a binary netlist on packed test-vector words.
+
+    ``operand_bits`` maps PI names to uint32 words whose lane ``t`` is the
+    PI's value in test vector ``t``.  Constant PIs (const_value set) are
+    filled automatically.  Inverted-polarity storage (the Fig. 7(a) trick) is
+    applied by the *caller* via the netlist's value conventions.
+    """
+    env: dict[str, jax.Array] = {}
+    shape = next(iter(operand_bits.values())).shape
+    for pi in net.pis:
+        if pi.name in operand_bits:
+            env[pi.name] = operand_bits[pi.name]
+        elif pi.const_value is not None:
+            fill = jnp.uint32(0xFFFFFFFF) if pi.const_value >= 1.0 else jnp.uint32(0)
+            env[pi.name] = jnp.full(shape, fill)
+        else:
+            raise KeyError(f"missing binary operand {pi.name}")
+    for g in net.gates:
+        env[g.output] = bs.GATE_FNS[g.gtype](*[env[i] for i in g.inputs])
+    return {o: env[o] for o in net.outputs}

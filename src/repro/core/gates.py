@@ -1,0 +1,191 @@
+"""Gate-level netlist IR for the 2T-1MTJ IMC method.
+
+Semantics (reverse-engineered from Fig. 7 and Algorithm 1, see DESIGN.md §7):
+
+* A memory subarray is a grid of (row, column) 2T-1MTJ cells.
+* A *node* is a named wire.  Every node is placed at a column; a node spans
+  either **all rows** (SIMD node — e.g. every bit of a 256-bit stochastic
+  stream occupies rows 0..255 of one column, Fig. 7(b)) or **one row**
+  (row-local node — e.g. binary bit ``A_i`` lives in row ``i``, Fig. 7(a)).
+* A gate reads its input cells and writes one output cell *within one row*
+  (the logic current path is intra-row).  A SIMD gate executes in all rows
+  simultaneously in a single cycle — that is the intra-subarray parallelism
+  the paper's Algorithm 1 exploits.
+* If a row-local gate's inputs live in different rows, a BUFF copy must first
+  move the operand into the consuming row (Algorithm 1 lines 15-22; the carry
+  BUFFs of Fig. 7(a)).
+
+Primary inputs carry value metadata so netlists can be *executed* (on packed
+bitstreams for stochastic circuits, on binary bit-vectors for binary ones) as
+well as *scheduled* (cycles / placement / energy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import defaultdict
+from typing import Iterable, Sequence
+
+ALL_ROWS = -1  # row marker for SIMD nodes spanning every row of the mapping
+
+# Gates supported by the 2T-1MTJ method (Section 4-1) plus the MAJ gates used
+# by the binary full-adder construction of [3, 8] (Fig. 7(a)).
+SUPPORTED_GATES = ("BUFF", "NOT", "AND", "NAND", "OR", "NOR", "NMAJ3", "NMAJ5", "MAJ3", "MAJ5")
+# Reliability-preferred subset used for Stoch-IMC circuits (Section 5-1).
+RELIABLE_GATES = ("NOT", "BUFF", "NAND")
+
+# Output-cell preset value required before executing each gate type ([3, 8]):
+# AND/OR-like gates preset to '1', NAND/NOR-like to '0'.  Only the existence
+# of a preset matters for energy/cycle accounting; every gate needs one.
+GATE_ARITY = {
+    "BUFF": 1, "NOT": 1,
+    "AND": 2, "NAND": 2, "OR": 2, "NOR": 2,
+    "MAJ3": 3, "NMAJ3": 3, "MAJ5": 5, "NMAJ5": 5,
+}
+
+
+class PIKind(enum.Enum):
+    STOCHASTIC = "stochastic"     # value in [0,1], stochastically written (SBG)
+    CONSTANT = "constant"         # constant stochastic stream (still SBG-written)
+    BINARY = "binary"             # deterministically written binary bits
+    STATE = "state"               # sequential feedback state (e.g. divider Q)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrimaryInput:
+    """A netlist primary input.
+
+    ``corr_group``: streams sharing a correlation group are generated from the
+    same underlying randomness (required by absolute-value subtraction).
+    ``indep_copy``: distinct copies of the same value that must be generated
+    independently (square root's A1/A2, the exponential's A_k copies).
+    ``row``: ALL_ROWS for SIMD streams, else the row index (binary bit lanes).
+    """
+
+    name: str
+    kind: PIKind = PIKind.STOCHASTIC
+    value_key: str | None = None     # which user-supplied value feeds this PI
+    const_value: float | None = None  # for CONSTANT streams
+    corr_group: str | None = None
+    indep_copy: int = 0
+    row: int = ALL_ROWS
+
+
+@dataclasses.dataclass(frozen=True)
+class Gate:
+    gid: int
+    gtype: str
+    inputs: tuple[str, ...]
+    output: str
+    row: int = ALL_ROWS
+
+    def __post_init__(self):
+        if self.gtype not in GATE_ARITY:
+            raise ValueError(f"unsupported gate type {self.gtype}")
+        if len(self.inputs) != GATE_ARITY[self.gtype]:
+            raise ValueError(f"{self.gtype} expects {GATE_ARITY[self.gtype]} inputs, got {len(self.inputs)}")
+
+
+class Netlist:
+    """A DAG of gates over named nodes, with sequential-state support.
+
+    Sequential circuits (the Gaines divider, Fig. 5(d)) declare STATE primary
+    inputs and bind them to an output node via ``bind_state``; the executor
+    iterates the combinational core over bitstream bits (a wavefront across
+    subarrays in the Stoch-IMC architecture, DESIGN.md §7(d)).
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self.pis: list[PrimaryInput] = []
+        self.gates: list[Gate] = []
+        self.outputs: list[str] = []
+        self.state_bindings: dict[str, tuple[str, float]] = {}  # state PI -> (driving node, init value)
+        self._node_driver: dict[str, int] = {}
+        self._gid = 0
+
+    # -- construction -----------------------------------------------------------
+    def add_pi(self, name: str, **kw) -> str:
+        if name in self._node_driver or any(p.name == name for p in self.pis):
+            raise ValueError(f"duplicate node {name}")
+        self.pis.append(PrimaryInput(name=name, **kw))
+        return name
+
+    def add_gate(self, gtype: str, inputs: Sequence[str], output: str, row: int = ALL_ROWS) -> str:
+        if output in self._node_driver or any(p.name == output for p in self.pis):
+            raise ValueError(f"duplicate node {output}")
+        g = Gate(self._gid, gtype, tuple(inputs), output, row)
+        self.gates.append(g)
+        self._node_driver[output] = g.gid
+        self._gid += 1
+        return output
+
+    def bind_state(self, state_pi: str, driving_node: str, init: float = 0.0) -> None:
+        self.state_bindings[state_pi] = (driving_node, init)
+
+    def set_outputs(self, names: Iterable[str]) -> None:
+        self.outputs = list(names)
+
+    # -- queries ----------------------------------------------------------------
+    @property
+    def is_sequential(self) -> bool:
+        return bool(self.state_bindings)
+
+    def pi_names(self) -> list[str]:
+        return [p.name for p in self.pis]
+
+    def node_names(self) -> list[str]:
+        return self.pi_names() + [g.output for g in self.gates]
+
+    def gate_counts(self) -> dict[str, int]:
+        counts: dict[str, int] = defaultdict(int)
+        for g in self.gates:
+            counts[g.gtype] += 1
+        return dict(counts)
+
+    def topological_layers(self) -> list[list[Gate]]:
+        """Longest-path layering (Algorithm 1 lines 1-2)."""
+        level: dict[str, int] = {p.name: 0 for p in self.pis}
+        layers: dict[int, list[Gate]] = defaultdict(list)
+        remaining = list(self.gates)
+        # Gates are appended in construction (topological) order, so one pass
+        # suffices; assert to catch misuse.
+        for g in remaining:
+            try:
+                lvl = 1 + max(level[i] for i in g.inputs)
+            except KeyError as e:
+                raise ValueError(f"gate {g.gid} input {e} undefined before use") from e
+            level[g.output] = lvl
+            layers[lvl].append(g)
+        return [layers[k] for k in sorted(layers)]
+
+    def inverse_topological_order(self) -> dict[int, int]:
+        """Distance of each gate to the primary outputs (Algorithm 1 line 12)."""
+        consumers: dict[str, list[Gate]] = defaultdict(list)
+        for g in self.gates:
+            for i in g.inputs:
+                consumers[i].append(g)
+        dist: dict[int, int] = {}
+        for g in reversed(self.gates):
+            ds = [dist[c.gid] + 1 for c in consumers[g.output]]
+            dist[g.gid] = max(ds) if ds else 0
+        return dist
+
+    def validate(self) -> None:
+        for g in self.gates:
+            defined = set(self.pi_names()) | {h.output for h in self.gates if h.gid < g.gid}
+            for i in g.inputs:
+                if i not in defined:
+                    raise ValueError(f"gate {g.gid}:{g.gtype} uses undefined node {i}")
+        for s, (drv, _) in self.state_bindings.items():
+            if s not in self.pi_names():
+                raise ValueError(f"state {s} is not a PI")
+            if drv not in self.node_names():
+                raise ValueError(f"state driver {drv} undefined")
+
+
+def restrict_to_reliable(net: Netlist) -> None:
+    """Assert a Stoch-IMC netlist uses only the high-reliability gate subset."""
+    bad = [g.gtype for g in net.gates if g.gtype not in RELIABLE_GATES]
+    if bad:
+        raise ValueError(f"netlist {net.name} uses non-reliable gates: {sorted(set(bad))}")

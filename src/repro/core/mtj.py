@@ -1,0 +1,136 @@
+"""MTJ device model for STT-MRAM stochastic switching (paper Eqs. (1)-(2)).
+
+The MTJ switching probability under a voltage pulse of amplitude ``V_p`` and
+duration ``t_p`` follows the thermally-activated model
+
+    P_sw = 1 - exp(-t_p / tau)                      (1)
+    tau  = tau_0 * exp(Delta * (1 - V_p / V_c0))    (2)
+
+Constants are calibrated to the paper's Fig. 3 anchor point: a 310 mV / 4 ns
+pulse switches with probability ~0.7.  Table 1 provides the cell parameters
+(R_P = 12.7 kOhm, R_AP = 76.3 kOhm, I_c = 0.79 uA, t_switch = 1 ns).
+
+The Binary-to-Stochastic (BtoS) LUT of the Stoch-IMC architecture maps a
+binary input value to the (V_p, t_p) pulse pair that yields the desired
+switching probability at minimum write energy E = V_p^2 * t_p / R_MTJ
+(energy-optimal pulse selection per Section 5-1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import lru_cache
+
+import numpy as np
+
+# --- Table 1 physical parameters -------------------------------------------------
+R_P_OHM = 12.7e3        # parallel (logic '0') resistance
+R_AP_OHM = 76.3e3       # anti-parallel (logic '1') resistance
+I_C_A = 0.79e-6         # critical switching current
+T_SWITCH_S = 1e-9       # deterministic switching time
+TMR = 5.0               # tunneling magnetoresistance ratio (500%)
+
+# --- Eq. (1)-(2) constants, calibrated to Fig. 3 (310mV, 4ns -> P_sw ~ 0.7) -------
+DELTA = 40.0            # thermal stability factor
+V_C0_V = 0.32           # critical switching voltage at 0K
+TAU_0_S = 1e-9          # thermal attempt time
+
+# Pulse-duration sweep range shown in Fig. 3.
+T_P_MIN_S = 3e-9
+T_P_MAX_S = 10e-9
+
+
+def tau(v_p: float) -> float:
+    """Thermal activation time constant, Eq. (2)."""
+    return TAU_0_S * math.exp(DELTA * (1.0 - v_p / V_C0_V))
+
+
+def switching_probability(v_p: float, t_p: float) -> float:
+    """P_sw(V_p, t_p), Eq. (1)."""
+    return 1.0 - math.exp(-t_p / tau(v_p))
+
+
+def pulse_voltage_for(p_sw: float, t_p: float) -> float:
+    """Invert Eqs. (1)-(2): the V_p achieving ``p_sw`` for a given ``t_p``."""
+    p_sw = min(max(p_sw, 1e-12), 1.0 - 1e-12)
+    tau_needed = -t_p / math.log1p(-p_sw)
+    return V_C0_V * (1.0 - math.log(tau_needed / TAU_0_S) / DELTA)
+
+
+# Calibration of the analytic pulse energy to the paper's SPICE scale.
+# The raw V^2 t / R estimate (~tens of fJ for a 0.3 V / 4-10 ns pulse across
+# 12.7 kOhm) sits ~3 orders above the paper's SPICE-extracted per-op energies
+# (PRESET = 26.1 aJ -- and a preset *is* a deterministic write).  SPICE
+# accounts for the actual switching-current path and pulse shaping that the
+# analytic formula ignores, so we keep the formula's *relative* shape over
+# (V_p, t_p) and normalize its absolute scale so a deterministic write
+# (P_sw = 0.999) costs the paper's preset energy.
+_PRESET_E_J = 26.1e-18
+
+
+def _raw_energy(v_p: float, t_p: float, r_mtj: float = R_P_OHM) -> float:
+    return v_p * v_p * t_p / r_mtj
+
+
+def _write_cal() -> float:
+    t_ref = T_P_MAX_S
+    v_ref = pulse_voltage_for(0.999, t_ref)
+    return _PRESET_E_J / _raw_energy(v_ref, t_ref)
+
+
+def write_energy(v_p: float, t_p: float, r_mtj: float = R_P_OHM) -> float:
+    """Joule energy of one stochastic write pulse: E = V^2 t / R (Section 5-1),
+    normalized to the paper's SPICE energy scale (see _write_cal)."""
+    return _raw_energy(v_p, t_p, r_mtj) * _write_cal()
+
+
+@dataclasses.dataclass(frozen=True)
+class PulseSpec:
+    """One BtoS LUT entry: the pulse realizing probability ``p_sw``."""
+
+    p_sw: float
+    v_p: float
+    t_p: float
+    energy_j: float
+
+
+def optimal_pulse(p_sw: float, n_grid: int = 64) -> PulseSpec:
+    """Energy-optimal (V_p, t_p) pair for the target probability.
+
+    Longer pulses admit lower voltages; energy V^2 t / R trades quadratically
+    against linearly, so we sweep t_p over the Fig. 3 range and keep the min.
+    """
+    if p_sw <= 0.0:
+        return PulseSpec(0.0, 0.0, 0.0, 0.0)
+    best = None
+    for t_p in np.linspace(T_P_MIN_S, T_P_MAX_S, n_grid):
+        v_p = pulse_voltage_for(p_sw, float(t_p))
+        if v_p <= 0.0:
+            continue
+        e = write_energy(v_p, float(t_p))
+        if best is None or e < best.energy_j:
+            best = PulseSpec(p_sw, v_p, float(t_p), e)
+    assert best is not None
+    return best
+
+
+@lru_cache(maxsize=8)
+def btos_lut(resolution_bits: int = 8) -> tuple[PulseSpec, ...]:
+    """The 2^resolution-entry BtoS memory (Section 4-3).
+
+    Entry ``k`` holds the pulse pair that writes a preset-'0' cell to '1'
+    with probability k / 2^resolution.  For 8-bit resolution this is the
+    256-byte BtoS memory of Fig. 8.
+    """
+    n = 1 << resolution_bits
+    return tuple(optimal_pulse(k / n) for k in range(n))
+
+
+def sbg_energy(p_sw: float = 0.5) -> float:
+    """Energy of one stochastic bit generation (E_SBG in Eq. (4))."""
+    return optimal_pulse(p_sw).energy_j
+
+
+def lut_size_bytes(resolution_bits: int = 8) -> int:
+    """BtoS memory footprint: 2^resolution bytes (paper: 256 B at 8-bit)."""
+    return 1 << resolution_bits

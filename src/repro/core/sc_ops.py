@@ -1,0 +1,106 @@
+"""Functional stochastic arithmetic on packed bitstreams (vectorized).
+
+These are the value-level semantics of the Fig. 5 circuits, operating on
+packed uint32 bitstream tensors of shape ``batch_shape + (BL//32,)``.  They
+are used by the application accuracy path (apps.py), as the oracle for the
+Pallas kernels (kernels/ref.py) and for property tests.  The netlist forms
+(circuits.py) carry the cycle/energy/area accounting.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import bitstream as bs
+
+
+def multiply(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Fig. 4(b): independent streams, value = p_a * p_b."""
+    return a & b
+
+
+def scaled_add(a: jax.Array, b: jax.Array, sel: jax.Array) -> jax.Array:
+    """Fig. 4(a): value = s*p_a + (1-s)*p_b with an independent select stream."""
+    return (a & sel) | (b & ~sel)
+
+
+def abs_sub(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Fig. 4(c): value = |p_a - p_b| — requires *correlated* inputs."""
+    return a ^ b
+
+
+@partial(jax.jit, static_argnames=("bitstream_length", "warmup"))
+def scaled_div(a: jax.Array, b: jax.Array, bitstream_length: int,
+               warmup: bool = False) -> jax.Array:
+    """Fig. 4(d)/5(d): Gaines JK feedback divider, E[Q] -> p_a / (p_a + p_b).
+
+    Sequential over bitstream bits (Q init 0 per the paper): unpack, scan,
+    repack.  In Stoch-IMC this executes as a wavefront across subarrays.
+
+    ``warmup=True`` models the *streaming* steady state: in the architecture
+    the Q cells persist across evaluations, so the divider does not restart
+    from Q=0 for every input window.  We cycle the input streams once before
+    counting, which removes the geometric warm-up bias of a cold start.
+    """
+    bits_a = bs.unpack_bits(a)          # (..., W, 32)
+    bits_b = bs.unpack_bits(b)
+    sh = bits_a.shape
+    ta = jnp.moveaxis(bits_a.reshape(sh[:-2] + (sh[-2] * 32,)), -1, 0)  # (BL, ...)
+    tb = jnp.moveaxis(bits_b.reshape(sh[:-2] + (sh[-2] * 32,)), -1, 0)
+    if warmup:
+        ta = jnp.concatenate([ta, ta], axis=0)
+        tb = jnp.concatenate([tb, tb], axis=0)
+
+    def step(q, ab):
+        abit, bbit = ab
+        qn = (abit & (1 - q)) | ((1 - bbit) & q)
+        return qn, q  # Q is emitted *before* update (Q init 0, per paper)
+
+    q0 = jnp.zeros(ta.shape[1:], dtype=ta.dtype)
+    _, qs = jax.lax.scan(step, q0, (ta, tb))
+    if warmup:
+        qs = qs[bitstream_length:]
+    qs = jnp.moveaxis(qs, 0, -1).reshape(sh)
+    return bs.pack_bits(qs)
+
+
+def sqrt_comb(a1: jax.Array, a2: jax.Array, c1: jax.Array, c2: jax.Array) -> jax.Array:
+    """Fig. 5(e) reconstruction: NAND(NAND(A1,C1), NAND(A2,C2)) = 1-(1-cx)^2.
+
+    a1/a2 are independent streams of the same value; c1/c2 constant streams
+    (value SQRT_C).  See circuits.sc_sqrt for accuracy caveats.
+    """
+    return ~(~(a1 & c1) & ~(a2 & c2))
+
+
+def exp_neg(a_copies: list[jax.Array], c: float, key: jax.Array,
+            bitstream_length: int) -> jax.Array:
+    """Fig. 5(f): exp(-c x) via 5th-order Maclaurin Horner ladder.
+
+    ``a_copies`` are ``order`` independently-generated streams of x.
+    """
+    order = len(a_copies)
+    keys = jax.random.split(key, order)
+    shape = a_copies[0].shape[:-1]
+    s = None
+    for k in range(order, 0, -1):
+        ck = bs.generate(keys[k - 1], jnp.full(shape, c / k, jnp.float32),
+                         bitstream_length)
+        t = a_copies[k - 1] & ck
+        s = ~t if s is None else ~(t & s)
+    return s
+
+
+def flip_bits(key: jax.Array, words: jax.Array, rate: float) -> jax.Array:
+    """Inject bitflips: each bit flips independently with probability ``rate``.
+
+    Models soft errors / MTJ read-write-compute disturbs (Table 4).
+    """
+    if rate <= 0.0:
+        return words
+    u = jax.random.bits(key, shape=words.shape + (bs.WORD_BITS,), dtype=jnp.uint32)
+    thresh = jnp.uint32(min(round(rate * 4294967296.0), 4294967295))
+    mask = bs.pack_bits((u < thresh).astype(jnp.uint32))
+    return words ^ mask

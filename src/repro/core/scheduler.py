@@ -1,0 +1,282 @@
+"""Algorithm 1 — in-memory co-scheduling and mapping for the 2T-1MTJ method.
+
+Reproduces the paper's scheduling/mapping heuristic with the hardware validity
+rules implied by the worked examples of Fig. 7 (derivation in DESIGN.md §7):
+
+* **one logic operation per row per cycle** — the row's logic line (LL) drives
+  one intra-row current path at a time.  A SIMD gate (ALL_ROWS node span —
+  e.g. every bit of a stochastic stream in rows 0..q-1 of one column,
+  Fig. 7(b)) occupies *all* rows for its cycle: one V_SL drive pattern fires
+  the same gate in every row simultaneously.  That is the intra-subarray
+  parallelism Algorithm 1 exploits (and why stochastic scaled addition takes
+  4 cycles regardless of bitstream length).
+* **no shared fan-in within a cycle** — Algorithm 1's "gates must not have
+  same input": a cell can source current for only one operation per cycle.
+* a cross-row move is a BUFF via the bit lines and occupies both source and
+  target rows (the carry copies of Fig. 7(a)).  Non-BUFF gates need their
+  operands resident in their own row; the scheduler auto-inserts BUFF copies
+  (Algorithm 1 lines 15-22).
+* ready gates are prioritized by inverse topological order (distance to the
+  primary outputs — Algorithm 1 lines 12-13), then construction order.
+* every gate output is mapped to the next available column of its row
+  (Algorithm 1 line 27); PIs map one-column-each first (lines 4-8).
+
+``strict_same_type=True`` additionally forbids mixing gate types within a
+cycle — the most conservative reading of the pseudocode's "identical gate
+type" subset rule.  The default packing reproduces Fig. 7(a) exactly
+(9 cycles for the 4-bit binary ripple-carry adder, mixed-type cycles like its
+t5 = {NOT, BUFF, MAJ3}) and Fig. 7(b) (4 cycles for stochastic scaled
+addition); see tests/test_scheduler.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+from .gates import ALL_ROWS, Gate, Netlist, PIKind
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    row: int            # ALL_ROWS for SIMD nodes
+    col: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduledOp:
+    gtype: str
+    cycle: int
+    row: int                     # executing row (ALL_ROWS for SIMD)
+    src_row: int                 # != row only for cross-row BUFF moves
+    in_cols: tuple[int, ...]
+    out_col: int
+    is_copy: bool = False
+    rows_spanned: int = 1        # lanes written (SIMD gates span all lanes)
+
+
+@dataclasses.dataclass
+class Schedule:
+    """Result of Algorithm 1 plus the accounting needed by Eqs. (3)-(4)/(11)."""
+
+    netlist_name: str
+    logic_cycles: int
+    ops: list[ScheduledOp]
+    placements: dict[str, Placement]
+    n_lanes: int                      # SIMD lane count (Algorithm 1's q)
+    n_rows: int                       # rows actually used
+    n_cols: int                       # columns actually used (max over rows)
+    n_copies: int                     # auto-inserted BUFF copies
+    cells_used: int                   # distinct (row, col) cells occupied
+    gate_exec_counts: dict[str, int]  # per gate type, x lanes (for Eq. (4))
+    preset_count: int                 # output-cell presets, x lanes
+    input_cells: int                  # PI cells (x lanes)
+    stochastic_input_cells: int       # subset written via SBG pulses
+    cell_writes: int                  # total cell write events (Eq. (11))
+
+    def total_cycles(self, init_cycles: int = 0) -> int:
+        # Output-cell presets overlap with consecutive logic ops except the
+        # first one (Section 5.3.2 accounting).
+        return self.logic_cycles + 1 + init_cycles
+
+
+class _Row:
+    __slots__ = ("next_col",)
+
+    def __init__(self) -> None:
+        self.next_col = 0
+
+
+def schedule(net: Netlist, n_lanes: int = 1, strict_same_type: bool = False,
+             r_available: int = 256, c_available: int = 256) -> Schedule:
+    """Run Algorithm 1 on ``net``.
+
+    ``n_lanes`` = rows spanned by each ALL_ROWS (SIMD) node: sub-bitstream
+    bits and/or batched circuit instances (Algorithm 1's ``q``).  Row-local
+    nodes (binary bit lanes) use their declared row index.
+    """
+    net.validate()
+    inv_topo = net.inverse_topological_order()
+
+    placements: dict[str, Placement] = {}
+    rows: dict[int, _Row] = defaultdict(_Row)
+    explicit_rows = [p.row for p in net.pis if p.row != ALL_ROWS] + \
+                    [g.row for g in net.gates if g.row != ALL_ROWS]
+    max_explicit = max(explicit_rows, default=-1)
+    n_rows = max(max_explicit + 1, n_lanes)
+    if n_rows > r_available:
+        raise ValueError(f"{net.name}: needs {n_rows} rows > subarray {r_available}")
+
+    def alloc_col(row: int) -> int:
+        if row == ALL_ROWS:
+            col = max((rows[r].next_col for r in range(n_rows)), default=0)
+            for r in range(n_rows):
+                rows[r].next_col = col + 1
+            return col
+        col = rows[row].next_col
+        rows[row].next_col = col + 1
+        return col
+
+    # --- PI mapping (lines 4-8) -------------------------------------------------
+    stochastic_inputs = 0
+    input_cells = 0
+    for pi in net.pis:
+        col = alloc_col(pi.row)
+        placements[pi.name] = Placement(pi.row, col)
+        span = n_lanes if pi.row == ALL_ROWS else 1
+        input_cells += span
+        if pi.kind in (PIKind.STOCHASTIC, PIKind.CONSTANT, PIKind.STATE):
+            stochastic_inputs += span
+
+    # --- list scheduling ---------------------------------------------------------
+    pending: list[Gate] = list(net.gates)
+    done: set[str] = {p.name for p in net.pis}
+    ops: list[ScheduledOp] = []
+    gate_exec_counts: dict[str, int] = defaultdict(int)
+    copies: dict[tuple[str, int], Placement] = {}  # (node, row) -> copy placement
+    n_copies = 0
+    cycle = 0
+    cell_writes = input_cells
+    preset_count = 0
+
+    def lanes_of(row: int) -> int:
+        return n_lanes if row == ALL_ROWS else 1
+
+    def resolved(name: str, target_row: int) -> Placement | None:
+        p = placements[name]
+        if p.row == ALL_ROWS or p.row == target_row or target_row == ALL_ROWS:
+            return p
+        return copies.get((name, target_row))
+
+    while pending:
+        cycle += 1
+        busy_rows: set[int] = set()
+        fanin_used: set[str] = set()
+        types_used: set[str] = set()
+        progressed = False
+
+        def rows_free(needed: set[int]) -> bool:
+            if ALL_ROWS in needed:
+                return not busy_rows
+            return ALL_ROWS not in busy_rows and not (needed & busy_rows)
+
+        def type_ok(gtype: str) -> bool:
+            return not strict_same_type or not types_used or types_used == {gtype}
+
+        def commit(gtype: str, row: int, src_row: int, in_cols: tuple[int, ...],
+                   out_col: int, in_nodes: tuple[str, ...], is_copy: bool) -> None:
+            nonlocal n_copies, cell_writes, preset_count, progressed
+            span = lanes_of(row)
+            ops.append(ScheduledOp(gtype, cycle, row, src_row, in_cols, out_col,
+                                   is_copy, span))
+            needed = {row} if row == src_row else {row, src_row}
+            busy_rows.update(needed if ALL_ROWS not in needed else {ALL_ROWS})
+            fanin_used.update(in_nodes)
+            types_used.add(gtype)
+            gate_exec_counts[gtype] += span
+            preset_count += span
+            cell_writes += 2 * span  # output preset + logic-result write
+            if is_copy:
+                n_copies += 1
+            progressed = True
+
+        ready = [g for g in pending if all(i in done for i in g.inputs)]
+        ready.sort(key=lambda g: (-inv_topo[g.gid], g.gid))
+
+        for g in ready:
+            target = g.row
+            miss: str | None = None
+            places: list[Placement] = []
+            for name in g.inputs:
+                p = resolved(name, target)
+                if p is None:
+                    miss = name
+                    break
+                places.append(p)
+
+            if miss is not None:
+                src = placements[miss]
+                if g.gtype == "BUFF":
+                    # The gate itself is the cross-row mover (Fig. 7(a) carries).
+                    needed = {target, src.row} if src.row != ALL_ROWS else {target}
+                    if rows_free(needed) and miss not in fanin_used and type_ok("BUFF"):
+                        out_col = alloc_col(target)
+                        placements[g.output] = Placement(target, out_col)
+                        commit("BUFF", target, src.row, (src.col,), out_col,
+                               (miss,), False)
+                        pending.remove(g)
+                        done.add(g.output)
+                    continue
+                # Auto-insert a copy (Algorithm 1 lines 16-21).
+                needed = {target, src.row} if src.row != ALL_ROWS else {target}
+                if rows_free(needed) and miss not in fanin_used and type_ok("BUFF"):
+                    out_col = alloc_col(target)
+                    copies[(miss, target)] = Placement(target, out_col)
+                    commit("BUFF", target, src.row, (src.col,), out_col,
+                           (miss,), True)
+                continue
+
+            needed = {target}
+            if not rows_free(needed):
+                continue
+            if any(name in fanin_used for name in g.inputs):
+                continue
+            if not type_ok(g.gtype):
+                continue
+            in_cols = tuple(p.col for p in places)
+            out_col = alloc_col(target)
+            placements[g.output] = Placement(target, out_col)
+            commit(g.gtype, target, target, in_cols, out_col, tuple(g.inputs), False)
+            pending.remove(g)
+            done.add(g.output)
+
+        if not progressed:
+            raise RuntimeError(f"scheduler deadlock in {net.name} at cycle {cycle}")
+
+    n_cols = max((rows[r].next_col for r in rows), default=0)
+    if n_cols > c_available:
+        raise ValueError(f"{net.name}: needs {n_cols} cols > subarray {c_available}")
+    # Cells: each row index holds one cell per column its allocator issued;
+    # SIMD lanes were materialized as rows 0..n_lanes-1, so the per-row sum
+    # is exact for both row-local and SIMD nodes.
+    cells_used = sum((rows[r].next_col if r in rows else 0) for r in range(n_rows))
+
+    return Schedule(
+        netlist_name=net.name,
+        logic_cycles=cycle,
+        ops=ops,
+        placements=placements,
+        n_lanes=n_lanes,
+        n_rows=n_rows,
+        n_cols=n_cols,
+        n_copies=n_copies,
+        cells_used=cells_used,
+        gate_exec_counts=dict(gate_exec_counts),
+        preset_count=preset_count,
+        input_cells=input_cells,
+        stochastic_input_cells=stochastic_inputs,
+        cell_writes=cell_writes,
+    )
+
+
+def input_init_cycles(net: Netlist) -> int:
+    """Cycles for the input-initialization step (DESIGN.md §7 accounting).
+
+    SIMD (ALL_ROWS) stochastic/constant streams: 1 preset + 1 SBG pulse —
+    all rows of a PI column share the pulse amplitude (fused in-memory SNG).
+    Row-local stochastic PIs (instance-per-row app netlists): different
+    values per row serialize on the word lines — 1 preset + one SBG cycle
+    per occupied row (all columns of a row pulse together).
+    Binary operands: 1 preset + one write cycle per occupied row.
+    """
+    stoch_kinds = {PIKind.STOCHASTIC, PIKind.CONSTANT, PIKind.STATE}
+    simd_stoch = any(p.kind in stoch_kinds and p.row == ALL_ROWS
+                     for p in net.pis)
+    local_rows = {p.row for p in net.pis
+                  if p.kind in stoch_kinds and p.row != ALL_ROWS}
+    cycles = 0
+    if simd_stoch or local_rows:
+        cycles = 1 + (1 if simd_stoch else 0) + len(local_rows)
+    if any(p.kind == PIKind.BINARY for p in net.pis):
+        rows = {p.row for p in net.pis if p.kind == PIKind.BINARY}
+        cycles += 1 + max(len(rows), 1)
+    return cycles

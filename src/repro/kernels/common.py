@@ -1,0 +1,51 @@
+"""Shared kernel utilities: in-kernel counter-based RNG and packing.
+
+The MTJ's intrinsic stochastic switching generates bitstream bits *in place*,
+fused with computation (paper Section 4-1).  The TPU analogue is a
+counter-based hash RNG evaluated inside the kernel (VMEM-resident, no HBM
+traffic for randomness).  We use the murmur3/splitmix finalizer — statistical
+quality is ample for SC (independence across counters is what matters), and
+keeping it in plain jnp means the Pallas kernel and the ref.py oracle compute
+*bit-identical* streams, enabling exact equality tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+
+def hash_u32(x: jax.Array) -> jax.Array:
+    """Murmur3 finalizer: uint32 -> well-mixed uint32."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def threshold_u32(p: jax.Array) -> jax.Array:
+    """Probability in [0,1] -> uint32 compare threshold (the BtoS LUT analogue)."""
+    scaled = jnp.round(jnp.clip(p, 0.0, 1.0).astype(jnp.float32) * 4294967296.0)
+    return jnp.minimum(scaled, 4294967295.0).astype(jnp.uint32)
+
+
+def gen_packed_bits(seed: jax.Array, base_index: jax.Array, p: jax.Array) -> jax.Array:
+    """Generate one packed uint32 word of Bernoulli(p) bits per element.
+
+    ``base_index``: uint32 tensor of *bit-space* base counters (flat element
+    index * 32), broadcastable against ``p``.  Bit ``t`` of the output word is
+    1 with probability ``p``, independently across (seed, counter) pairs.
+    """
+    lanes = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    ctr = base_index[..., None] + lanes          # (..., 32)
+    r = hash_u32(ctr ^ hash_u32(seed.astype(jnp.uint32)))
+    bits = (r < threshold_u32(p)[..., None]).astype(jnp.uint32)
+    return jnp.sum(bits << lanes, axis=-1, dtype=jnp.uint32)
+
+
+def popcount(words: jax.Array) -> jax.Array:
+    return jax.lax.population_count(words).astype(jnp.int32)

@@ -1,0 +1,79 @@
+"""Pallas kernel: bit-parallel packed logic over uint32 bitstream words.
+
+TPU mapping of the paper's intra-subarray SIMD gate execution: one VPU
+bitwise op processes a whole VMEM tile = (rows x words x 32) bitstream bits —
+the "subarray" of DESIGN.md §2.  The MUX (scaled addition) fuses 4 gates
+(NOT + 2xNAND + NAND) into one pass, where the 2T-1MTJ method takes 4 cycles;
+fusion is the beyond-paper win available on TPU (no per-gate cell writes).
+
+Block shapes: (BM, BW) words; BM a multiple of 8 rows, BW a multiple of 128
+lanes to match the (8, 128) vreg tiling for 32-bit types.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_OPS1 = {"not"}
+_OPS2 = {"and", "nand", "or", "nor", "xor"}
+_OPS3 = {"mux"}
+
+
+def _kernel1(op, a_ref, o_ref):
+    a = a_ref[...]
+    o_ref[...] = ~a
+
+
+def _kernel2(op, a_ref, b_ref, o_ref):
+    a, b = a_ref[...], b_ref[...]
+    if op == "and":
+        o_ref[...] = a & b
+    elif op == "nand":
+        o_ref[...] = ~(a & b)
+    elif op == "or":
+        o_ref[...] = a | b
+    elif op == "nor":
+        o_ref[...] = ~(a | b)
+    elif op == "xor":
+        o_ref[...] = a ^ b
+
+
+def _kernel3(op, a_ref, b_ref, s_ref, o_ref):
+    a, b, s = a_ref[...], b_ref[...], s_ref[...]
+    o_ref[...] = (a & s) | (b & ~s)  # fused scaled addition
+
+
+@functools.partial(jax.jit, static_argnames=("op", "block_rows", "block_words",
+                                             "interpret"))
+def packed_logic(op: str, *args: jax.Array, block_rows: int = 8,
+                 block_words: int = 128, interpret: bool = True) -> jax.Array:
+    """Apply a packed logic op over (rows, words) uint32 tensors."""
+    a = args[0]
+    rows, words = a.shape
+    bm = min(block_rows, rows)
+    bw = min(block_words, words)
+    grid = (pl.cdiv(rows, bm), pl.cdiv(words, bw))
+    spec = pl.BlockSpec((bm, bw), lambda i, j: (i, j))
+
+    if op in _OPS1:
+        kernel, n_in = functools.partial(_kernel1, op), 1
+    elif op in _OPS2:
+        kernel, n_in = functools.partial(_kernel2, op), 2
+    elif op in _OPS3:
+        kernel, n_in = functools.partial(_kernel3, op), 3
+    else:
+        raise ValueError(op)
+    if len(args) != n_in:
+        raise ValueError(f"{op} expects {n_in} operands")
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec] * n_in,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, words), jnp.uint32),
+        interpret=interpret,
+    )(*args)

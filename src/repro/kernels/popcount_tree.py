@@ -1,0 +1,51 @@
+"""Pallas kernel: hierarchical StoB popcount (the accumulator tree of Fig. 8).
+
+Stochastic-to-binary conversion counts the ones of each output bitstream.
+Stoch-IMC does this hierarchically: m local accumulators per group feed one
+global accumulator — n+m steps instead of n*m.  The TPU mapping: per-word
+``lax.population_count`` (the local accumulator: 32 bits folded at once),
+an in-tile sum over a word group, then a cross-tile accumulation over the
+word-block grid axis (the global accumulator).
+
+Grid: (row_blocks, word_blocks); the word-block axis accumulates into the
+same output block (revisiting pattern), mirroring group-by-group global
+accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, o_ref):
+    w = pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    words = a_ref[...]                                   # (bm, bw) uint32
+    local = jax.lax.population_count(words).astype(jnp.int32)
+    o_ref[...] += local.sum(axis=1)                      # global accumulate
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_words",
+                                             "interpret"))
+def popcount_hier(words: jax.Array, block_rows: int = 8, block_words: int = 128,
+                  interpret: bool = True) -> jax.Array:
+    """(N, W) packed uint32 -> (N,) int32 set-bit counts."""
+    n, w = words.shape
+    bm = min(block_rows, n)
+    bw = min(block_words, w)
+    grid = (pl.cdiv(n, bm), pl.cdiv(w, bw))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bw), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(words)

@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-identical RNG).
+
+Each function mirrors the corresponding kernel's semantics exactly — same
+counter-based RNG, same accumulation order class — so tests can assert exact
+equality in interpret mode and tight statistical agreement against the
+float-exact result.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import WORD_BITS, gen_packed_bits, popcount
+
+
+def sc_eltwise_ref(op: str, *args: jax.Array) -> jax.Array:
+    """Packed bitwise gate ops over uint32 words."""
+    a = args[0]
+    if op == "not":
+        return ~a
+    b = args[1]
+    if op == "and":
+        return a & b
+    if op == "nand":
+        return ~(a & b)
+    if op == "or":
+        return a | b
+    if op == "nor":
+        return ~(a | b)
+    if op == "xor":
+        return a ^ b
+    if op == "mux":
+        s = args[2]
+        return (a & s) | (b & ~s)
+    raise ValueError(op)
+
+
+def popcount_hier_ref(words: jax.Array, group: int) -> jax.Array:
+    """Hierarchical StoB popcount: (N, W) packed -> (N,) int32 counts.
+
+    Sums per-word popcounts in two levels (groups of ``group`` words, then
+    across groups) — the local/global accumulator structure of Fig. 8.  The
+    result is exact regardless of grouping.
+    """
+    n, w = words.shape
+    pad = (-w) % group
+    padded = jnp.pad(words, ((0, 0), (0, pad)))
+    per_word = popcount(padded).reshape(n, -1, group)
+    local = per_word.sum(axis=-1)          # local accumulators (per group)
+    return local.sum(axis=-1)              # global accumulator
+
+
+def sc_matmul_ref(a: jax.Array, w: jax.Array, bitstream_length: int,
+                  seed: int = 0) -> jax.Array:
+    """SC matrix multiply oracle: popcount(AND) over on-the-fly bitstreams.
+
+    a: (M, K) in [0,1];  w: (K, N) in [0,1];  result approximates a @ w with
+    per-product Bernoulli sampling noise of variance p(1-p)/BL.
+
+    Bit t of the stream for a[m, k] uses counter (m*K + k)*BL + t with seed
+    ``seed``; w[k, n] uses counter (k*N + n)*BL + t with seed ``seed+1`` —
+    identical to the kernel, so kernel output == ref output bit-for-bit.
+    """
+    m_dim, k_dim = a.shape
+    _, n_dim = w.shape
+    n_words = bitstream_length // WORD_BITS
+    seed_a = jnp.uint32(seed)
+    seed_w = jnp.uint32(seed + 1)
+
+    out = jnp.zeros((m_dim, n_dim), jnp.int32)
+    for wi in range(n_words):
+        a_idx = ((jnp.arange(m_dim)[:, None] * k_dim + jnp.arange(k_dim)[None, :])
+                 .astype(jnp.uint32) * jnp.uint32(bitstream_length)
+                 + jnp.uint32(wi * WORD_BITS))
+        w_idx = ((jnp.arange(k_dim)[:, None] * n_dim + jnp.arange(n_dim)[None, :])
+                 .astype(jnp.uint32) * jnp.uint32(bitstream_length)
+                 + jnp.uint32(wi * WORD_BITS))
+        a_bits = gen_packed_bits(seed_a, a_idx, a)          # (M, K) uint32
+        w_bits = gen_packed_bits(seed_w, w_idx, w)          # (K, N) uint32
+        anded = a_bits[:, :, None] & w_bits[None, :, :]     # (M, K, N)
+        out = out + popcount(anded).sum(axis=1)
+    return out.astype(jnp.float32) / jnp.float32(bitstream_length)
+
+
+def sng_pack_ref(p: jax.Array, bitstream_length: int, seed: int = 0) -> jax.Array:
+    """Stochastic number generation oracle: p (...,) -> packed (..., BL//32)."""
+    n_words = bitstream_length // WORD_BITS
+    flat = p.reshape(-1)
+    idx = (jnp.arange(flat.shape[0], dtype=jnp.uint32)[:, None]
+           * jnp.uint32(bitstream_length)
+           + (jnp.arange(n_words, dtype=jnp.uint32) * WORD_BITS)[None, :])
+    words = gen_packed_bits(jnp.uint32(seed), idx, flat[:, None])
+    return words.reshape(p.shape + (n_words,))

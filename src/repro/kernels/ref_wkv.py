@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the WKV kernel (same chunk order as the kernel)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, log_w, u, chunk: int = 32) -> jax.Array:
+    """Reference chunked WKV: r/k/v/log_w (B,S,H,hd) fp32, u (H,hd)."""
+    b, s, h, hd = r.shape
+    assert s % chunk == 0
+    nc = s // chunk
+
+    def resh(t):
+        return (t.astype(jnp.float32).transpose(0, 2, 1, 3)
+                .reshape(b * h, nc, chunk, hd))
+
+    r_, k_, v_, lw = resh(r), resh(k), resh(v), resh(log_w)
+    u_ = jnp.broadcast_to(u.astype(jnp.float32)[None], (b, h, hd)
+                          ).reshape(b * h, hd)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+
+    big_l = jnp.cumsum(lw, axis=2)
+    l_prev = big_l - lw
+    q_t = r_ * jnp.exp(l_prev)
+    k_t = k_ * jnp.exp(-big_l)
+    bonus = jnp.sum(r_ * u_[:, None, None, :] * k_, axis=-1, keepdims=True) * v_
+
+    def step(state, xs):
+        q_c, kc, vc, kt_c, lC, bon = xs
+        inter = jnp.einsum("nck,nkv->ncv", q_c, state)
+        scores = jnp.einsum("nck,nsk->ncs", q_c, kt_c) * tri[None]
+        intra = jnp.einsum("ncs,nsv->ncv", scores, vc)
+        new_state = jnp.exp(lC)[:, :, None] * (
+            state + jnp.einsum("nsk,nsv->nkv", kt_c, vc))
+        return new_state, inter + intra + bon
+
+    s0 = jnp.zeros((b * h, hd, hd), jnp.float32)
+    _, outs = jax.lax.scan(
+        step, s0, (q_t.transpose(1, 0, 2, 3), k_.transpose(1, 0, 2, 3),
+                   v_.transpose(1, 0, 2, 3), k_t.transpose(1, 0, 2, 3),
+                   big_l[:, :, -1].transpose(1, 0, 2),
+                   bonus.transpose(1, 0, 2, 3)))
+    out = outs.transpose(1, 0, 2, 3).reshape(b * h, s, hd)
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,98 @@
+"""Pallas kernel: stochastic-computing matrix multiply with fused SNG.
+
+The paper's flagship integration point (DESIGN.md §2/§6): every scalar
+product a*w is estimated as popcount(AND(bits_a, bits_w)) / BL over
+Bernoulli bitstreams *generated inside the kernel* — the TPU analogue of the
+MTJ intrinsic-stochasticity SNG fused with the logic step (no separate RNG
+pass, no randomness traffic from HBM).
+
+    out[m, n] = (1/BL) * sum_k popcount(bits(a[m,k]) & bits(w[k,n]))
+    E[out] = a @ w,  Var ~ sum_k p(1-p)/BL
+
+Tiling: grid (M/bm, N/bn, K/bk); the K axis revisits the same output block
+(accumulation pattern).  Inside, a fori_loop walks the BL/32 bitstream words;
+per word, the (bm,bk)x(bk,bn) AND+popcount contraction is evaluated on the
+VPU.  Counters are derived from *global* element indices so results are
+independent of the tiling — the kernel equals ref.sc_matmul_ref bit-for-bit.
+
+Arithmetic-intensity note (recorded in EXPERIMENTS.md §Perf): on TPU this
+costs ~2*BL/32 integer ops per MAC versus 1 MXU MAC for exact matmul, so SC
+matmul is a *fault-tolerance/approximation feature*, not a speed win — the
+paper's latency win is specific to in-memory hardware where binary
+multipliers cost hundreds of array cycles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import WORD_BITS, gen_packed_bits, popcount
+
+
+def _kernel(a_ref, w_ref, o_ref, *, bl: int, bk: int, k_dim: int, n_dim: int,
+            seed: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    a = a_ref[...]                     # (bm, bk) float32 in [0,1]
+    w = w_ref[...]                     # (bk, bn) float32 in [0,1]
+    bm, _ = a.shape
+    _, bn = w.shape
+
+    # Global element indices -> bit-space counters (tiling-independent RNG).
+    gm = i * bm + jnp.arange(bm, dtype=jnp.uint32)[:, None]       # (bm, 1)
+    gk_a = kb * bk + jnp.arange(bk, dtype=jnp.uint32)[None, :]    # (1, bk)
+    gk_w = kb * bk + jnp.arange(bk, dtype=jnp.uint32)[:, None]    # (bk, 1)
+    gn = j * bn + jnp.arange(bn, dtype=jnp.uint32)[None, :]       # (1, bn)
+    a_base = (gm * jnp.uint32(k_dim) + gk_a) * jnp.uint32(bl)     # (bm, bk)
+    w_base = (gk_w * jnp.uint32(n_dim) + gn) * jnp.uint32(bl)     # (bk, bn)
+    seed_a = jnp.uint32(seed)
+    seed_w = jnp.uint32(seed + 1)
+
+    def word_step(wi, acc):
+        off = jnp.uint32(wi * WORD_BITS)
+        a_bits = gen_packed_bits(seed_a, a_base + off, a)          # (bm, bk)
+        w_bits = gen_packed_bits(seed_w, w_base + off, w)          # (bk, bn)
+        anded = a_bits[:, :, None] & w_bits[None, :, :]            # (bm,bk,bn)
+        return acc + popcount(anded).sum(axis=1)
+
+    acc = jax.lax.fori_loop(0, bl // WORD_BITS, word_step,
+                            jnp.zeros((bm, bn), jnp.int32))
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("bitstream_length", "seed", "bm",
+                                             "bn", "bk", "interpret"))
+def sc_matmul(a: jax.Array, w: jax.Array, bitstream_length: int = 256,
+              seed: int = 0, bm: int = 8, bn: int = 128, bk: int = 128,
+              interpret: bool = True) -> jax.Array:
+    """Stochastic matmul: a (M,K) x w (K,N), values in [0,1] -> float32 (M,N)."""
+    m_dim, k_dim = a.shape
+    k2, n_dim = w.shape
+    assert k_dim == k2
+    bm = min(bm, m_dim)
+    bn = min(bn, n_dim)
+    bk = min(bk, k_dim)
+    grid = (pl.cdiv(m_dim, bm), pl.cdiv(n_dim, bn), pl.cdiv(k_dim, bk))
+    kernel = functools.partial(_kernel, bl=bitstream_length, bk=bk, k_dim=k_dim,
+                               n_dim=n_dim, seed=seed)
+    counts = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.int32),
+        interpret=interpret,
+    )(a.astype(jnp.float32), w.astype(jnp.float32))
+    return counts.astype(jnp.float32) / jnp.float32(bitstream_length)

@@ -1,0 +1,45 @@
+"""Pallas kernel: stochastic number generation (the BtoS step as a kernel).
+
+Maps a tensor of probabilities to packed Bernoulli bitstreams, entirely in
+VMEM — the TPU analogue of the pulse-programmed MTJ stochastic write
+(Eqs. (1)-(2) / Fig. 8's BtoS memory).  Counters derive from global element
+indices, so output is tiling-independent and equals ref.sng_pack_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import WORD_BITS, gen_packed_bits
+
+
+def _kernel(p_ref, o_ref, *, bl: int, n_words: int, bn: int, seed: int):
+    i = pl.program_id(0)
+    p = p_ref[...]                                        # (bn,)
+    gi = i * bn + jnp.arange(bn, dtype=jnp.uint32)        # global element ids
+    base = gi[:, None] * jnp.uint32(bl) + (
+        jnp.arange(n_words, dtype=jnp.uint32) * WORD_BITS)[None, :]
+    o_ref[...] = gen_packed_bits(jnp.uint32(seed), base, p[:, None])
+
+
+@functools.partial(jax.jit, static_argnames=("bitstream_length", "seed",
+                                             "block", "interpret"))
+def sng_pack(p: jax.Array, bitstream_length: int = 256, seed: int = 0,
+             block: int = 256, interpret: bool = True) -> jax.Array:
+    """p: (N,) float in [0,1] -> (N, BL//32) packed uint32 bitstreams."""
+    n = p.shape[0]
+    n_words = bitstream_length // WORD_BITS
+    bn = min(block, n)
+    kernel = functools.partial(_kernel, bl=bitstream_length, n_words=n_words,
+                               bn=bn, seed=seed)
+    return pl.pallas_call(
+        kernel,
+        grid=(pl.cdiv(n, bn),),
+        in_specs=[pl.BlockSpec((bn,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bn, n_words), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n_words), jnp.uint32),
+        interpret=interpret,
+    )(p.astype(jnp.float32))

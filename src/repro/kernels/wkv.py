@@ -1,0 +1,86 @@
+"""Pallas kernel: chunked RWKV-6 WKV recurrence (the attn-free hot loop).
+
+    out_t = r_t · (S_{t-1} + u ⊙ k_t v_tᵀ);   S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+TPU mapping: one grid program per (batch, head); r/k/v/log_w chunks stream
+through VMEM while the (hd, hd) state lives in a VMEM scratch accumulator —
+the same state-stays-resident structure as the paper's in-memory divider
+wavefront (state cells persist across bit steps, DESIGN.md §7(d)).  Within a
+chunk the recurrence is evaluated in the cumulative-decay matrix form
+(intra-chunk attention-like matmul on the MXU + rank-C state update), so the
+sequential dependency is only chunk-to-chunk.
+
+Validated against ref.wkv_ref (same chunk order, allclose) and against the
+models/recurrent.py production path in tests/test_wkv_kernel.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, state_ref, *,
+            chunk: int, seq: int):
+    hd = r_ref.shape[-1]
+    state_ref[...] = jnp.zeros((hd, hd), jnp.float32)
+    u = u_ref[...]                                     # (hd,)
+    n_chunks = seq // chunk
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+
+    def body(ci, _):
+        sl = pl.dslice(ci * chunk, chunk)
+        r = r_ref[sl, :]                               # (C, hd)
+        k = k_ref[sl, :]
+        v = v_ref[sl, :]
+        lw = lw_ref[sl, :]
+        big_l = jnp.cumsum(lw, axis=0)                 # inclusive decay
+        l_prev = big_l - lw
+        q_t = r * jnp.exp(l_prev)
+        k_t = k * jnp.exp(-big_l)
+        s = state_ref[...]
+        inter = q_t @ s                                # (C, hd)
+        scores = (q_t @ k_t.T) * tri                   # strictly causal
+        intra = scores @ v
+        bonus = jnp.sum(r * u[None, :] * k, axis=1, keepdims=True) * v
+        o_ref[sl, :] = inter + intra + bonus
+        state_ref[...] = jnp.exp(big_l[-1])[:, None] * (s + k_t.T @ v)
+        return 0
+
+    jax.lax.fori_loop(0, n_chunks, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv(r: jax.Array, k: jax.Array, v: jax.Array, log_w: jax.Array,
+        u: jax.Array, chunk: int = 32, interpret: bool = True) -> jax.Array:
+    """r/k/v/log_w: (B, S, H, hd) fp32; u: (H, hd).  Returns (B, S, H, hd).
+
+    chunk must divide S; hd should be a multiple of 8 (vreg sublanes) and
+    ideally 128 lanes on real TPU.
+    """
+    b, s, h, hd = r.shape
+    assert s % chunk == 0, (s, chunk)
+
+    def bh(t):  # (B,S,H,hd) -> (B*H, S, hd)
+        return t.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+
+    kern = functools.partial(_kernel, chunk=chunk, seq=s)
+    spec = pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0))
+
+    out = pl.pallas_call(
+        lambda r_, k_, v_, lw_, u_, o_, st: kern(
+            r_.at[0], k_.at[0], v_.at[0], lw_.at[0], u_.at[0], o_.at[0], st),
+        grid=(b * h,),
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec((1, hd), lambda i: (i % h, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b * h, s, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(bh(r.astype(jnp.float32)), bh(k.astype(jnp.float32)),
+      bh(v.astype(jnp.float32)), bh(log_w.astype(jnp.float32)),
+      u.astype(jnp.float32))
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)

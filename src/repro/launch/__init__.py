@@ -1,0 +1,2 @@
+# Launch layer. NOTE: importing submodules here would initialize jax before
+# dryrun.py can set XLA_FLAGS — keep this package __init__ empty.

@@ -1,0 +1,370 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+Lowers + compiles every (architecture × input shape) cell against the
+production meshes — (16, 16) single-pod and (2, 16, 16) multi-pod — and
+records memory_analysis / cost_analysis / collective stats + the three
+roofline terms to JSON (EXPERIMENTS.md §Dry-run / §Roofline read from it).
+
+NOTE the two lines above MUST run before any jax import: jax locks the
+device count at first initialization.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single --out dryrun.json
+  ... --multi_pod           # 2-pod mesh
+  ... --seq_shard           # Megatron-SP activation sharding (perf lever)
+  ... --compress_bits 8     # SC gradient compression on the pod all-reduce
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro.configs import SHAPES, get_config, runnable_cells, token_specs
+from repro.data import batch_specs
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models import RunCtx, init_cache, model_params
+from repro.models.common import ModelConfig, abstract_tree
+from repro.serve import make_decode_step, make_prefill
+from repro.sharding import (cache_pspec_tree, make_rules, param_pspec_tree,
+                            validate_divisibility)
+from repro.train import make_train_step, train_state_init
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, PS) else s,
+        spec_tree, is_leaf=lambda s: isinstance(s, PS) or s is None)
+
+
+def _accum_steps(cfg: ModelConfig, seq: int, batch_local: int) -> int:
+    """Microbatch count: keep boundary activations per device under ~2 GB.
+
+    napkin: bytes ~ layers * mb * seq * d_model * 2 (bf16 boundaries under
+    scan remat).  Solve for mb.
+    """
+    budget = 2e9
+    per_row = cfg.n_layers * seq * cfg.d_model * 2
+    mb = max(int(budget // max(per_row, 1)), 1)
+    accum = max(batch_local // mb, 1)
+    while batch_local % accum:
+        accum += 1
+    return accum
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh, *, seq_shard=False,
+               compress_bits=0, accum_override=None, donate=True,
+               cast_bf16=False, decode_tp=False, zero1=False):
+    """Returns (jitted_fn, example_args) ready to .lower()."""
+    shape = SHAPES[shape_name]
+    rules = make_rules(mesh, seq_shard=seq_shard)
+    skeleton = model_params(cfg)
+    pspecs = param_pspec_tree(skeleton, rules)
+    p_shard = _named(mesh, pspecs)
+    ctx = RunCtx(mesh=mesh, act_spec=NamedSharding(mesh, rules.act_spec()),
+                 use_ep=(cfg.mlp_kind == "moe"),
+                 data_axes=rules.batch if isinstance(rules.batch, tuple)
+                 else (rules.batch,))
+    params_abs = abstract_tree(skeleton, dtype=cfg.param_dtype)
+    batch_axes = rules.batch
+    tok_specs = token_specs(cfg, shape)
+
+    n_data = 1
+    for a in (batch_axes if isinstance(batch_axes, tuple) else (batch_axes,)):
+        n_data *= mesh.shape[a]
+
+    if shape.kind == "train":
+        accum = accum_override or _accum_steps(cfg, shape.seq_len,
+                                               shape.global_batch // n_data)
+        gather_shardings = None
+        if zero1:
+            # ZeRO-1: optimizer state + master weights stay FSDP-sharded;
+            # the compute copy is gathered to TP-only sharding once per step.
+            # Selective: expert weights keep FSDP (EP already shards them over
+            # `model`; gathering their embed dim would add E*d*f/16 ~ 24 GB at
+            # llama4 scale), and if the gathered dense copy itself exceeds the
+            # HBM budget (mistral-large: 31 GB fp32 at TP16) ZeRO-1 falls back
+            # to ZeRO-3 wholesale.
+            from repro.models.common import P as Pdecl
+            tp_rules = make_rules(mesh, seq_shard=seq_shard, fsdp=False)
+            fsdp_specs = pspecs
+            tp_specs = param_pspec_tree(skeleton, tp_rules)
+            model_n = mesh.shape["model"]
+            gathered_bytes = 0.0
+            for decl in jax.tree.leaves(
+                    skeleton, is_leaf=lambda x: isinstance(x, Pdecl)):
+                if "experts" in decl.axes:
+                    continue
+                n = 1
+                for dim in decl.shape:
+                    n *= dim
+                shard_n = model_n if any(a in ("heads", "kv_heads", "mlp",
+                                               "vocab") for a in decl.axes) else 1
+                gathered_bytes += n * 4.0 / shard_n
+            if gathered_bytes < 8e9:
+                gather_specs_tree = jax.tree.map(
+                    lambda d, fs, ts: fs if "experts" in d.axes else ts,
+                    skeleton, fsdp_specs, tp_specs,
+                    is_leaf=lambda x: isinstance(x, Pdecl))
+                gather_shardings = _named(mesh, gather_specs_tree)
+            else:
+                print(f"   [zero1] gathered copy {gathered_bytes/1e9:.1f} GB "
+                      f"> budget; keeping ZeRO-3 for this arch")
+        step = make_train_step(cfg, ctx, accum_steps=accum,
+                               compress_bits=compress_bits,
+                               cast_bf16_gather=cast_bf16,
+                               gather_shardings=gather_shardings)
+        state_abs = jax.eval_shape(
+            lambda p: train_state_init(cfg, p), params_abs)
+        state_shard = type(state_abs)(
+            params=p_shard,
+            opt=type(state_abs.opt)(
+                step=NamedSharding(mesh, PS()), m=p_shard, v=p_shard),
+            rng=NamedSharding(mesh, PS()),
+            compress_err=None if state_abs.compress_err is None else p_shard)
+        bspec = {"tokens": NamedSharding(mesh, PS(batch_axes, None)),
+                 "labels": NamedSharding(mesh, PS(batch_axes, None))}
+        batch_abs = dict(batch_specs(cfg, shape.seq_len, shape.global_batch))
+        if "frames" in tok_specs:
+            batch_abs["frames"] = tok_specs["frames"]
+            bspec["frames"] = NamedSharding(mesh, PS(batch_axes, None, None))
+        fn = jax.jit(step, in_shardings=(state_shard, bspec),
+                     donate_argnums=(0,) if donate else ())
+        return fn, (state_abs, batch_abs), ctx, accum
+
+    if shape.kind == "prefill":
+        fn0 = make_prefill(cfg, ctx)
+        args = [params_abs, tok_specs["tokens"]]
+        shards = [p_shard, NamedSharding(mesh, PS(batch_axes, None))]
+        if "frames" in tok_specs:
+            args.append(tok_specs["frames"])
+            shards.append(NamedSharding(mesh, PS(batch_axes, None, None)))
+        fn = jax.jit(fn0, in_shardings=tuple(shards))
+        return fn, tuple(args), ctx, 1
+
+    # decode
+    if decode_tp:
+        # Weight-stationary 2D-TP decode: batch replicated over data, the
+        # embed dim of every weight contraction-sharded over data (psum of
+        # small activations replaces per-token weight all-gathers), serving
+        # weights in bf16 (§Perf decode lever).  The activation's d_model is
+        # ALSO sharded over data so the contraction dims line up and GSPMD
+        # partial-sums instead of gathering the weights.
+        params_abs = abstract_tree(skeleton, dtype=cfg.dtype)
+        ctx = dataclasses.replace(
+            ctx, act_spec=NamedSharding(mesh, PS(None, None, "data")))
+    cache_abs = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    cache_specs = cache_pspec_tree(cfg, cache_abs, rules, decode_tp=decode_tp)
+    cache_shard = _named(mesh, cache_specs)
+    step_fn = make_decode_step(cfg, ctx)
+    batch_shardable = shape.global_batch % n_data == 0 and not decode_tp
+    args = [params_abs, tok_specs["tokens"], tok_specs["pos"], cache_abs]
+    shards = [p_shard,
+              NamedSharding(mesh, PS(batch_axes if batch_shardable else None,
+                                     None)),
+              NamedSharding(mesh, PS()), cache_shard]
+    if "enc_out" in tok_specs:
+        args.append(tok_specs["enc_out"])
+        shards.append(NamedSharding(
+            mesh, PS(batch_axes if batch_shardable else None, None, None)))
+    fn = jax.jit(step_fn, in_shardings=tuple(shards),
+                 donate_argnums=(3,) if donate else ())
+    return fn, tuple(args), ctx, 1
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, seq_shard=False,
+             compress_bits=0, verbose=True, cast_bf16=False, decode_tp=False,
+             accum_override=None, bf16_acc=False, pad_heads=None,
+             zero1=False) -> dict:
+    from repro.models.common import set_bf16_matmul_accum
+    set_bf16_matmul_accum(bf16_acc)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    if pad_heads:
+        cfg = dataclasses.replace(cfg, pad_heads=pad_heads)
+    shape = SHAPES[shape_name]
+    t0 = time.time()
+    fn, args, ctx, accum = build_cell(cfg, shape_name, mesh,
+                                      seq_shard=seq_shard,
+                                      compress_bits=compress_bits,
+                                      cast_bf16=cast_bf16, decode_tp=decode_tp,
+                                      accum_override=accum_override,
+                                      zero1=zero1)
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    skeleton = model_params(cfg)
+    mf = rl.model_flops_for(cfg, shape.kind, shape.seq_len, shape.global_batch,
+                            skeleton)
+    n_dev = mesh.devices.size
+    ana_bytes = rl.analytic_traffic(cfg, shape.kind, shape.seq_len,
+                                    shape.global_batch, n_dev, accum, skeleton)
+    roof = rl.derive(cost, hlo, mf, n_dev, analytic_bytes=ana_bytes)
+    from repro.launch import hlo_analysis
+    totals = hlo_analysis.analyze(hlo)
+    xla_flops, xla_bytes = rl.flops_and_bytes(cost)
+    total_p, active_p = rl.param_counts(cfg, skeleton)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "accum_steps": accum,
+        "seq_shard": seq_shard, "compress_bits": compress_bits,
+        "cast_bf16": cast_bf16, "decode_tp": decode_tp, "bf16_acc": bf16_acc,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "params_total": total_p, "params_active": active_p,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                            None),
+        },
+        "xla_cost_analysis": {"flops": xla_flops, "bytes": xla_bytes,
+                              "note": "loop bodies counted once by XLA"},
+        "collectives": {"counts": totals.collective_counts,
+                        "bytes_by_kind": {k: float(v) for k, v in
+                                          totals.collective_bytes.items()},
+                        "effective_bytes": totals.effective_collective_bytes},
+        "roofline": roof.to_json(),
+        "sharding_fallbacks": validate_divisibility(
+            skeleton, make_rules(mesh, seq_shard=seq_shard)),
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} on {rec['mesh']} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"   memory_analysis: {mem}")
+        print(f"   hlo (while-aware): flops={roof.hlo_flops_per_device:.3e} "
+              f"bytes={roof.hlo_bytes_per_device:.3e} | xla cost_analysis "
+              f"(bodies once): flops={xla_flops:.3e}")
+        print(f"   collectives: {totals.collective_counts} "
+              f"eff_bytes={totals.effective_collective_bytes:.3e}")
+        print(f"   roofline: compute={roof.compute_s:.4f}s "
+              f"memory={roof.memory_s:.4f}s collective={roof.collective_s:.4f}s "
+              f"dominant={roof.dominant} frac={roof.roofline_fraction:.3f}")
+    return rec
+
+
+def pod_sync_study(arch: str, bits: int, out: str | None):
+    """§Perf cell 3: SC stochastically-quantized cross-pod parameter sync
+    (local-SGD style) vs fp32 pmean — measure HLO collective bytes on the
+    2x16x16 mesh."""
+    from repro.launch import hlo_analysis
+    from repro.optim.compress import make_pod_sync, make_pod_sync_uncompressed
+
+    mesh = make_production_mesh(multi_pod=True)
+    cfg = get_config(arch)
+    rules = make_rules(mesh)
+    # FSDP within the pod only: the pod axis syncs via the compressed path.
+    rules = dataclasses.replace(rules, rules=dict(rules.rules, embed="data"))
+    skeleton = model_params(cfg)
+    pspecs = param_pspec_tree(skeleton, rules)
+    params_abs = abstract_tree(skeleton, dtype=cfg.param_dtype)
+    flat_p = jax.tree.leaves(params_abs)
+
+    sync_c = make_pod_sync(mesh, pspecs, bits=bits)
+    sync_u = make_pod_sync_uncompressed(mesh, pspecs)
+
+    def lower_and_measure(fn, args, label):
+        t0 = time.time()
+        compiled = jax.jit(fn).lower(*args).compile()
+        totals = hlo_analysis.analyze(compiled.as_text())
+        print(f"  {label}: collectives={totals.collective_counts} "
+              f"eff_bytes={totals.effective_collective_bytes:.4e} "
+              f"(compile {time.time() - t0:.0f}s)")
+        return totals
+
+    print(f"== pod-sync study: {arch}, int{bits} + error feedback vs fp32 ==")
+    tc = lower_and_measure(lambda p, a, e: sync_c(p, a, e, 0),
+                           (params_abs, params_abs, params_abs), f"int{bits}+EF")
+    tu = lower_and_measure(sync_u, (params_abs,), "fp32 pmean")
+    ratio = tu.effective_collective_bytes / max(tc.effective_collective_bytes, 1)
+    print(f"  cross-pod byte reduction: {ratio:.2f}x "
+          f"(theory ~{2 * 32 / bits:.0f}x: AR moves 2x, int{bits} AG moves "
+          f"{bits}/32 of fp32)")
+    if out:
+        with open(out, "w") as f:
+            json.dump({
+                "arch": arch, "bits": bits,
+                "compressed": {"counts": tc.collective_counts,
+                               "eff_bytes": tc.effective_collective_bytes},
+                "fp32": {"counts": tu.collective_counts,
+                         "eff_bytes": tu.effective_collective_bytes},
+                "reduction_x": ratio}, f, indent=1)
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi_pod", action="store_true")
+    ap.add_argument("--seq_shard", action="store_true")
+    ap.add_argument("--compress_bits", type=int, default=0)
+    ap.add_argument("--cast_bf16", action="store_true")
+    ap.add_argument("--bf16_acc", action="store_true")
+    ap.add_argument("--decode_tp", action="store_true")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--pad_heads", type=int, default=None)
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--pod_sync_study", action="store_true",
+                    help="lower compressed vs fp32 pod param-sync and "
+                         "compare collective bytes (multi-pod mesh)")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--start", type=int, default=0, help="cell index offset")
+    ap.add_argument("--count", type=int, default=10_000)
+    args = ap.parse_args(argv)
+
+    if args.pod_sync_study:
+        return pod_sync_study(args.arch or "qwen3-8b",
+                              args.compress_bits or 8, args.out)
+
+    cells = (runnable_cells()[args.start:args.start + args.count]
+             if args.all else [(args.arch, args.shape)])
+    results, failures = [], []
+    for arch, shape in cells:
+        try:
+            results.append(run_cell(arch, shape, multi_pod=args.multi_pod,
+                                    seq_shard=args.seq_shard,
+                                    compress_bits=args.compress_bits,
+                                    cast_bf16=args.cast_bf16,
+                                    decode_tp=args.decode_tp,
+                                    accum_override=args.accum,
+                                    bf16_acc=args.bf16_acc,
+                                    pad_heads=args.pad_heads,
+                                    zero1=args.zero1))
+        except Exception as e:              # noqa: BLE001 — record and continue
+            traceback.print_exc()
+            failures.append({"arch": arch, "shape": shape, "error": repr(e)})
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump({"results": results, "failures": failures}, f, indent=1)
+    print(f"\n{len(results)} cells OK, {len(failures)} failed")
+    if failures:
+        for f_ in failures:
+            print("FAILED:", f_["arch"], f_["shape"], f_["error"][:200])
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh construction (assignment: MULTI-POD DRY-RUN step 1).
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state (device count is locked at first jax init — dryrun.py sets the
+512-device XLA flag before importing anything).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) single-pod (256 chips) or (2, 16, 16) two-pod (512 chips).
+
+    Axes: ``data`` = FSDP/data-parallel, ``model`` = TP/EP; ``pod`` = outer
+    data-parallel across pods (repurposable as a pipeline axis — DESIGN.md §5).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(model: int = 1, data: int = 1):
+    """Tiny mesh over however many (host) devices tests run with."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,280 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (assignment §ROOFLINE):
+
+    compute    = HLO_FLOPs_per_device / 197e12            (bf16 MXU peak)
+    memory     = HLO_bytes_per_device / 819e9             (HBM bandwidth)
+    collective = effective_collective_bytes / 50e9        (ICI per link)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (the compiled module
+is the per-device program).  Collective bytes are NOT in cost_analysis: we
+parse the post-SPMD HLO for all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops and sum operand sizes, with per-type
+effective-traffic factors (ring all-reduce moves ~2x its operand; AG/RS/A2A
+move ~(N-1)/N ~ 1x).
+
+MODEL_FLOPS uses the 6·N·D (train) / 2·N·D (inference) convention with
+N_active for MoE — the ratio MODEL_FLOPS / (HLO_FLOPs × devices) exposes
+remat recompute and padding waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+# TPU v5e-class hardware constants (assignment).
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# effective bytes-on-the-wire multiplier per collective kind (ring algorithms)
+_TRAFFIC_FACTOR = {
+    "all-reduce": 2.0,        # reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "ragged-all-to-all": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"ragged-all-to-all)(?:-start)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+    effective_bytes: float
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape sizes of every collective op in the optimized HLO."""
+    counts: dict[str, int] = {}
+    bytes_by_kind: dict[str, float] = {}
+    eff = 0.0
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        counts[kind] = counts.get(kind, 0) + 1
+        bytes_by_kind[kind] = bytes_by_kind.get(kind, 0.0) + b
+        eff += b * _TRAFFIC_FACTOR[kind]
+    return CollectiveStats(counts, bytes_by_kind, eff)
+
+
+def flops_and_bytes(cost: dict | None) -> tuple[float, float]:
+    """Extract per-device flops / bytes-accessed from cost_analysis output."""
+    if not cost:
+        return 0.0, 0.0
+    c = cost[0] if isinstance(cost, (list, tuple)) else cost
+    flops = float(c.get("flops", 0.0))
+    byts = float(c.get("bytes accessed", 0.0))
+    if byts == 0.0:
+        byts = sum(v for k, v in c.items()
+                   if isinstance(v, (int, float)) and "bytes accessed" in k)
+    return flops, byts
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float          # CPU-fusion-boundary upper bound
+    analytic_bytes_per_device: float     # TPU-realistic floor (memory term)
+    collective_bytes: float
+    model_flops: float
+    n_devices: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step estimate: max of the three (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.hlo_flops_per_device * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS-at-peak time / roofline step time (the perf score)."""
+        ideal = self.model_flops / (self.n_devices * PEAK_FLOPS)
+        return ideal / self.step_time_s if self.step_time_s else 0.0
+
+    def to_json(self) -> dict:
+        return {**dataclasses.asdict(self), "dominant": self.dominant,
+                "step_time_s": self.step_time_s,
+                "useful_flops_ratio": self.useful_flops_ratio,
+                "roofline_fraction": self.roofline_fraction}
+
+
+def derive(cost: dict | None, hlo_text: str, model_flops: float,
+           n_devices: int, analytic_bytes: float = 0.0) -> Roofline:
+    """Roofline terms from the compiled per-device HLO.
+
+    * compute / collective terms use the while-aware analyzer
+      (hlo_analysis): scan-over-layers / microbatch / attention-chunk loop
+      bodies are multiplied by their trip counts — XLA's cost_analysis
+      counts loop bodies once and undercounts deep-scanned models by orders
+      of magnitude (validated in tests/test_hlo_analysis.py);
+    * the memory term uses the analytic TPU-traffic floor when provided
+      (CPU fusion boundaries + loop-carry copies make the HLO-derived
+      number a loose upper bound — both are recorded).
+    """
+    from . import hlo_analysis
+    totals = hlo_analysis.analyze(hlo_text)
+    mem_bytes = analytic_bytes if analytic_bytes > 0 else totals.traffic_bytes
+    return Roofline(
+        compute_s=totals.flops / PEAK_FLOPS,
+        memory_s=mem_bytes / HBM_BW,
+        collective_s=totals.effective_collective_bytes / ICI_BW,
+        hlo_flops_per_device=totals.flops,
+        hlo_bytes_per_device=totals.traffic_bytes,
+        analytic_bytes_per_device=analytic_bytes,
+        collective_bytes=totals.effective_collective_bytes,
+        model_flops=model_flops,
+        n_devices=n_devices,
+    )
+
+
+# --------------------------- MODEL_FLOPS helpers -----------------------------------
+
+def param_counts(cfg, skeleton) -> tuple[float, float]:
+    """(total_params, active_params): MoE experts count at top_k/E activity."""
+    import jax
+    from repro.models.common import P
+
+    total = active = 0.0
+    def visit(path, decl):
+        nonlocal total, active
+        n = 1.0
+        for d in decl.shape:
+            n *= d
+        total += n
+        if "experts" in decl.axes:
+            active += n * (cfg.top_k / max(cfg.n_experts, 1))
+        else:
+            active += n
+
+    jax.tree_util.tree_map_with_path(visit, skeleton,
+                                     is_leaf=lambda x: isinstance(x, P))
+    return total, active
+
+
+def model_flops_for(cfg, shape_kind: str, seq: int, batch: int,
+                    skeleton) -> float:
+    """MODEL_FLOPS: 6·N·D (train) / 2·N·D (inference) with N_active for MoE,
+    PLUS the attention quadratic term (PaLM-style MFU accounting) — without
+    it the 'useful flops' ratio misreads attention-heavy cells (MLA at 4k)
+    as waste.  Windowed layers use min(S, window) context; recurrent layers
+    (rglru/rwkv) have no quadratic term.
+    """
+    _, n_active = param_counts(cfg, skeleton)
+    tokens = batch * (seq if shape_kind in ("train", "prefill") else 1)
+    per_token = 6.0 if shape_kind == "train" else 2.0
+    param_flops = per_token * n_active * tokens
+
+    # Attention quadratic term: per token, per attention layer,
+    #   fwd ~ 2 * ctx * H * (qk_dim + v_dim)   (scores + weighted sum)
+    # with ctx = avg causal context; train multiplies by 3 (fwd+bwd).
+    kinds = cfg.pattern_layers()
+    fwd_mult = 3.0 if shape_kind == "train" else 1.0
+    attn = 0.0
+    for kind in kinds:
+        if kind in ("attn", "mla"):
+            ctx = (seq / 2) if shape_kind in ("train", "prefill") else seq
+        elif kind == "local_attn":
+            ctx = min(seq, cfg.local_window)
+        else:
+            continue  # rglru / rwkv: linear in seq, inside param_flops
+        qk = cfg.qk_head_dim
+        v = cfg.v_dim
+        attn += 2.0 * ctx * cfg.n_heads * (qk + v)
+    if cfg.is_encoder_decoder:
+        # encoder self-attention (bidirectional, ctx = encoder_seq) applies
+        # to encoder tokens; cross-attention context = encoder_seq.
+        enc_tokens = batch * cfg.encoder_seq
+        attn_enc = (2.0 * cfg.encoder_seq * cfg.n_heads * 2 * cfg.qk_head_dim
+                    * cfg.n_encoder_layers)
+        param_flops += fwd_mult * attn_enc * enc_tokens
+        attn += 2.0 * cfg.encoder_seq * cfg.n_heads * 2 * cfg.qk_head_dim \
+            * len(kinds)
+    return param_flops + fwd_mult * attn * tokens
+
+
+def analytic_traffic(cfg, shape_kind: str, seq: int, batch: int, n_devices: int,
+                     accum: int, skeleton) -> float:
+    """TPU-realistic per-device HBM-traffic floor (bytes per step).
+
+    The HLO-derived traffic (hlo_analysis) reflects *CPU* fusion boundaries
+    and loop-carry copies, which overstate what a TPU executes; this analytic
+    floor is what §Roofline reports as the memory term, with the HLO number
+    recorded alongside as an upper bound.  Terms:
+      * weights: fp32 reads per microbatch (fwd + bwd + remat recompute),
+        gradient write + optimizer read/modify/write (3 states);
+      * boundary activations: bf16 write (fwd) + read (bwd) per layer;
+      * logits: bf16 write + fp32 softmax read/write;
+      * decode: KV-cache read (+ one-slot write) + weight read.
+    """
+    total_p, _ = param_counts(cfg, skeleton)
+    p_loc = total_p / n_devices * 4.0                      # fp32 shards
+    d, l, v = cfg.d_model, cfg.n_layers, cfg.vocab_size
+    if shape_kind == "train":
+        remat_reads = 1 if cfg.remat != "none" else 0
+        w = p_loc * (accum * (2 + remat_reads) + 7)        # fwd/bwd/remat + opt
+        mb_rows = max(batch // n_devices, 1) / accum
+        acts = accum * 2 * l * mb_rows * seq * d * 2.0
+        return w + acts
+    if shape_kind == "prefill":
+        rows = max(batch / n_devices, 1 / 16)
+        acts = 2 * l * rows * seq * d * 2.0
+        cache_w = l * rows * seq * 2 * cfg.n_kv_heads * cfg.qk_head_dim * 2.0
+        return p_loc + acts + cache_w
+    # decode: read the whole local cache shard + the weights once
+    if cfg.use_mla:
+        cache = l * batch * seq * (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2.0
+    else:
+        per_layer = {"attn": seq, "local_attn": min(seq, cfg.local_window)}
+        cache = 0.0
+        for kind in cfg.pattern_layers():
+            s_eff = per_layer.get(kind)
+            if s_eff is None:
+                cache += batch * d * 64 * 4.0                # small rec state
+            else:
+                cache += batch * s_eff * 2 * cfg.n_kv_heads * cfg.qk_head_dim * 2.0
+    return p_loc + cache / n_devices

@@ -1,0 +1,50 @@
+"""Serving driver: batched prefill + decode on local devices.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
+      --batch 4 --prompt_len 32 --new 16
+
+Production path: the decode step is the same function the multi-pod dry-run
+lowers for decode_32k/long_500k (launch/dryrun.py --decode_tp for the
+weight-stationary 2D-TP serving layout).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config, reduced_config
+from repro.models import RunCtx, init_params
+from repro.models.frontend import audio_stub_frames
+from repro.serve.engine import greedy_generate
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt_len", type=int, default=32)
+    ap.add_argument("--new", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    cfg = reduced_config(args.arch) if args.smoke else get_config(args.arch)
+    params = init_params(cfg, jax.random.key(0))
+    prompt = jax.random.randint(jax.random.key(1),
+                                (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+    frames = (audio_stub_frames(cfg, args.batch, jax.random.key(2))
+              if cfg.is_encoder_decoder else None)
+    t0 = time.time()
+    out = greedy_generate(cfg, params, prompt, args.new, RunCtx(),
+                          frames=frames)
+    dt = time.time() - t0
+    tok_s = args.batch * args.new / dt
+    print(f"[serve] arch={cfg.name} batch={args.batch} new={args.new} "
+          f"{dt:.1f}s ({tok_s:.1f} tok/s incl. compile)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

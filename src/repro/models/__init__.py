@@ -1,0 +1,12 @@
+"""LM model stack: 10-architecture substrate with the paper's SC technique
+available as an approximate-matmul mode (mlp.sc_linear / cfg.sc_mode)."""
+from . import attention, common, frontend, mlp, model, moe, recurrent
+from .common import ModelConfig, P
+from .model import (RunCtx, decode_step, forward, init_cache, init_params,
+                    model_params, prefill, stack_plan)
+
+__all__ = [
+    "attention", "common", "frontend", "mlp", "model", "moe", "recurrent",
+    "ModelConfig", "P", "RunCtx", "decode_step", "forward", "init_cache",
+    "init_params", "model_params", "prefill", "stack_plan",
+]

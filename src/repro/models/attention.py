@@ -1,0 +1,301 @@
+"""Attention layers: GQA (+qk-norm, sliding window), MLA, cross-attention.
+
+Three execution paths, all sharing weights:
+  * ``attend_train`` — full-sequence causal (or bidirectional) attention with
+    chunked online softmax over KV blocks (memory O(S * chunk), required for
+    the 32k prefill shapes);
+  * ``decode_step``   — one-token attention against a KV cache
+    (full cache for global layers, ring-buffer cache for local layers);
+  * MLA variants cache the compressed c_kv (+ shared k_rope) only, with the
+    absorbed-projection decode trick (DeepSeek-V2).
+
+Shapes: x (B, S, D); q/k/v (B, S, H, hd); caches (B, S_max, KVH, hd).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import P, ModelConfig, ein, rms_norm, rope
+
+NEG_INF = -1e30
+
+
+# ------------------------------- params -------------------------------------------
+
+def attn_params(cfg: ModelConfig) -> dict:
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.qk_head_dim
+    h = cfg.pad_heads or h
+    p = {
+        "wq": P((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": P((d, kvh, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": P((d, kvh, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": P((h, hd, d), ("heads", "head_dim", "embed")),
+        "ln": P((d,), ("embed",), init="zeros"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = P((hd,), ("head_dim",), init="zeros")
+        p["k_norm"] = P((hd,), ("head_dim",), init="zeros")
+    return p
+
+
+def mla_params(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    r, nd, rd, vd = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq": P((d, h, nd + rd), ("embed", "heads", "head_dim")),
+        "w_dkv": P((d, r + rd), ("embed", "kv_lora")),
+        "kv_ln": P((r,), ("kv_lora",), init="zeros"),
+        "w_uk": P((r, h, nd), ("kv_lora", "heads", "head_dim")),
+        "w_uv": P((r, h, vd), ("kv_lora", "heads", "head_dim")),
+        "wo": P((h, vd, d), ("heads", "head_dim", "embed")),
+        "ln": P((d,), ("embed",), init="zeros"),
+    }
+
+
+def cross_attn_params(cfg: ModelConfig) -> dict:
+    p = attn_params(cfg)
+    p.pop("q_norm", None)
+    p.pop("k_norm", None)
+    return p
+
+
+# ------------------------------ core attention ------------------------------------
+
+def _gqa_scores(q, k):
+    """q (B,Sq,H,hd), k (B,Sk,KVH,hd) -> scores (B, H, Sq, Sk) with grouping."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    qg = q.reshape(b, sq, kvh, group, hd)
+    s = ein("bqkgd,bskd->bkgqs", qg, k)
+    return s.reshape(b, h, sq, k.shape[1])
+
+
+def _gqa_out(weights, v):
+    """weights (B,H,Sq,Sk), v (B,Sk,KVH,hd) -> (B,Sq,H,hd)."""
+    b, h, sq, sk = weights.shape
+    kvh = v.shape[2]
+    group = h // kvh
+    wg = weights.reshape(b, kvh, group, sq, sk)
+    o = ein("bkgqs,bskd->bqkgd", wg, v)
+    return o.reshape(b, sq, h, v.shape[-1])
+
+
+def attend_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                   q_pos: jax.Array, kv_pos: jax.Array, *, causal: bool,
+                   window: int | None, kv_chunk: int = 1024,
+                   softmax_scale: float) -> jax.Array:
+    """Online-softmax attention over KV chunks (flash-attention structure).
+
+    Memory O(Sq * kv_chunk) instead of O(Sq * Sk).  ``window``: sliding-window
+    masking for local layers (None = global).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    kv_chunk = min(kv_chunk, sk)
+    n_chunks = (sk + kv_chunk - 1) // kv_chunk
+    pad = n_chunks * kv_chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, pad),), constant_values=jnp.iinfo(jnp.int32).max)
+    k = k.reshape(b, n_chunks, kv_chunk, *k.shape[2:])
+    v = v.reshape(b, n_chunks, kv_chunk, *v.shape[2:])
+    kv_pos = kv_pos.reshape(n_chunks, kv_chunk)
+
+    q32 = q.astype(jnp.float32) * softmax_scale
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        kc, vc, pc = xs
+        s = _gqa_scores(q32, kc.astype(jnp.float32))        # (B,H,Sq,kc)
+        mask = jnp.ones((sq, kv_chunk), bool)
+        if causal:
+            mask &= pc[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= pc[None, :] > q_pos[:, None] - window
+        mask &= pc[None, :] < jnp.iinfo(jnp.int32).max      # padding
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(-1)
+        pv = _gqa_out(p, vc.astype(jnp.float32))            # (B,Sq,H,hd)
+        acc = acc * corr.transpose(0, 2, 1)[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, sq, h, v.shape[-1]), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (k.swapaxes(0, 1), v.swapaxes(0, 1), kv_pos))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+# ------------------------------- GQA layer -----------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array            # (B, S_cache, KVH, hd)
+    v: jax.Array
+    # ring caches track writes via (pos % size); global caches use pos directly
+
+
+def qkv_proj(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+             rope_on: bool = True):
+    q = ein("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = ein("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = ein("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if rope_on:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_train(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+              *, is_local: bool, causal: bool = True,
+              kv_chunk: int = 1024) -> jax.Array:
+    q, k, v = qkv_proj(cfg, p, x, positions)
+    window = cfg.local_window if is_local else None
+    out = attend_chunked(q, k, v, positions, positions, causal=causal,
+                         window=window, kv_chunk=kv_chunk,
+                         softmax_scale=cfg.qk_head_dim ** -0.5)
+    return ein("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def gqa_decode(cfg: ModelConfig, p: dict, x: jax.Array, pos: jax.Array,
+               cache: KVCache, *, is_local: bool) -> tuple[jax.Array, KVCache]:
+    """One-token decode. x (B,1,D); pos scalar int32 (current position).
+
+    Local layers use a ring-buffer cache of size ``local_window``; global
+    layers a full-length cache.
+    """
+    q, k_new, v_new = qkv_proj(cfg, p, x, pos[None].astype(jnp.int32))
+    s_cache = cache.k.shape[1]
+    slot = (pos % s_cache) if is_local else pos
+    # One-hot masked cache write instead of dynamic_update_slice: DUS on a
+    # seq-SHARDED cache makes GSPMD all-gather the whole cache per layer
+    # (~17 GB/step at 123B/32k); the masked select is elementwise over the
+    # sharded dim and fuses into the attention read (§Perf decode lever).
+    hit = (jnp.arange(s_cache) == slot)[None, :, None, None]
+    k = jnp.where(hit, k_new.astype(cache.k.dtype), cache.k)
+    v = jnp.where(hit, v_new.astype(cache.v.dtype), cache.v)
+    # Validity: global -> positions <= pos; ring -> age < written count.
+    idx = jnp.arange(s_cache)
+    if is_local:
+        valid = ((slot - idx) % s_cache) < jnp.minimum(pos + 1, s_cache)
+    else:
+        valid = idx <= pos
+    scores = _gqa_scores(q.astype(jnp.float32) * cfg.qk_head_dim ** -0.5,
+                         k.astype(jnp.float32))          # (B,H,1,S)
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(w, v.astype(jnp.float32)).astype(x.dtype)
+    y = ein("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, KVCache(k, v)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, seq: int, *, is_local: bool,
+                  dtype=jnp.bfloat16) -> KVCache:
+    s = min(seq, cfg.local_window) if is_local else seq
+    shape = (batch, s, cfg.n_kv_heads, cfg.qk_head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+# ------------------------------- MLA layer -----------------------------------------
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array          # (B, S, kv_lora)
+    k_rope: jax.Array        # (B, S, rope_dim)
+
+
+def mla_train(cfg: ModelConfig, p: dict, x: jax.Array,
+              positions: jax.Array, kv_chunk: int = 1024) -> jax.Array:
+    b, s, d = x.shape
+    h, nd, rd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = ein("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = ein("bsd,dr->bsr", x, p["w_dkv"].astype(x.dtype))
+    c_kv, k_rope = ckv[..., :cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank:]
+    c_kv = rms_norm(c_kv, p["kv_ln"])
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    k_nope = ein("bsr,rhk->bshk", c_kv, p["w_uk"].astype(x.dtype))
+    v = ein("bsr,rhk->bshk", c_kv, p["w_uv"].astype(x.dtype))
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rd))], -1)
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    out = attend_chunked(q_full, k_full, v, positions, positions, causal=True,
+                         window=None, kv_chunk=kv_chunk,
+                         softmax_scale=(nd + rd) ** -0.5)
+    return ein("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def mla_decode(cfg: ModelConfig, p: dict, x: jax.Array, pos: jax.Array,
+               cache: MLACache) -> tuple[jax.Array, MLACache]:
+    """Absorbed-projection decode: scores in compressed space, cache = c_kv."""
+    b = x.shape[0]
+    h, nd, rd, r = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.kv_lora_rank
+    q = ein("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = rope(q_rope, pos[None].astype(jnp.int32), cfg.rope_theta)
+
+    ckv = ein("bsd,dr->bsr", x, p["w_dkv"].astype(x.dtype))
+    c_new, kr_new = ckv[..., :r], ckv[..., r:]
+    c_new = rms_norm(c_new, p["kv_ln"])
+    kr_new = rope(kr_new[:, :, None, :], pos[None].astype(jnp.int32),
+                  cfg.rope_theta)[:, :, 0]
+    # Masked write (not DUS): keeps the seq-sharded cache local (see
+    # gqa_decode for the rationale).
+    hit = (jnp.arange(cache.c_kv.shape[1]) == pos)[None, :, None]
+    c_kv = jnp.where(hit, c_new.astype(cache.c_kv.dtype), cache.c_kv)
+    k_rope = jnp.where(hit, kr_new.astype(cache.k_rope.dtype), cache.k_rope)
+    # Absorb W_uk into q: q_c (B,1,H,r)
+    q_c = ein("bshk,rhk->bshr", q_nope, p["w_uk"].astype(x.dtype))
+    s_c = ein("bshr,btr->bhst", q_c.astype(jnp.float32),
+                     c_kv.astype(jnp.float32))
+    s_r = ein("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                     k_rope.astype(jnp.float32))
+    scores = (s_c + s_r) * (nd + rd) ** -0.5
+    valid = jnp.arange(c_kv.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = ein("bhst,btr->bshr", w, c_kv.astype(jnp.float32))
+    out = ein("bshr,rhk->bshk", ctx, p["w_uv"].astype(jnp.float32))
+    y = ein("bshk,hkd->bsd", out.astype(x.dtype), p["wo"].astype(x.dtype))
+    return y, MLACache(c_kv, k_rope)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, seq: int,
+                   dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(jnp.zeros((batch, seq, cfg.kv_lora_rank), dtype),
+                    jnp.zeros((batch, seq, cfg.qk_rope_dim), dtype))
+
+
+# ---------------------------- cross-attention (whisper) ----------------------------
+
+def cross_attend(cfg: ModelConfig, p: dict, x: jax.Array,
+                 enc_kv: tuple[jax.Array, jax.Array]) -> jax.Array:
+    """Decoder cross-attention against precomputed encoder K/V."""
+    q = ein("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k, v = enc_kv
+    scores = _gqa_scores(q.astype(jnp.float32) * cfg.qk_head_dim ** -0.5,
+                         k.astype(jnp.float32))
+    w = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(w, v.astype(jnp.float32)).astype(x.dtype)
+    return ein("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def encode_cross_kv(cfg: ModelConfig, p: dict, enc_out: jax.Array):
+    k = ein("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = ein("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    return k, v

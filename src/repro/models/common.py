@@ -1,0 +1,200 @@
+"""Model substrate: config, declarative params with logical sharding axes,
+norms, RoPE, init.
+
+Params are declared as ``P(shape, axes)`` skeletons; ``materialize`` turns a
+skeleton tree into arrays, ``pspec_tree`` turns the same tree into
+``PartitionSpec``s via the sharding rules — one source of truth for both
+(MaxText-style logical axis names).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+
+# ------------------------------- configuration -----------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"            # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int | None = None      # default d_model // n_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    # attention variants
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    local_window: int = 1024          # sliding window for local layers
+    layer_pattern: tuple[str, ...] = ("attn",)   # repeating kinds
+    # pattern kinds: attn | local_attn | rglru | rwkv | moe-suffixed kinds use
+    # the mlp_kind field instead.
+    mlp_kind: str = "dense"           # dense | moe
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 1
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    first_layer_dense: bool = False   # deepseek: layer 0 dense
+    d_ff_first: int = 0
+    # MLA (deepseek)
+    use_mla: bool = False
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1500           # precomputed frames (frontend stub)
+    # recurrent
+    rglru_width: int = 0              # RG-LRU recurrence width (d_rnn)
+    conv_width: int = 4
+    rwkv_head_dim: int = 64
+    # stochastic-computing integration (the paper's technique)
+    sc_mode: str = "off"              # off | analytic | exact
+    sc_bitstream_length: int = 256
+    # TP head padding (§Perf lever): pad n_heads up to a multiple of the
+    # model axis so attention weights shard instead of replicating (llama4's
+    # 40 heads on a 16-way axis).  Extra heads' wo rows are zero-initialized
+    # -> identical function, ~heads_pad/heads extra attention compute.
+    pad_heads: int | None = None
+    # numerics
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: str = "none"               # none | full | dots
+    # modality frontend stubs
+    frontend: str = "none"            # none | audio_stub | vq_stub
+
+    @property
+    def qk_head_dim(self) -> int:
+        if self.use_mla:
+            return self.qk_nope_dim + self.qk_rope_dim
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def v_dim(self) -> int:
+        if self.use_mla:
+            return self.v_head_dim
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    def pattern_layers(self) -> list[str]:
+        """Expand layer_pattern to n_layers kinds (pattern repeats + remainder)."""
+        kinds: list[str] = []
+        while len(kinds) < self.n_layers:
+            kinds.extend(self.layer_pattern)
+        return kinds[: self.n_layers]
+
+
+# ------------------------------ param declarations -------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """A parameter declaration: shape + logical axes (+ init)."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"              # normal | zeros | ones | rglru_a
+    scale: float | None = None        # stddev override
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def materialize(tree: Any, key: jax.Array, dtype=jnp.float32) -> Any:
+    """Turn a skeleton tree of P into arrays (split keys deterministically)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=lambda x: isinstance(x, P))
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for decl, k in zip(leaves, keys):
+        if decl.init == "zeros":
+            arr = jnp.zeros(decl.shape, dtype)
+        elif decl.init == "ones":
+            arr = jnp.ones(decl.shape, dtype)
+        elif decl.init == "rglru_a":
+            # RG-LRU a-parameter: softplus-inv spread so a^c in ~(0.9, 0.999)
+            u = jax.random.uniform(k, decl.shape, jnp.float32, 0.9, 0.999)
+            arr = jnp.log(jnp.exp(-jnp.log(u)) - 1.0).astype(dtype)  # softplus^-1(-log u)
+        else:
+            fan_in = decl.shape[-2] if len(decl.shape) >= 2 else decl.shape[-1]
+            std = decl.scale if decl.scale is not None else 1.0 / math.sqrt(fan_in)
+            arr = (jax.random.normal(k, decl.shape, jnp.float32) * std).astype(dtype)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def pspec_tree(tree: Any, rules: dict[str, Any]) -> Any:
+    """Map each P's logical axes through the rules table to PartitionSpecs."""
+    def to_spec(decl: P) -> PartitionSpec:
+        return PartitionSpec(*[rules.get(a) if a is not None else None
+                               for a in decl.axes])
+    return jax.tree.map(to_spec, tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_tree(tree: Any, dtype=jnp.float32) -> Any:
+    """Skeleton -> ShapeDtypeStruct tree (for dry-run lowering)."""
+    return jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, dtype), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------- layers ----------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float,
+         rotary_dim: int | None = None) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    rd = rotary_dim or hd
+    freqs = theta ** (-jnp.arange(0, rd, 2, dtype=jnp.float32) / rd)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, rd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., 0:rd:2]
+    x2 = x[..., 1:rd:2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    rot = jnp.stack([r1, r2], axis=-1).reshape(x[..., :rd].shape)
+    return jnp.concatenate([rot.astype(x.dtype), x[..., rd:]], axis=-1)
+
+
+def shard(x: jax.Array, spec: PartitionSpec | None) -> jax.Array:
+    """Sharding-constraint helper (no-op when spec is None)."""
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# §Perf lever (off for the faithful baseline; enabled by dryrun --bf16_acc):
+# JAX dots on bf16 inputs request an f32 accumulator, so the dot OUTPUT —
+# where GSPMD inserts the TP psum, in both forward and transpose — is f32 and
+# every (B, S, D)-sized partial-sum all-reduce moves 4 B/elem.  Requesting a
+# bf16 dot output halves those collectives; on TPU the MXU still accumulates
+# in f32 internally (this is the standard Megatron partial-sum-in-bf16
+# configuration), only the cross-shard combine sees bf16 rounding.
+ACC_DTYPE: list[Any] = [None]          # None = JAX default (f32 accumulation)
+
+
+def set_bf16_matmul_accum(on: bool) -> None:
+    ACC_DTYPE[0] = jnp.bfloat16 if on else None
+
+
+def ein(eq: str, *xs: jax.Array) -> jax.Array:
+    """einsum with the configured accumulator/output dtype."""
+    if ACC_DTYPE[0] is not None and all(x.dtype == ACC_DTYPE[0] for x in xs):
+        return jnp.einsum(eq, *xs, preferred_element_type=ACC_DTYPE[0])
+    return jnp.einsum(eq, *xs)

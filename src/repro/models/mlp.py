@@ -1,0 +1,130 @@
+"""MLP blocks: SwiGLU (dense), RWKV channel-mix, and ScLinear — the paper's
+stochastic-computing arithmetic as an approximate-matmul mode inside the LM.
+
+ScLinear modes (cfg.sc_mode):
+  * ``off``      — exact matmul (baseline; all full-size dry-runs).
+  * ``analytic`` — exact mean + the *closed-form* SC sampling noise of
+    popcount(AND)/BL estimation: for unipolar operands p = a*w per product,
+    Var = p(1-p)/BL, independent across k ⇒
+        Var[y] = (|a|@|w| - (a*w)^2-sum) / BL        (derived below)
+    Scales to full configs (no bitstream materialization): this is how the
+    paper's technique rides along in large-scale dry-runs.
+  * ``exact``    — packed-bitstream kernels (kernels/sc_matmul): bit-identical
+    to the Pallas path; smoke scale only (BL/32 words per product).
+
+Signed values use the bipolar decomposition x = x⁺ - x⁻ (four unipolar
+matmuls), with per-tensor max-abs scaling into [0, 1] — the same
+unipolar-encoding restriction the paper's applications live under.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import P, ModelConfig, ein
+
+
+def mlp_params(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "ln": P((d,), ("embed",), init="zeros"),
+        "w_in": P((d, f), ("embed", "mlp")),
+        "w_gate": P((d, f), ("embed", "mlp")),
+        "w_out": P((f, d), ("mlp", "embed")),
+    }
+
+
+def rwkv_channel_mix_params(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "ln": P((d,), ("embed",), init="zeros"),
+        "mu_k": P((d,), ("embed",), init="zeros"),
+        "mu_r": P((d,), ("embed",), init="zeros"),
+        "w_k": P((d, f), ("embed", "mlp")),
+        "w_r": P((d, d), ("embed", "mlp")),
+        "w_v": P((f, d), ("mlp", "embed")),
+    }
+
+
+# ------------------------------- ScLinear ----------------------------------------
+
+def _sc_unipolar_matmul_analytic(a: jax.Array, w: jax.Array, bl: int,
+                                 key: jax.Array) -> jax.Array:
+    """E + noise model of popcount(AND)/BL for unipolar a, w in [0,1]."""
+    mean = a @ w
+    # Var[popcount/BL] per product p=a_k w_k is p(1-p)/BL; sum over k:
+    #   sum_k a_k w_k - sum_k (a_k w_k)^2
+    var = jnp.maximum(mean - (a * a) @ (w * w), 0.0) / bl
+    noise = jax.random.normal(key, mean.shape, mean.dtype) * jnp.sqrt(var)
+    return mean + noise
+
+
+def sc_linear(x: jax.Array, w: jax.Array, cfg: ModelConfig,
+              key: jax.Array | None = None, seed: int = 0) -> jax.Array:
+    """Stochastic-computing linear layer: x (..., K) @ w (K, N).
+
+    Bipolar decomposition into four unipolar matmuls, each estimated by the
+    SC AND/popcount scheme at cfg.sc_bitstream_length.
+    """
+    if cfg.sc_mode == "off":
+        return x @ w
+
+    orig_shape = x.shape
+    xm = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    wm = w.astype(jnp.float32)
+    sx = jnp.maximum(jnp.max(jnp.abs(xm)), 1e-6)
+    sw = jnp.maximum(jnp.max(jnp.abs(wm)), 1e-6)
+    xp, xn = jnp.maximum(xm, 0) / sx, jnp.maximum(-xm, 0) / sx
+    wp, wn = jnp.maximum(wm, 0) / sw, jnp.maximum(-wm, 0) / sw
+    bl = cfg.sc_bitstream_length
+
+    if cfg.sc_mode == "analytic":
+        assert key is not None, "analytic sc_mode needs an rng key"
+        ks = jax.random.split(key, 4)
+        pp = _sc_unipolar_matmul_analytic(xp, wp, bl, ks[0])
+        nn = _sc_unipolar_matmul_analytic(xn, wn, bl, ks[1])
+        pn = _sc_unipolar_matmul_analytic(xp, wn, bl, ks[2])
+        np_ = _sc_unipolar_matmul_analytic(xn, wp, bl, ks[3])
+    elif cfg.sc_mode == "exact":
+        from repro.kernels import ops
+        pp = ops.sc_matmul(xp, wp, bl, seed=4 * seed + 0)
+        nn = ops.sc_matmul(xn, wn, bl, seed=4 * seed + 1)
+        pn = ops.sc_matmul(xp, wn, bl, seed=4 * seed + 2)
+        np_ = ops.sc_matmul(xn, wp, bl, seed=4 * seed + 3)
+    else:
+        raise ValueError(cfg.sc_mode)
+    y = (pp + nn - pn - np_) * (sx * sw)
+    return y.reshape(orig_shape[:-1] + (w.shape[-1],)).astype(x.dtype)
+
+
+# ------------------------------- blocks ------------------------------------------
+
+def mlp_fwd(cfg: ModelConfig, p: dict, x: jax.Array,
+            sc_key: jax.Array | None = None) -> jax.Array:
+    """SwiGLU MLP; when sc_mode != off the in/gate projections run through the
+    stochastic-computing path (the down-projection stays exact — it consumes
+    signed activations with large dynamic range, the worst case for unipolar
+    SC; documented in DESIGN.md §4)."""
+    dt = x.dtype
+    w_in, w_gate, w_out = (p["w_in"].astype(dt), p["w_gate"].astype(dt),
+                           p["w_out"].astype(dt))
+    if cfg.sc_mode == "off":
+        h = ein("bsd,df->bsf", x, w_in)
+        g = ein("bsd,df->bsf", x, w_gate)
+    else:
+        k1, k2 = (jax.random.split(sc_key) if sc_key is not None else (None, None))
+        h = sc_linear(x, w_in, cfg, k1, seed=0)
+        g = sc_linear(x, w_gate, cfg, k2, seed=1)
+    return ein("bsf,fd->bsd", jax.nn.silu(g) * h, w_out)
+
+
+def rwkv_channel_mix_fwd(cfg: ModelConfig, p: dict, x: jax.Array,
+                         x_prev: jax.Array) -> jax.Array:
+    """RWKV-6 channel mix: token-shifted squared-ReLU MLP with a receptance
+    gate.  x, x_prev: (B, S, D) (x_prev = x shifted right by one token)."""
+    dt = x.dtype
+    mk = x + (x_prev - x) * p["mu_k"].astype(dt)
+    mr = x + (x_prev - x) * p["mu_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(mk @ p["w_k"].astype(dt)))
+    r = jax.nn.sigmoid(mr @ p["w_r"].astype(dt))
+    return r * (k @ p["w_v"].astype(dt))

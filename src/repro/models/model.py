@@ -1,0 +1,520 @@
+"""Model assembly: embedding -> layer stack -> head, for all 10 assigned
+architectures, with three lowered entry points per model:
+
+  * ``forward``       — full-sequence training/prefill forward (causal)
+  * ``prefill``       — forward + KV/recurrent cache construction
+  * ``decode_step``   — one-token step against caches
+
+Layer stacking (MaxText-style): the layer pattern (e.g. gemma3's 5 local : 1
+global) is grouped into *units*; parameters of all full units are stacked on
+a leading axis and applied with ``jax.lax.scan`` — HLO stays compact for
+62-layer full-size configs.  A prefix (deepseek's dense layer 0) and the
+pattern remainder are unrolled.
+
+Caches mirror the parameter structure: per unit position, stacked over units.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as PS
+
+from . import attention as att
+from . import mlp as mlpmod
+from . import moe as moemod
+from . import recurrent as rec
+from .common import P, ModelConfig, materialize, rms_norm, shard
+
+MIXER_KINDS = ("attn", "local_attn", "mla", "rglru", "rwkv")
+
+
+# ------------------------------- param skeleton -----------------------------------
+
+def _mixer_params(cfg: ModelConfig, kind: str) -> dict:
+    if kind in ("attn", "local_attn"):
+        return att.attn_params(cfg)
+    if kind == "mla":
+        return att.mla_params(cfg)
+    if kind == "rglru":
+        return rec.rglru_params(cfg)
+    if kind == "rwkv":
+        return rec.rwkv_params(cfg)
+    raise ValueError(kind)
+
+
+def _mlp_params(cfg: ModelConfig, *, dense_ff: int | None = None,
+                force_dense: bool = False) -> dict:
+    if cfg.mlp_kind == "rwkv":
+        return mlpmod.rwkv_channel_mix_params(cfg)
+    if cfg.mlp_kind == "moe" and not force_dense:
+        p = moemod.moe_params(cfg)
+        p["ln"] = P((cfg.d_model,), ("embed",), init="zeros")
+        return p
+    return mlpmod.mlp_params(cfg, dense_ff)
+
+
+def layer_params(cfg: ModelConfig, kind: str, *, force_dense_mlp: bool = False,
+                 dense_ff: int | None = None, cross_attn: bool = False) -> dict:
+    p = {"mixer": _mixer_params(cfg, kind),
+         "mlp": _mlp_params(cfg, dense_ff=dense_ff, force_dense=force_dense_mlp)}
+    if cross_attn:
+        cp = att.cross_attn_params(cfg)
+        cp["ln"] = P((cfg.d_model,), ("embed",), init="zeros")
+        p["cross"] = cp
+    return p
+
+
+def _stack_decl(tree: Any, n: int) -> Any:
+    """Prepend a stacked `layers` axis to every P declaration."""
+    return jax.tree.map(
+        lambda d: P((n,) + d.shape, ("layers",) + d.axes, d.init, d.scale),
+        tree, is_leaf=lambda x: isinstance(x, P))
+
+
+@dataclasses.dataclass(frozen=True)
+class StackPlan:
+    """How cfg.pattern_layers() maps onto scan units + unrolled layers."""
+
+    prefix: tuple[str, ...]          # unrolled leading layers (kinds)
+    pattern: tuple[str, ...]         # one scan unit
+    n_units: int
+    suffix: tuple[str, ...]          # unrolled trailing layers (kinds)
+
+
+def stack_plan(cfg: ModelConfig) -> StackPlan:
+    kinds = cfg.pattern_layers()
+    prefix: tuple[str, ...] = ()
+    if cfg.first_layer_dense:                     # deepseek: layer 0 dense MLP
+        prefix = (kinds[0],)
+        kinds = kinds[1:]
+    plen = len(cfg.layer_pattern)
+    n_units = len(kinds) // plen
+    suffix = tuple(kinds[n_units * plen:])
+    return StackPlan(prefix, tuple(cfg.layer_pattern), n_units, suffix)
+
+
+def model_params(cfg: ModelConfig) -> dict:
+    """Skeleton parameter tree (P declarations) for the full model."""
+    d, v = cfg.d_model, cfg.vocab_size
+    plan = stack_plan(cfg)
+    params: dict[str, Any] = {
+        "embed": P((v, d), ("vocab", "embed"), scale=1.0),
+        "head": P((d, v), ("embed", "vocab")),
+        "final_ln": P((d,), ("embed",), init="zeros"),
+        "layers": {
+            "scan": _stack_decl(
+                {f"p{j}": layer_params(cfg, k, cross_attn=cfg.is_encoder_decoder)
+                 for j, k in enumerate(plan.pattern)}, plan.n_units),
+            "prefix": [layer_params(cfg, k, force_dense_mlp=True,
+                                    dense_ff=cfg.d_ff_first or cfg.d_ff,
+                                    cross_attn=cfg.is_encoder_decoder)
+                       for k in plan.prefix],
+            "suffix": [layer_params(cfg, k, cross_attn=cfg.is_encoder_decoder)
+                       for k in plan.suffix],
+        },
+    }
+    if cfg.is_encoder_decoder:
+        enc_cfg = cfg                                  # same dims (whisper)
+        ne = cfg.n_encoder_layers
+        params["encoder"] = {
+            "pos_emb": P((cfg.encoder_seq, d), (None, "embed"), scale=0.02),
+            "layers": _stack_decl({"p0": {
+                "mixer": att.attn_params(enc_cfg),
+                "mlp": mlpmod.mlp_params(enc_cfg)}}, ne),
+            "final_ln": P((d,), ("embed",), init="zeros"),
+        }
+    return params
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    return materialize(model_params(cfg), key, dtype=cfg.param_dtype)
+
+
+# ------------------------------- context -------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RunCtx:
+    """Execution context: mesh + activation sharding specs (None = no mesh)."""
+
+    mesh: Mesh | None = None
+    act_spec: PS | None = None          # (batch, seq, d_model)
+    use_ep: bool = False                # expert-parallel MoE path
+    data_axes: tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    rng: jax.Array | None = None        # for sc_mode=analytic
+
+
+def _moe_fwd(cfg: ModelConfig, p: dict, x: jax.Array, ctx: RunCtx):
+    if ctx.use_ep and ctx.mesh is not None:
+        return moemod.moe_ep(cfg, p, x, ctx.mesh, ctx.data_axes, ctx.model_axis)
+    return moemod.moe_dense(cfg, p, x)
+
+
+def _mlp_fwd(cfg: ModelConfig, p: dict, x: jax.Array, ctx: RunCtx,
+             x_prev: jax.Array | None = None, force_dense: bool = False):
+    """Returns (y, aux_loss)."""
+    if cfg.mlp_kind == "rwkv":
+        xs = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1] if x_prev is None else x_prev
+        return mlpmod.rwkv_channel_mix_fwd(cfg, p, x, xs), 0.0
+    if cfg.mlp_kind == "moe" and not force_dense and "router" in p:
+        return _moe_fwd(cfg, p, x, ctx)
+    return mlpmod.mlp_fwd(cfg, p, x, sc_key=ctx.rng), 0.0
+
+
+# ------------------------------- train-path blocks --------------------------------
+
+def _mixer_train(cfg: ModelConfig, kind: str, p: dict, x: jax.Array,
+                 positions: jax.Array, ctx: RunCtx, *, causal: bool = True):
+    if kind in ("attn", "local_attn"):
+        return att.gqa_train(cfg, p, x, positions, is_local=(kind == "local_attn"),
+                             causal=causal)
+    if kind == "mla":
+        return att.mla_train(cfg, p, x, positions)
+    if kind == "rglru":
+        return rec.rglru_train(cfg, p, x)
+    if kind == "rwkv":
+        return rec.rwkv_train(cfg, p, x)
+    raise ValueError(kind)
+
+
+def block_train(cfg: ModelConfig, kind: str, p: dict, x: jax.Array,
+                positions: jax.Array, ctx: RunCtx, *, causal: bool = True,
+                enc_kv=None, force_dense_mlp: bool = False):
+    """Pre-norm residual block; returns (x, aux_loss)."""
+    h = rms_norm(x, p["mixer"]["ln"])
+    x = x + _mixer_train(cfg, kind, p["mixer"], h, positions, ctx, causal=causal)
+    x = shard(x, ctx.act_spec)
+    if enc_kv is not None and "cross" in p:
+        h = rms_norm(x, p["cross"]["ln"])
+        x = x + att.cross_attend(cfg, p["cross"], h, enc_kv)
+    h = rms_norm(x, p["mlp"]["ln"])
+    y, aux = _mlp_fwd(cfg, p["mlp"], h, ctx, force_dense=force_dense_mlp)
+    x = shard(x + y, ctx.act_spec)
+    return x, aux
+
+
+def _maybe_remat(cfg: ModelConfig, fn: Callable) -> Callable:
+    if cfg.remat == "none":
+        return fn
+    policy = None
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint(fn, policy=policy)
+
+
+def decoder_stack(cfg: ModelConfig, params: dict, x: jax.Array,
+                  positions: jax.Array, ctx: RunCtx, enc_kv=None):
+    """Apply prefix -> scanned units -> suffix.  Returns (x, aux_loss)."""
+    plan = stack_plan(cfg)
+    lp = params["layers"]
+    aux_total = 0.0
+
+    for kind, p in zip(plan.prefix, lp["prefix"]):
+        x, aux = block_train(cfg, kind, p, x, positions, ctx, enc_kv=enc_kv,
+                             force_dense_mlp=True)
+        aux_total += aux
+
+    if plan.n_units > 0:
+        def unit(x, unit_p):
+            aux_u = 0.0
+            for j, kind in enumerate(plan.pattern):
+                x, aux = block_train(cfg, kind, unit_p[f"p{j}"], x, positions,
+                                     ctx, enc_kv=enc_kv)
+                aux_u += aux
+            return x, aux_u
+
+        unit = _maybe_remat(cfg, unit)
+
+        def scan_body(x, unit_p):
+            x, aux_u = unit(x, unit_p)
+            return x, aux_u
+
+        x, aux_units = jax.lax.scan(scan_body, x, lp["scan"])
+        aux_total += jnp.sum(aux_units) if plan.n_units else 0.0
+
+    for kind, p in zip(plan.suffix, lp["suffix"]):
+        x, aux = block_train(cfg, kind, p, x, positions, ctx, enc_kv=enc_kv)
+        aux_total += aux
+    return x, aux_total
+
+
+def encoder_stack(cfg: ModelConfig, params: dict, frames: jax.Array,
+                  ctx: RunCtx) -> jax.Array:
+    """Whisper-style encoder over precomputed frame embeddings (B, T, D)."""
+    enc = params["encoder"]
+    x = frames + enc["pos_emb"][None, : frames.shape[1]].astype(frames.dtype)
+    positions = jnp.arange(frames.shape[1], dtype=jnp.int32)
+
+    def body(x, p):
+        pp = p["p0"]
+        h = rms_norm(x, pp["mixer"]["ln"])
+        x = x + att.gqa_train(cfg, pp["mixer"], h, positions, is_local=False,
+                              causal=False)
+        h = rms_norm(x, pp["mlp"]["ln"])
+        x = shard(x + mlpmod.mlp_fwd(cfg, pp["mlp"], h), ctx.act_spec)
+        return x, None
+
+    x, _ = jax.lax.scan(_maybe_remat(cfg, lambda x, p: body(x, p)), x, enc["layers"])
+    return rms_norm(x, enc["final_ln"])
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            ctx: RunCtx = RunCtx(), frames: jax.Array | None = None):
+    """Training forward: tokens (B, S) -> logits (B, S, V); returns aux loss.
+
+    For encoder-decoder models ``frames`` are the stub frontend embeddings.
+    """
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens] * jnp.asarray(
+        cfg.d_model ** 0.5, cfg.dtype)
+    x = shard(x, ctx.act_spec)
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    enc_kv = None
+    if cfg.is_encoder_decoder:
+        assert frames is not None, "enc-dec model needs frontend frames"
+        enc_out = encoder_stack(cfg, params, frames.astype(cfg.dtype), ctx)
+        # Precompute the cross K/V once; all decoder layers share dims but
+        # have their own cross projections, so pass enc_out down instead.
+        enc_kv = enc_out
+
+    if cfg.is_encoder_decoder:
+        x, aux = _encdec_decoder(cfg, params, x, positions, ctx, enc_kv)
+    else:
+        x, aux = decoder_stack(cfg, params, x, positions, ctx)
+    x = rms_norm(x, params["final_ln"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(cfg.dtype))
+    return logits, aux
+
+
+def _encdec_decoder(cfg, params, x, positions, ctx, enc_out):
+    """Decoder stack for enc-dec: per-layer cross-attention K/V from enc_out."""
+    plan = stack_plan(cfg)
+    lp = params["layers"]
+
+    def unit(x, unit_p):
+        for j, kind in enumerate(plan.pattern):
+            p = unit_p[f"p{j}"]
+            ekv = att.encode_cross_kv(cfg, p["cross"], enc_out)
+            x, _ = block_train(cfg, kind, p, x, positions, ctx, enc_kv=ekv)
+        return x, None
+
+    x, _ = jax.lax.scan(_maybe_remat(cfg, unit), x, lp["scan"])
+    for kind, p in zip(plan.suffix, lp["suffix"]):
+        ekv = att.encode_cross_kv(cfg, p["cross"], enc_out)
+        x, _ = block_train(cfg, kind, p, x, positions, ctx, enc_kv=ekv)
+    return x, 0.0
+
+
+# ------------------------------- decode path --------------------------------------
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, seq: int,
+                     dtype=jnp.bfloat16) -> dict:
+    if kind in ("attn", "local_attn"):
+        c = att.init_kv_cache(cfg, batch, seq, is_local=(kind == "local_attn"),
+                              dtype=dtype)
+        return {"kv": c}
+    if kind == "mla":
+        return {"mla": att.init_mla_cache(cfg, batch, seq, dtype=dtype)}
+    if kind == "rglru":
+        return {"rec": rec.init_rglru_state(cfg, batch)}
+    if kind == "rwkv":
+        return {"rec": rec.init_rwkv_state(cfg, batch),
+                "cm_prev": jnp.zeros((batch, cfg.d_model), dtype)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Stacked cache tree mirroring the parameter layout."""
+    plan = stack_plan(cfg)
+
+    def stacked(kind):
+        one = init_layer_cache(cfg, kind, batch, seq, dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (plan.n_units,) + a.shape), one)
+
+    return {
+        "scan": {f"p{j}": stacked(k) for j, k in enumerate(plan.pattern)},
+        "prefix": [init_layer_cache(cfg, k, batch, seq, dtype)
+                   for k in plan.prefix],
+        "suffix": [init_layer_cache(cfg, k, batch, seq, dtype)
+                   for k in plan.suffix],
+    }
+
+
+def _mixer_decode(cfg, kind, p, x, pos, cache, ctx):
+    if kind in ("attn", "local_attn"):
+        y, kv = att.gqa_decode(cfg, p, x, pos, cache["kv"],
+                               is_local=(kind == "local_attn"))
+        return y, {"kv": kv}
+    if kind == "mla":
+        y, c = att.mla_decode(cfg, p, x, pos, cache["mla"])
+        return y, {"mla": c}
+    if kind == "rglru":
+        y, st = rec.rglru_decode(cfg, p, x, cache["rec"])
+        return y, {"rec": st}
+    if kind == "rwkv":
+        y, st = rec.rwkv_decode(cfg, p, x, cache["rec"])
+        return y, {"rec": st, "cm_prev": cache["cm_prev"]}
+    raise ValueError(kind)
+
+
+def block_decode(cfg, kind, p, x, pos, cache, ctx, enc_out=None,
+                 force_dense_mlp=False):
+    h = rms_norm(x, p["mixer"]["ln"])
+    y, new_cache = _mixer_decode(cfg, kind, p["mixer"], h, pos, cache, ctx)
+    x = shard(x + y, ctx.act_spec)
+    if enc_out is not None and "cross" in p:
+        h = rms_norm(x, p["cross"]["ln"])
+        ekv = att.encode_cross_kv(cfg, p["cross"], enc_out)
+        x = x + att.cross_attend(cfg, p["cross"], h, ekv)
+    h = rms_norm(x, p["mlp"]["ln"])
+    if cfg.mlp_kind == "rwkv":
+        y, _ = _mlp_fwd(cfg, p["mlp"], h, ctx, x_prev=new_cache["cm_prev"][:, None])
+        new_cache = dict(new_cache, cm_prev=h[:, 0])
+    else:
+        y, _ = _mlp_fwd(cfg, p["mlp"], h, ctx, force_dense=force_dense_mlp)
+    return shard(x + y, ctx.act_spec), new_cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                pos: jax.Array, cache: dict, ctx: RunCtx = RunCtx(),
+                enc_out: jax.Array | None = None):
+    """One decode step: tokens (B, 1), pos scalar -> logits (B, 1, V), cache."""
+    plan = stack_plan(cfg)
+    lp = params["layers"]
+    x = params["embed"].astype(cfg.dtype)[tokens] * jnp.asarray(
+        cfg.d_model ** 0.5, cfg.dtype)
+
+    for kind, p, i in zip(plan.prefix, lp["prefix"], range(len(plan.prefix))):
+        x, cache["prefix"][i] = block_decode(cfg, kind, p, x, pos,
+                                             cache["prefix"][i], ctx, enc_out,
+                                             force_dense_mlp=True)
+
+    if plan.n_units > 0:
+        def scan_body(x, xs):
+            unit_p, unit_c = xs
+            new_c = {}
+            for j, kind in enumerate(plan.pattern):
+                x, new_c[f"p{j}"] = block_decode(cfg, kind, unit_p[f"p{j}"], x,
+                                                 pos, unit_c[f"p{j}"], ctx,
+                                                 enc_out)
+            return x, new_c
+
+        x, new_scan = jax.lax.scan(scan_body, x, (lp["scan"], cache["scan"]))
+        cache = dict(cache, scan=new_scan)
+
+    for off, (kind, p) in enumerate(zip(plan.suffix, lp["suffix"])):
+        x, cache["suffix"][off] = block_decode(cfg, kind, p, x, pos,
+                                               cache["suffix"][off], ctx, enc_out)
+
+    x = rms_norm(x, params["final_ln"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(cfg.dtype))
+    return logits, cache
+
+
+# ------------------------------- prefill path -------------------------------------
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            ctx: RunCtx = RunCtx(), frames: jax.Array | None = None):
+    """Full-prompt forward that returns (last-token logits, filled caches).
+
+    Implemented as the train-path forward with per-layer cache extraction —
+    the caches come back sized to the prompt length (the decode entry point
+    then appends within the same buffers).
+    """
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens] * jnp.asarray(
+        cfg.d_model ** 0.5, cfg.dtype)
+    x = shard(x, ctx.act_spec)
+    positions = jnp.arange(s, dtype=jnp.int32)
+    plan = stack_plan(cfg)
+    lp = params["layers"]
+
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        assert frames is not None
+        enc_out = encoder_stack(cfg, params, frames.astype(cfg.dtype), ctx)
+
+    def fill_block(kind, p, x, force_dense_mlp=False):
+        h = rms_norm(x, p["mixer"]["ln"])
+        y, c = _mixer_prefill(cfg, kind, p["mixer"], h, positions, ctx)
+        x = shard(x + y, ctx.act_spec)
+        if enc_out is not None and "cross" in p:
+            hh = rms_norm(x, p["cross"]["ln"])
+            ekv = att.encode_cross_kv(cfg, p["cross"], enc_out)
+            x = x + att.cross_attend(cfg, p["cross"], hh, ekv)
+        h = rms_norm(x, p["mlp"]["ln"])
+        if cfg.mlp_kind == "rwkv":
+            y, _ = _mlp_fwd(cfg, p["mlp"], h, ctx)
+            c = dict(c, cm_prev=h[:, -1])
+        else:
+            y, _ = _mlp_fwd(cfg, p["mlp"], h, ctx, force_dense=force_dense_mlp)
+        return shard(x + y, ctx.act_spec), c
+
+    cache: dict[str, Any] = {"prefix": [], "suffix": []}
+    for kind, p in zip(plan.prefix, lp["prefix"]):
+        x, c = fill_block(kind, p, x, force_dense_mlp=True)
+        cache["prefix"].append(c)
+
+    if plan.n_units > 0:
+        def scan_body(x, unit_p):
+            cs = {}
+            for j, kind in enumerate(plan.pattern):
+                x, cs[f"p{j}"] = fill_block(kind, unit_p[f"p{j}"], x)
+            return x, cs
+
+        x, cache["scan"] = jax.lax.scan(scan_body, x, lp["scan"])
+    else:
+        cache["scan"] = {}
+
+    for kind, p in zip(plan.suffix, lp["suffix"]):
+        x, c = fill_block(kind, p, x)
+        cache["suffix"].append(c)
+
+    x = rms_norm(x, params["final_ln"][None] if False else params["final_ln"])
+    last = x[:, -1:]
+    logits = jnp.einsum("bsd,dv->bsv", last, params["head"].astype(cfg.dtype))
+    return logits, cache
+
+
+def _mixer_prefill(cfg, kind, p, x, positions, ctx):
+    """Mixer forward over the prompt + cache extraction."""
+    s = x.shape[1]
+    if kind in ("attn", "local_attn"):
+        is_local = kind == "local_attn"
+        q, k, v = att.qkv_proj(cfg, p, x, positions)
+        window = cfg.local_window if is_local else None
+        y = att.attend_chunked(q, k, v, positions, positions, causal=True,
+                               window=window, softmax_scale=cfg.qk_head_dim ** -0.5)
+        y = jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(x.dtype))
+        if is_local:
+            w = min(cfg.local_window, s)
+            k_r = jnp.roll(k[:, s - w:], s % w if w else 0, axis=1)
+            v_r = jnp.roll(v[:, s - w:], s % w if w else 0, axis=1)
+            return y, {"kv": att.KVCache(k_r.astype(jnp.bfloat16),
+                                         v_r.astype(jnp.bfloat16))}
+        return y, {"kv": att.KVCache(k.astype(jnp.bfloat16),
+                                     v.astype(jnp.bfloat16))}
+    if kind == "mla":
+        # Recompute the compressed stream (cheap) for the cache.
+        y = att.mla_train(cfg, p, x, positions)
+        ckv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(x.dtype))
+        c_kv = rms_norm(ckv[..., :cfg.kv_lora_rank], p["kv_ln"])
+        from .common import rope as _rope
+        k_rope = _rope(ckv[..., None, cfg.kv_lora_rank:], positions,
+                       cfg.rope_theta)[:, :, 0]
+        return y, {"mla": att.MLACache(c_kv.astype(jnp.bfloat16),
+                                       k_rope.astype(jnp.bfloat16))}
+    if kind == "rglru":
+        y, st = rec.rglru_prefill(cfg, p, x)
+        return y, {"rec": st}
+    if kind == "rwkv":
+        y, st = rec.rwkv_prefill(cfg, p, x)
+        return y, {"rec": st}
+    raise ValueError(kind)

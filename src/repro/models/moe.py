@@ -1,0 +1,166 @@
+"""Mixture-of-Experts with expert parallelism (DeepSeek-V2 / Llama-4 style).
+
+Two execution paths with identical math:
+  * ``moe_dense`` — reference path (no mesh): every expert computes every
+    token, masked combine.  Used for single-device smoke tests and as the
+    numerical oracle for the EP path.
+  * ``moe_ep``    — production path: capacity-bucketed token dispatch inside
+    ``shard_map``, experts sharded over the ``model`` mesh axis, with explicit
+    ``all_to_all`` dispatch/combine collectives (the pattern the multi-pod
+    dry-run must exhibit for MoE architectures).
+
+Routing: softmax router, top-k token choice, optional shared experts
+(always-on dense experts, DeepSeek).  Capacity: C = ceil(T_local * k / E * cf);
+overflowed tokens are dropped (their combine weight is zero) — standard
+GShard semantics; the load-balance auxiliary loss discourages overflow.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as PS
+
+from .common import P, ModelConfig
+
+
+def moe_params(cfg: ModelConfig) -> dict:
+    d, e, fe = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    p = {
+        "router": P((d, e), ("embed", None)),
+        "w_in": P((e, d, fe), ("experts", "embed", "expert_mlp")),
+        "w_gate": P((e, d, fe), ("experts", "embed", "expert_mlp")),
+        "w_out": P((e, fe, d), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.d_ff_expert * cfg.n_shared_experts
+        p["shared_in"] = P((d, fs), ("embed", "mlp"))
+        p["shared_gate"] = P((d, fs), ("embed", "mlp"))
+        p["shared_out"] = P((fs, d), ("mlp", "embed"))
+    return p
+
+
+def _expert_ffn(w_in, w_gate, w_out, x):
+    """SwiGLU expert: x (E, C, d) with per-expert weights (E, d, f)."""
+    h = jnp.einsum("ecd,edf->ecf", x, w_in)
+    g = jnp.einsum("ecd,edf->ecf", x, w_gate)
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, w_out)
+
+
+def _route(cfg: ModelConfig, router_w, x_tokens):
+    """x_tokens (T, d) -> (weights (T,k), experts (T,k), aux_loss)."""
+    logits = jnp.einsum("td,de->te", x_tokens.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(probs, cfg.top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # Load-balance loss (Switch): E * sum_e f_e * P_e
+    e = cfg.n_experts
+    onehot = jax.nn.one_hot(experts[:, 0], e)           # primary assignment
+    f = onehot.mean(0)
+    p_mean = probs.mean(0)
+    aux = e * jnp.sum(f * p_mean)
+    return weights, experts, aux
+
+
+def moe_dense(cfg: ModelConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Reference/smoke path: all experts on all tokens, masked combine."""
+    b, s, d = x.shape
+    t = x.reshape(b * s, d)
+    weights, experts, aux = _route(cfg, p["router"], t)
+    dt = x.dtype
+    h = jnp.einsum("td,edf->etf", t, p["w_in"].astype(dt))
+    g = jnp.einsum("td,edf->etf", t, p["w_gate"].astype(dt))
+    y_all = jnp.einsum("etf,efd->etd", jax.nn.silu(g) * h, p["w_out"].astype(dt))
+    combine = jnp.zeros((t.shape[0], cfg.n_experts), jnp.float32)
+    for j in range(cfg.top_k):
+        combine = combine + weights[:, j:j + 1] * jax.nn.one_hot(experts[:, j],
+                                                                 cfg.n_experts)
+    y = jnp.einsum("etd,te->td", y_all.astype(jnp.float32), combine)
+    y = y.astype(dt) + _shared(cfg, p, t)
+    return y.reshape(b, s, d), aux
+
+
+def _shared(cfg: ModelConfig, p: dict, t: jax.Array) -> jax.Array:
+    if not cfg.n_shared_experts:
+        return jnp.zeros_like(t)
+    h = t @ p["shared_in"].astype(t.dtype)
+    g = t @ p["shared_gate"].astype(t.dtype)
+    return (jax.nn.silu(g) * h) @ p["shared_out"].astype(t.dtype)
+
+
+def moe_ep(cfg: ModelConfig, p: dict, x: jax.Array, mesh: Mesh,
+           data_axes: tuple[str, ...], model_axis: str = "model"
+           ) -> tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE via shard_map + all_to_all.
+
+    x is sharded (batch over ``data_axes``); expert weights are sharded over
+    ``model_axis``.  Inside the per-device block:
+      route -> capacity-bucket by expert -> all_to_all (tokens to expert
+      owners) -> local expert FFN -> all_to_all back -> weighted combine.
+    """
+    ep = mesh.shape[model_axis]
+    e_total = cfg.n_experts
+    assert e_total % ep == 0, (e_total, ep)
+    batch_spec = PS(data_axes, None, None)
+
+    e_local = e_total // ep
+
+    def block(router_w, w_in, w_gate, w_out, x_local):
+        bl, s, d = x_local.shape
+        t = x_local.reshape(bl * s, d)
+        n_tok = t.shape[0]
+        weights, experts, aux = _route(cfg, router_w, t)
+        cap = int(n_tok * cfg.top_k * cfg.capacity_factor / e_total) + 1
+
+        # Flatten (token, k) assignments, bucket by expert with capacity.
+        flat_e = experts.reshape(-1)                       # (T*k,)
+        flat_t = jnp.repeat(jnp.arange(n_tok), cfg.top_k)
+        flat_w = weights.reshape(-1)
+        order = jnp.argsort(flat_e)                        # stable
+        se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+        # Position of each assignment within its expert bucket.
+        pos_in_e = jnp.arange(se.shape[0]) - jnp.searchsorted(se, se, side="left")
+        keep = pos_in_e < cap
+        slot = jnp.where(keep, se * cap + pos_in_e, e_total * cap)  # overflow bin
+        # Gather tokens into (E*cap, d) buffer (+1 overflow row, dropped).
+        buf = jnp.zeros((e_total * cap + 1, d), t.dtype).at[slot].set(t[st])
+        buf = buf[:-1].reshape(ep, e_local, cap, d)
+
+        # Dispatch all_to_all (tiled): device j keeps its e_local experts and
+        # receives cap slots from every source device -> (e_local, cap*ep, d).
+        buf = jax.lax.all_to_all(buf, model_axis, split_axis=0, concat_axis=2,
+                                 tiled=True)[0]
+        y_loc = _expert_ffn(w_in, w_gate, w_out, buf)      # local expert shard
+        # Combine all_to_all: route each cap-block back to its source device.
+        y = jax.lax.all_to_all(y_loc[None], model_axis, split_axis=2,
+                               concat_axis=0, tiled=True)  # (ep, e_local, cap, d)
+        y_buf = y.reshape(e_total * cap, d)
+        y_buf = jnp.concatenate([y_buf, jnp.zeros((1, d), y_buf.dtype)], 0)
+
+        # Scatter back: each kept assignment contributes weight * expert-out.
+        contrib = y_buf[slot].astype(jnp.float32) * (sw * keep)[:, None]
+        y = jnp.zeros((n_tok, d), jnp.float32).at[st].add(contrib)
+        y = y.astype(t.dtype)
+        if cfg.n_shared_experts:
+            y = y + _shared(cfg, {"shared_in": shared_in,
+                                  "shared_gate": shared_gate,
+                                  "shared_out": shared_out}, t)
+        aux = jax.lax.pmean(aux, data_axes + (model_axis,))
+        return y.reshape(bl, s, d), aux
+
+    # Shared-expert weights ride along when present.
+    if cfg.n_shared_experts:
+        shared_in, shared_gate, shared_out = (p["shared_in"], p["shared_gate"],
+                                              p["shared_out"])
+    else:
+        shared_in = shared_gate = shared_out = None
+
+    fn = shard_map(
+        block, mesh=mesh,
+        in_specs=(PS(), PS(model_axis), PS(model_axis), PS(model_axis),
+                  batch_spec),
+        out_specs=(batch_spec, PS()),
+        check_vma=False,
+    )
+    return fn(p["router"], p["w_in"], p["w_gate"], p["w_out"], x)

@@ -1,0 +1,289 @@
+"""Recurrent sequence mixers: RG-LRU (Griffin/RecurrentGemma) and RWKV-6.
+
+Both are implemented with *parallel* training paths (associative scan for the
+RG-LRU's diagonal linear recurrence; stable chunked matmul form for RWKV-6's
+data-dependent-decay WKV) and O(1)-state decode paths — these are the
+sub-quadratic architectures that run the long_500k shape (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import P, ModelConfig
+
+RGLRU_C = 8.0
+RWKV_CHUNK = 32
+RWKV_LOGW_CLIP = 0.45   # bounds per-chunk exp range: C * clip < 15 (fp32-safe)
+RWKV_LORA_DIM = 64
+
+
+# ================================= RG-LRU ==========================================
+
+class RGLRUState(NamedTuple):
+    h: jax.Array            # (B, d_rnn) recurrent state
+    conv: jax.Array         # (B, conv_width-1, d_rnn) conv tail
+
+
+def rglru_params(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dr = cfg.rglru_width or d
+    return {
+        "ln": P((d,), ("embed",), init="zeros"),
+        "w_gelu": P((d, dr), ("embed", "mlp")),
+        "w_rec": P((d, dr), ("embed", "mlp")),
+        "conv_w": P((cfg.conv_width, dr), (None, "mlp")),
+        "conv_b": P((dr,), ("mlp",), init="zeros"),
+        "w_a": P((dr, dr), (None, "mlp")),
+        "b_a": P((dr,), ("mlp",), init="zeros"),
+        "w_i": P((dr, dr), (None, "mlp")),
+        "b_i": P((dr,), ("mlp",), init="zeros"),
+        "lam": P((dr,), ("mlp",), init="rglru_a"),
+        "w_out": P((dr, d), ("mlp", "embed")),
+    }
+
+
+def _rglru_core(p: dict, u: jax.Array, h0: jax.Array | None):
+    """Diagonal linear recurrence h_t = a_t h_{t-1} + sqrt(1-a^2) (i_t * u_t).
+
+    u: (B, S, dr).  Parallelized with an associative scan over S.
+    """
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", u, p["w_a"].astype(u.dtype))
+                       + p["b_a"].astype(u.dtype))
+    i = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", u, p["w_i"].astype(u.dtype))
+                       + p["b_i"].astype(u.dtype))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u).astype(jnp.float32)
+    if h0 is not None:
+        # Fold the carried state in as a virtual step 0.
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        gated = jnp.concatenate([h0[:, None].astype(jnp.float32), gated], axis=1)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h.astype(u.dtype)
+
+
+def rglru_train(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    """Griffin recurrent block: GeLU branch x (conv -> RG-LRU) branch."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gelu"].astype(x.dtype)))
+    u = jnp.einsum("bsd,de->bse", x, p["w_rec"].astype(x.dtype))
+    # Depthwise causal conv, width cfg.conv_width.
+    kw = p["conv_w"].shape[0]
+    pad = jnp.pad(u, ((0, 0), (kw - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + u.shape[1]] * p["conv_w"][i].astype(u.dtype)
+               for i in range(kw)) + p["conv_b"].astype(u.dtype)
+    h = _rglru_core(p, conv, None)
+    return jnp.einsum("bse,ed->bsd", gate * h, p["w_out"].astype(x.dtype))
+
+
+def rglru_prefill(cfg: ModelConfig, p: dict, x: jax.Array
+                  ) -> tuple[jax.Array, RGLRUState]:
+    """Train-path forward + final recurrent state (for decode continuation)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gelu"].astype(x.dtype)))
+    u = jnp.einsum("bsd,de->bse", x, p["w_rec"].astype(x.dtype))
+    kw = p["conv_w"].shape[0]
+    pad = jnp.pad(u, ((0, 0), (kw - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + u.shape[1]] * p["conv_w"][i].astype(u.dtype)
+               for i in range(kw)) + p["conv_b"].astype(u.dtype)
+    h = _rglru_core(p, conv, None)
+    y = jnp.einsum("bse,ed->bsd", gate * h, p["w_out"].astype(x.dtype))
+    state = RGLRUState(h[:, -1].astype(jnp.float32),
+                       u[:, -(kw - 1):].astype(jnp.float32))
+    return y, state
+
+
+def rglru_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+                 state: RGLRUState) -> tuple[jax.Array, RGLRUState]:
+    """One-token step. x (B,1,D)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gelu"].astype(x.dtype)))
+    u = jnp.einsum("bsd,de->bse", x, p["w_rec"].astype(x.dtype))[:, 0]
+    kw = p["conv_w"].shape[0]
+    window = jnp.concatenate([state.conv, u[:, None]], axis=1)  # (B, kw, dr)
+    conv = (sum(window[:, i] * p["conv_w"][i].astype(u.dtype) for i in range(kw))
+            + p["conv_b"].astype(u.dtype))
+    r = jax.nn.sigmoid(conv @ p["w_a"].astype(u.dtype) + p["b_a"].astype(u.dtype))
+    i = jax.nn.sigmoid(conv @ p["w_i"].astype(u.dtype) + p["b_i"].astype(u.dtype))
+    a = jnp.exp(-RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32))
+                * r.astype(jnp.float32))
+    h = a * state.h.astype(jnp.float32) + \
+        jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * (i * conv).astype(jnp.float32)
+    y = jnp.einsum("be,ed->bd", (gate[:, 0] * h.astype(x.dtype)),
+                   p["w_out"].astype(x.dtype))
+    return y[:, None], RGLRUState(h.astype(state.h.dtype), window[:, 1:])
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> RGLRUState:
+    dr = cfg.rglru_width or cfg.d_model
+    return RGLRUState(jnp.zeros((batch, dr), dtype),
+                      jnp.zeros((batch, cfg.conv_width - 1, dr), dtype))
+
+
+# ================================= RWKV-6 ==========================================
+
+class RWKVState(NamedTuple):
+    x_prev: jax.Array        # (B, D) previous token embedding (token shift)
+    s: jax.Array             # (B, H, dk, dv) WKV state
+
+
+def rwkv_params(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    return {
+        "ln": P((d,), ("embed",), init="zeros"),
+        "mu_r": P((d,), ("embed",), init="zeros"),
+        "mu_k": P((d,), ("embed",), init="zeros"),
+        "mu_v": P((d,), ("embed",), init="zeros"),
+        "mu_w": P((d,), ("embed",), init="zeros"),
+        "mu_g": P((d,), ("embed",), init="zeros"),
+        "w_r": P((d, h, hd), ("embed", "heads", "head_dim")),
+        "w_k": P((d, h, hd), ("embed", "heads", "head_dim")),
+        "w_v": P((d, h, hd), ("embed", "heads", "head_dim")),
+        "w_g": P((d, d), ("embed", "mlp")),
+        "w0": P((d,), ("embed",), init="zeros", scale=0.1),
+        "w_lora_a": P((d, RWKV_LORA_DIM), ("embed", None)),
+        "w_lora_b": P((RWKV_LORA_DIM, d), (None, "embed")),
+        "u": P((h, hd), ("heads", "head_dim"), scale=0.5),
+        "gn": P((d,), ("embed",), init="zeros"),
+        "w_o": P((d, d), ("mlp", "embed")),
+    }
+
+
+def _rwkv_proj(cfg: ModelConfig, p: dict, x: jax.Array, x_shift: jax.Array):
+    """Token-shifted projections.  x, x_shift: (B, S, D)."""
+    def mix(mu):
+        m = p[mu].astype(x.dtype)
+        return x + (x_shift - x) * m
+
+    hd = cfg.rwkv_head_dim
+    h = cfg.d_model // hd
+    r = jnp.einsum("bsd,dhk->bshk", mix("mu_r"), p["w_r"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", mix("mu_k"), p["w_k"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", mix("mu_v"), p["w_v"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", mix("mu_g"), p["w_g"].astype(x.dtype)))
+    # Data-dependent decay (the Finch hallmark): w = exp(-exp(raw)), clipped
+    # for chunked fp32 stability (RWKV_LOGW_CLIP, see module docstring).
+    raw = (p["w0"].astype(jnp.float32)
+           + jnp.tanh(jnp.einsum("bsd,dl->bsl", mix("mu_w").astype(jnp.float32),
+                                 p["w_lora_a"].astype(jnp.float32)))
+           @ p["w_lora_b"].astype(jnp.float32))
+    log_w = -jnp.exp(jnp.clip(raw, -8.0, RWKV_LOGW_CLIP))   # (B,S,D) negative
+    log_w = log_w.reshape(log_w.shape[:2] + (h, hd))
+    return r, k, v, g, log_w
+
+
+def rwkv_train(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    y, _ = rwkv_prefill(cfg, p, x)
+    return y
+
+
+def rwkv_prefill(cfg: ModelConfig, p: dict, x: jax.Array
+                 ) -> tuple[jax.Array, RWKVState]:
+    """Chunked-parallel WKV over the full sequence.
+
+    out_t = r_t @ (S_{t-1}) + (r_t . u . k_t) v_t ;  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Within a chunk of C tokens, with L_t = cumsum(log w) (L_0 = 0):
+      q~_t = r_t * exp(L_{t-1}) ; k~_s = k_s * exp(-L_s)
+      intra = strict_lower(q~ K~^T) V + diag(sum(r*u*k)) V
+      carry: S' = exp(L_C) * (S + k~^T V) ... per dk-channel row scale.
+    """
+    b, s_orig, d = x.shape
+    x_shift = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, log_w = _rwkv_proj(cfg, p, x, x_shift)
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    c = min(RWKV_CHUNK, s_orig)
+    # Pad to a chunk multiple: pad tokens get k=0 (no state contribution) and
+    # log_w=0 (no decay), so the carried state is exact at position s_orig.
+    pad = (-s_orig) % c
+    if pad:
+        pw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, pw)
+        k = jnp.pad(k, pw)
+        v = jnp.pad(v, pw)
+        log_w = jnp.pad(log_w.reshape(b, s_orig, h, hd), pw)
+        log_w = log_w.reshape(b, s_orig + pad, h, hd)
+    s = s_orig + pad
+    nc = s // c
+
+    def resh(t):  # (B,S,H,hd) -> (nc, B, H, C, hd)
+        return t.reshape(b, nc, c, h, hd).transpose(1, 0, 3, 2, 4)
+
+    r_, k_, v_ = resh(r.astype(jnp.float32)), resh(k.astype(jnp.float32)), resh(v.astype(jnp.float32))
+    lw = resh(log_w)
+    u = p["u"].astype(jnp.float32)
+
+    big_l = jnp.cumsum(lw, axis=-2)                     # inclusive (.., C, hd)
+    l_prev = big_l - lw                                 # exclusive
+    q_t = r_ * jnp.exp(l_prev)
+    k_t = k_ * jnp.exp(-big_l)
+    bonus = jnp.einsum("nbhck,hk,nbhck->nbhc", r_, u, k_)
+    tri = jnp.tril(jnp.ones((c, c), bool), -1)
+
+    def chunk_step(s_state, xs):
+        q_c, k_c, v_c, kt_c, lC, bon, r_c = xs
+        inter = jnp.einsum("bhck,bhkv->bhcv", q_c, s_state)
+        scores = jnp.einsum("bhck,bhsk->bhcs", q_c, kt_c)
+        scores = jnp.where(tri[None, None], scores, 0.0)
+        intra = jnp.einsum("bhcs,bhsv->bhcv", scores, v_c)
+        out_c = inter + intra + bon[..., None] * v_c
+        s_new = jnp.exp(lC)[..., :, None] * (
+            s_state + jnp.einsum("bhsk,bhsv->bhkv", kt_c, v_c))
+        return s_new, out_c
+
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    s_final, outs = jax.lax.scan(
+        chunk_step, s0,
+        (q_t, k_, v_, k_t, big_l[..., -1, :], bonus, r_))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, s, h, hd)[:, :s_orig]
+    out = _rwkv_groupnorm(cfg, p, out)
+    out = out.reshape(b, s_orig, d) * g.astype(jnp.float32)
+    y = jnp.einsum("bsd,de->bse", out.astype(x.dtype), p["w_o"].astype(x.dtype))
+    return y, RWKVState(x[:, -1], s_final.astype(jnp.float32))
+
+
+def _rwkv_groupnorm(cfg: ModelConfig, p: dict, out: jax.Array) -> jax.Array:
+    """Per-head group norm on the WKV output."""
+    mean = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    normed = (out - mean) * jax.lax.rsqrt(var + 1e-5)
+    gamma = (1.0 + p["gn"].astype(jnp.float32)).reshape(
+        1, 1, out.shape[-2], out.shape[-1])
+    return normed * gamma
+
+
+def rwkv_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+                state: RWKVState) -> tuple[jax.Array, RWKVState]:
+    """One-token WKV step. x (B,1,D)."""
+    b, _, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    r, k, v, g, log_w = _rwkv_proj(cfg, p, x, state.x_prev[:, None])
+    r_, k_, v_ = (t[:, 0].astype(jnp.float32) for t in (r, k, v))
+    w = jnp.exp(log_w[:, 0].astype(jnp.float32))               # (B,H,hd)
+    u = p["u"].astype(jnp.float32)
+    s = state.s.astype(jnp.float32)
+    kv = jnp.einsum("bhk,bhv->bhkv", k_, v_)
+    out = jnp.einsum("bhk,bhkv->bhv", r_, s + u[None, :, :, None] * kv)
+    s_new = w[..., None] * s + kv
+    out = _rwkv_groupnorm(cfg, p, out.reshape(b, 1, h, hd))
+    out = out.reshape(b, 1, d) * g.astype(jnp.float32)
+    y = jnp.einsum("bsd,de->bse", out.astype(x.dtype), p["w_o"].astype(x.dtype))
+    return y, RWKVState(x[:, 0], s_new.astype(state.s.dtype))
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> RWKVState:
+    hd = cfg.rwkv_head_dim
+    h = cfg.d_model // hd
+    return RWKVState(jnp.zeros((batch, cfg.d_model), dtype),
+                     jnp.zeros((batch, h, hd, hd), dtype))

@@ -1,0 +1,5 @@
+from .adamw import AdamWState, adamw_init, adamw_update
+from .compress import compress_decompress, error_feedback_update
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update",
+           "compress_decompress", "error_feedback_update"]

@@ -1,0 +1,57 @@
+"""Sharded AdamW: optimizer state trees mirror parameter sharding (FSDP —
+m/v shard exactly like their parameter), global-norm clipping, decoupled
+weight decay, bias correction.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # ()
+    m: Any                   # tree like params
+    v: Any
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads: Any, state: AdamWState, params: Any, *,
+                 lr: float | jax.Array = 3e-4, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0
+                 ) -> tuple[Any, AdamWState]:
+    step = state.step + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-9))
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** step.astype(jnp.float32))
+        vh = v / (1 - b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    # out is a tree of 3-tuples; split it back into three trees.
+    is_triplet = lambda x: isinstance(x, tuple) and len(x) == 3 and not \
+        isinstance(x[0], tuple)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=is_triplet)
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is_triplet)
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=is_triplet)
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)

@@ -1,0 +1,155 @@
+"""SC-inspired stochastically-quantized gradient compression with error
+feedback (beyond-paper application of the paper's stochastic-rounding
+insight, DESIGN.md §6).
+
+The paper generates Bernoulli(p) bits from analog values via MTJ pulse
+programming; the gradient-compression analogue quantizes each gradient to
+``bits`` levels with *stochastic rounding* (unbiased, like the SC encoding),
+all-reduces the narrow representation, and keeps the quantization residual
+as local error feedback so the bias telescopes away across steps.
+
+In-framework use: train/train_step applies compress->psum->decompress to the
+gradient tree when cfg.grad_compress_bits > 0.  On a real fleet this shrinks
+the all-reduce payload by 32/bits; the dry-run records the collective-byte
+reduction in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _stochastic_quantize(g: jax.Array, key: jax.Array, bits: int
+                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """g -> (q_int, scale, residual); unbiased stochastic rounding."""
+    levels = (1 << (bits - 1)) - 1                      # signed range
+    amax = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12)
+    scaled = g / amax * levels                           # [-levels, levels]
+    floor = jnp.floor(scaled)
+    frac = scaled - floor
+    rnd = jax.random.uniform(key, g.shape, g.dtype)
+    q = floor + (rnd < frac)                             # stochastic round
+    q = jnp.clip(q, -levels - 1, levels)
+    deq = q * amax / levels
+    return q.astype(jnp.int8 if bits <= 8 else jnp.int32), amax / levels, g - deq
+
+
+def compress_decompress(grads: Any, key: jax.Array, bits: int,
+                        errors: Any | None = None) -> tuple[Any, Any]:
+    """Quantize (+error feedback in) each leaf; returns (dequantized, new_errors).
+
+    The dequantized tree is what enters the (narrow) all-reduce in
+    train_step; ``new_errors`` must be carried to the next step.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = jax.tree.leaves(errors) if errors is not None else [None] * len(leaves)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    outs, new_errs = [], []
+    for g, e, k in zip(leaves, err_leaves, keys):
+        g32 = g.astype(jnp.float32)
+        if e is not None:
+            g32 = g32 + e
+        q, scale, resid = _stochastic_quantize(g32, k, bits)
+        outs.append((q.astype(jnp.float32) * scale).astype(g.dtype))
+        new_errs.append(resid)
+    return jax.tree.unflatten(treedef, outs), jax.tree.unflatten(treedef, new_errs)
+
+
+def error_feedback_update(errors: Any | None, grads: Any) -> Any:
+    """Initialize the error-feedback tree lazily (zeros like grads)."""
+    if errors is not None:
+        return errors
+    return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+
+def compressed_bytes_ratio(bits: int) -> float:
+    """Payload shrink factor vs fp32 all-reduce."""
+    return bits / 32.0
+
+
+# ----------------------- cross-pod compressed parameter sync ----------------------
+#
+# The pod axis is the slow link (DCN between pods, vs ICI within a pod) —
+# exactly where the paper's stochastic-rounding insight pays: synchronize
+# parameter DELTAS as int8 stochastically-rounded values with error
+# feedback, local-SGD style (each pod runs synchronous FSDP/TP internally;
+# every K steps pods exchange quantized deltas).  The sync runs OUTSIDE
+# autodiff as its own jitted shard_map, so the all-gather on the wire is
+# genuinely int8 — the dry-run measures the byte reduction in HLO.
+
+def make_pod_sync(mesh, pspecs, bits: int = 8, pod_axis: str = "pod"):
+    """Returns sync(params, anchor, err, seed) -> (new_params, new_err).
+
+    ``pspecs``: the parameter PartitionSpec tree (pod axis unmentioned —
+    parameters are replicated across pods, sharded FSDP/TP within a pod).
+    """
+    import numpy as np
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as PS
+
+    n_pods = mesh.shape[pod_axis]
+    levels = (1 << (bits - 1)) - 1
+
+    def body(seed, *flat):
+        k = len(flat) // 3
+        params, anchor, err = flat[:k], flat[k:2 * k], flat[2 * k:]
+        new_p, new_e = [], []
+        for i, (p, a, e) in enumerate(zip(params, anchor, err)):
+            delta = (p - a).astype(jnp.float32) + e
+            amax = jnp.maximum(jnp.max(jnp.abs(delta)), 1e-12)
+            scaled = delta / amax * levels
+            rnd = jax.random.uniform(
+                jax.random.fold_in(jax.random.key(seed[0]), i), p.shape)
+            q = jnp.clip(jnp.floor(scaled) + (rnd < scaled - jnp.floor(scaled)),
+                         -levels - 1, levels).astype(jnp.int8)
+            deq_local = q.astype(jnp.float32) * (amax / levels)
+            new_e.append(delta - deq_local)
+            # int8 all-gather across pods (the only cross-pod traffic) +
+            # per-pod scales, then average the dequantized deltas locally.
+            qs = jax.lax.all_gather(q, pod_axis)                 # (pods, ...)
+            scales = jax.lax.all_gather(amax / levels, pod_axis)  # (pods,)
+            mean_delta = jnp.tensordot(scales, qs.astype(jnp.float32), axes=1) \
+                / n_pods
+            new_p.append((a.astype(jnp.float32) + mean_delta).astype(p.dtype))
+        return tuple(new_p) + tuple(new_e)
+
+    flat_specs, treedef = jax.tree_util.tree_flatten(pspecs)
+    in_specs = (PS(),) + tuple(flat_specs) * 3
+    out_specs = tuple(flat_specs) * 2
+
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=False)
+
+    def sync(params, anchor, err, seed: int):
+        flat_p, _ = jax.tree_util.tree_flatten(params)
+        flat_a, _ = jax.tree_util.tree_flatten(anchor)
+        flat_e, _ = jax.tree_util.tree_flatten(err)
+        out = fn(jnp.asarray([seed], jnp.uint32), *flat_p, *flat_a, *flat_e)
+        k = len(flat_p)
+        new_p = jax.tree_util.tree_unflatten(treedef, out[:k])
+        new_e = jax.tree_util.tree_unflatten(treedef, out[k:])
+        return new_p, new_e
+
+    return sync
+
+
+def make_pod_sync_uncompressed(mesh, pspecs, pod_axis: str = "pod"):
+    """fp32 pmean baseline for the same sync (the all-reduce we replace)."""
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as PS
+
+    def body(*flat):
+        return tuple(jax.lax.pmean(p.astype(jnp.float32), pod_axis).astype(p.dtype)
+                     for p in flat)
+
+    flat_specs, treedef = jax.tree_util.tree_flatten(pspecs)
+    fn = shard_map(body, mesh=mesh, in_specs=tuple(flat_specs),
+                   out_specs=tuple(flat_specs), check_vma=False)
+
+    def sync(params):
+        flat_p, _ = jax.tree_util.tree_flatten(params)
+        return jax.tree_util.tree_unflatten(treedef, fn(*flat_p))
+
+    return sync

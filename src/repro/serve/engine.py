@@ -1,0 +1,76 @@
+"""Serving entry points: prefill and single-token decode, in the shapes the
+assignment's inference cells lower (prefill_32k lowers ``prefill``;
+decode_32k / long_500k lower ``decode_step`` against a seq_len-sized cache).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import RunCtx, decode_step, init_cache, prefill
+from repro.models.common import ModelConfig
+
+
+def make_prefill(cfg: ModelConfig, ctx: RunCtx) -> Callable:
+    def prefill_step(params, tokens, frames=None):
+        logits, cache = prefill(cfg, params, tokens, ctx, frames=frames)
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, ctx: RunCtx) -> Callable:
+    def step(params, tokens, pos, cache, enc_out=None):
+        logits, cache = decode_step(cfg, params, tokens, pos, cache, ctx,
+                                    enc_out=enc_out)
+        return logits, cache
+    return step
+
+
+def greedy_generate(cfg: ModelConfig, params: Any, prompt: jax.Array,
+                    n_new: int, ctx: RunCtx = RunCtx(),
+                    frames: jax.Array | None = None) -> jax.Array:
+    """Reference batched greedy decoding loop (examples/serve_lm.py)."""
+    b, s = prompt.shape
+    _, cache = prefill(cfg, params, prompt, ctx, frames=frames)
+    # Grow prompt-sized caches to s + n_new capacity.
+    from repro.models.attention import KVCache, MLACache
+
+    def grow(c):
+        if isinstance(c, dict):
+            return {k: grow(v) for k, v in c.items()}
+        if isinstance(c, list):
+            return [grow(v) for v in c]
+        if isinstance(c, KVCache):
+            ax = c.k.ndim - 3
+            if c.k.shape[ax] == min(cfg.local_window, s):
+                return c                      # ring cache: fixed size
+            pad = [(0, 0)] * c.k.ndim
+            pad[ax] = (0, n_new)
+            return KVCache(jnp.pad(c.k, pad), jnp.pad(c.v, pad))
+        if isinstance(c, MLACache):
+            ax = c.c_kv.ndim - 2
+            pad = [(0, 0)] * c.c_kv.ndim
+            pad[ax] = (0, n_new)
+            pad_r = [(0, 0)] * c.k_rope.ndim
+            pad_r[ax] = (0, n_new)
+            return MLACache(jnp.pad(c.c_kv, pad), jnp.pad(c.k_rope, pad_r))
+        return c
+
+    cache = grow(cache)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        from repro.models.model import encoder_stack
+        enc_out = encoder_stack(cfg, params, frames.astype(cfg.dtype), ctx)
+
+    step = jax.jit(make_decode_step(cfg, ctx))
+    # Prefill logits are for position s-1 -> they predict token s.
+    logits, _ = prefill(cfg, params, prompt, ctx, frames=frames)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out = [prompt, tok]
+    for i in range(n_new - 1):
+        logits, cache = step(params, tok, jnp.int32(s + i), cache, enc_out)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

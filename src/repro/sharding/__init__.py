@@ -1,0 +1,5 @@
+from .rules import (ShardingRules, batch_axes, cache_pspec_tree, make_rules,
+                    param_pspec_tree, validate_divisibility)
+
+__all__ = ["ShardingRules", "batch_axes", "cache_pspec_tree", "make_rules",
+           "param_pspec_tree", "validate_divisibility"]

@@ -1,0 +1,175 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style, one table).
+
+Parallelism map (single-pod mesh (data=16, model=16); multi-pod adds a
+leading "pod" axis used as outer data parallelism by default):
+
+  * TP  (model): attention heads, kv heads, d_ff columns, experts, vocab.
+  * FSDP (data [+pod]): every weight's `embed` dimension — parameters and
+    optimizer state shard across the data axis; XLA inserts the per-layer
+    all-gathers (one per scan step under scan-over-layers).
+  * EP  (model): MoE experts (explicit all_to_all inside shard_map).
+  * SP  (model): optional sequence sharding of boundary activations
+    (Megatron-SP; a §Perf hillclimb lever — `seq_shard=True`).
+
+Divisibility: any rule whose mesh-axis product does not divide the tensor
+dimension is dropped for that leaf (e.g. whisper's 20 heads on a 16-way model
+axis -> replicated heads; its vocab 51866 -> replicated vocab).  This is
+what lets one table serve all 10 architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as PS
+
+from repro.models.common import P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    rules: dict[str, Any]                  # logical axis -> mesh axis (or tuple)
+    batch: Any                             # mesh axes for the batch dimension
+    seq_shard: bool = False                # Megatron-SP activation sharding
+
+    def act_spec(self) -> PS:
+        """Boundary activation (B, S, D) spec."""
+        if self.seq_shard:
+            return PS(self.batch, "model", None)
+        return PS(self.batch, None, None)
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_rules(mesh: Mesh, *, seq_shard: bool = False,
+               fsdp: bool = True) -> ShardingRules:
+    fs = (("pod", "data") if "pod" in mesh.axis_names else "data") if fsdp else None
+    rules = {
+        "embed": fs,            # FSDP dimension
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "expert_mlp": None,
+        "experts": "model",     # EP
+        "kv_lora": None,
+        "layers": None,         # scan axis — never sharded
+    }
+    return ShardingRules(mesh=mesh, rules=rules, batch=batch_axes(mesh),
+                         seq_shard=seq_shard)
+
+
+def _axis_size(mesh: Mesh, assignment) -> int:
+    if assignment is None:
+        return 1
+    if isinstance(assignment, (tuple, list)):
+        n = 1
+        for a in assignment:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[assignment]
+
+
+def _spec_for(decl: P, sr: ShardingRules) -> PS:
+    entries = []
+    for dim, axis in zip(decl.shape, decl.axes):
+        assignment = sr.rules.get(axis) if axis is not None else None
+        if assignment is not None and dim % _axis_size(sr.mesh, assignment) != 0:
+            assignment = None              # divisibility fallback: replicate
+        entries.append(assignment)
+    return PS(*entries)
+
+
+def param_pspec_tree(skeleton: Any, sr: ShardingRules) -> Any:
+    """P-declaration tree -> PartitionSpec tree under the rules table."""
+    return jax.tree.map(lambda d: _spec_for(d, sr), skeleton,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def validate_divisibility(skeleton: Any, sr: ShardingRules) -> list[str]:
+    """Report leaves where a rule was dropped (for DESIGN/EXPERIMENTS notes)."""
+    notes = []
+
+    def visit(path, decl):
+        for dim, axis in zip(decl.shape, decl.axes):
+            assignment = sr.rules.get(axis) if axis is not None else None
+            if assignment is not None and dim % _axis_size(sr.mesh, assignment) != 0:
+                notes.append(f"{'/'.join(map(str, path))}: {axis}={dim} not "
+                             f"divisible by {assignment} -> replicated")
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, d: visit([getattr(k, 'key', getattr(k, 'idx', k)) for k in p], d),
+        skeleton, is_leaf=lambda x: isinstance(x, P))
+    return notes
+
+
+# ------------------------------ cache sharding -------------------------------------
+
+def cache_pspec_tree(cfg, cache_shapes: Any, sr: ShardingRules,
+                     decode_tp: bool = False) -> Any:
+    """PartitionSpecs for decode caches.
+
+    Policy (DESIGN.md §5):
+      * batch dim -> data axes when divisible (decode_32k B=128), else
+        replicated (long_500k B=1, where seq picks up the data axes too);
+      * KV-head dim -> model when divisible (gemma3 kv=16), else the
+        *sequence* dim shards over model (kv=8/20/1 cases) — the cache is the
+        decode memory hog and must not be replicated on the model axis;
+      * recurrent states (small) -> batch over data only.
+    """
+    mesh = sr.mesh
+    model_n = mesh.shape["model"]
+    data_n = _axis_size(mesh, sr.batch)
+
+    # Cache kinds are identified structurally by their tree path:
+    #   KV cache:  (units?, B, S, KVH, hd);  MLA: (units?, B, S, r|rope);
+    #   recurrent states: (units?, B, ...) — small, batch-sharded only.
+    def visit(path, leaf):
+        shape = leaf.shape
+        names = [getattr(k, 'key', None) or getattr(k, 'name', '') or str(getattr(k, 'idx', ''))
+                 for k in path]
+        joined = "/".join(str(n) for n in names)
+        stacked = "scan" in joined
+        off = 1 if stacked else 0
+        batch_ok = (shape[off] % data_n == 0 if len(shape) > off else False) \
+            and not decode_tp
+        b_axis = sr.batch if batch_ok else None
+        if "kv" in joined or "mla" in joined:
+            # (units?, B, S, ...) tensors
+            entries = [None] * len(shape)
+            if len(shape) > off:
+                entries[off] = b_axis
+            if len(shape) > off + 1:
+                seq_entries = []
+                if not batch_ok:
+                    seq_entries.extend(sr.batch if isinstance(sr.batch, tuple)
+                                       else (sr.batch,))
+                kvh_ok = (len(shape) == off + 4 and shape[off + 2] % model_n == 0
+                          and not decode_tp)
+                if kvh_ok:
+                    entries[off + 2] = "model"
+                else:
+                    seq_entries.append("model")
+                seq_assign = tuple(seq_entries) if seq_entries else None
+                if seq_assign is not None and shape[off + 1] % _axis_size(
+                        mesh, seq_assign) != 0:
+                    # fall back to progressively fewer axes
+                    for cand in (("model",), None):
+                        if cand is None or shape[off + 1] % _axis_size(
+                                mesh, cand) == 0:
+                            seq_assign = cand
+                            break
+                entries[off + 1] = seq_assign
+            return PS(*entries)
+        # recurrent / small states: batch over data when divisible
+        entries = [None] * len(shape)
+        if len(shape) > off:
+            entries[off] = b_axis
+        return PS(*entries)
+
+    return jax.tree_util.tree_map_with_path(visit, cache_shapes)

@@ -1,0 +1,22 @@
+"""Shared test config.
+
+NOTE: tests must see the single real CPU device — the 512-device
+XLA_FLAGS override belongs to launch/dryrun.py ONLY.
+"""
+import os
+import sys
+
+# Make `import repro` work without an editable install.
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "fast",
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("fast")

@@ -1,0 +1,79 @@
+"""Application-level tests: the SC accuracy paths track the float references
+(Section 5-3) and degrade gracefully under bitflips (Table 4's qualitative
+claim: stochastic error stays small and grows slowly with flip rate, binary
+error explodes).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import apps
+
+RNG = np.random.default_rng(7)
+KEY = jax.random.key(7)
+BL = 1024
+
+
+def test_lit_tracks_exact():
+    a = RNG.random((16, 81))
+    exact = apps.lit_exact(a)
+    sc = np.asarray(apps.lit_stochastic(KEY, a, BL))
+    assert np.abs(sc - exact).mean() < 0.06
+
+
+def test_ol_tracks_exact():
+    p = RNG.random((64, 6)) * 0.5 + 0.5      # keep products away from 0
+    exact = apps.ol_exact(p)
+    sc = np.asarray(apps.ol_stochastic(KEY, p, BL))
+    assert np.abs(sc - exact).mean() < 0.05
+
+
+def test_hdp_tracks_exact():
+    v = {k: RNG.random(32) * 0.8 + 0.1 for k in apps.HDP_KEYS}
+    exact = apps.hdp_exact(v)
+    sc = np.asarray(apps.hdp_stochastic(KEY, v, 2048))
+    assert np.abs(sc - exact).mean() < 0.08
+
+
+def test_kde_tracks_exact():
+    x_t = RNG.random(8)
+    hist = RNG.random((8, apps.KDE_N))
+    exact = apps.kde_exact(x_t, hist)
+    sc = np.asarray(apps.kde_stochastic(KEY, x_t, hist, 512))
+    assert np.abs(sc - exact).mean() < 0.08
+
+
+@pytest.mark.parametrize("app", ["lit", "ol"])
+def test_stochastic_error_grows_slowly_with_bitflips(app):
+    # Table 4: Stoch-IMC error < 6.5% even at 20% flips.
+    if app == "lit":
+        a = RNG.random((8, 81))
+        exact = apps.lit_exact(a)
+        run = lambda r: np.asarray(apps.lit_stochastic(KEY, a, BL, bitflip_rate=r))
+    else:
+        p = RNG.random((32, 6)) * 0.5 + 0.5
+        exact = apps.ol_exact(p)
+        run = lambda r: np.asarray(apps.ol_stochastic(KEY, p, BL, bitflip_rate=r))
+    err20 = np.abs(run(0.20) - exact).mean()
+    assert err20 < 0.15, err20
+
+
+def test_binary_error_explodes_faster_than_stochastic_at_high_flip_rate():
+    # The Table 4 crossover: at 20% flips binary IMC error >> Stoch-IMC error.
+    p = RNG.random((256, 6)) * 0.5 + 0.5
+    exact = apps.ol_exact(p)
+    sc_err = np.abs(np.asarray(apps.ol_stochastic(KEY, p, BL, bitflip_rate=0.2))
+                    - exact).mean()
+    bin_err = np.abs(apps.ol_binary8(np.random.default_rng(0), p, bitflip_rate=0.2)
+                     - exact).mean()
+    assert bin_err > 2 * sc_err, (bin_err, sc_err)
+
+
+def test_cost_stages_schedule_within_subarray():
+    from repro.core.scheduler import schedule
+    for stages in (apps.lit_cost_stages(), apps.ol_cost_stages(),
+                   apps.hdp_cost_stages(), apps.kde_cost_stages()):
+        for st in stages:
+            sch = schedule(st.netlist, n_lanes=st.q_lanes)
+            assert sch.n_cols <= 256 and sch.n_rows <= 256

@@ -1,0 +1,100 @@
+"""Stoch-IMC [n, m] architecture model tests (Section 4-3 worked examples,
+Table 2/3 qualitative structure, Eq. (11) lifetime).
+"""
+import pytest
+
+from repro.core import arch, circuits
+from repro.core.arch import StochIMCConfig, evaluate_binary_imc, evaluate_sc_cram, \
+    evaluate_stoch_imc, lifetime_improvement
+from repro.core.scheduler import schedule
+
+CFG = StochIMCConfig()  # paper setup: n=m=16, 256x256 subarrays, BL=256
+
+
+def test_hierarchical_accumulation_n_plus_m():
+    # Section 4-3 example: 256-bit bitstream, n=m=16 -> 32 steps vs 256.
+    assert CFG.accumulation_steps() == 32
+    assert CFG.accumulation_steps_ungrouped() == 256
+
+
+def test_accumulator_register_widths():
+    from repro.core.energy import accumulator_register_bits
+    local, glob = accumulator_register_bits(16, 16)
+    assert local == 5       # floor(log2(16)) + 1
+    assert glob == 9        # floor(log2(256)) + 1
+
+
+def compute_cycles(cost):
+    """Table 2 'computation part' accounting: exclude StoB accumulation (the
+    conversion happens once per application output, not per operation)."""
+    return cost.total_cycles - cost.accumulation_cycles
+
+
+def test_stoch_multiply_beats_binary_multiply_on_cycles():
+    # Table 2: stochastic multiplication total time = 0.012X of binary.
+    s_sch = schedule(circuits.sc_multiply(), n_lanes=256)
+    s_cost = evaluate_stoch_imc(circuits.sc_multiply(), s_sch, CFG)
+    b_sch = schedule(circuits.binary_multiplier(8))
+    b_cost = evaluate_binary_imc(circuits.binary_multiplier(8), b_sch, CFG)
+    ratio = compute_cycles(s_cost) / compute_cycles(b_cost)
+    assert ratio < 0.05, ratio     # paper: 0.012X — well over an order
+
+
+def test_stoch_addition_slower_area_but_faster_time_than_binary():
+    # Table 2 scaled addition: area 20x binary, time 0.056X binary.  The
+    # paper's binary-addition baseline is the 1x88 single-row serial layout.
+    s_sch = schedule(circuits.sc_scaled_add(), n_lanes=256)
+    s_cost = evaluate_stoch_imc(circuits.sc_scaled_add(), s_sch, CFG)
+    b_net = circuits.binary_adder_nand_serial(8)
+    b_sch = schedule(b_net)
+    b_cost = evaluate_binary_imc(b_net, b_sch, CFG)
+    assert compute_cycles(s_cost) < 0.15 * compute_cycles(b_cost)
+    assert s_cost.cells_used > b_cost.cells_used     # the area trade-off
+
+
+def test_sc_cram_bit_serial_is_much_slower_than_stoch_imc():
+    # [22] repeats the per-bit circuit BL times in one subarray.
+    net = circuits.sc_multiply()
+    sch_lanes = schedule(net, n_lanes=256)
+    sch_1 = schedule(net, n_lanes=1)
+    ours = evaluate_stoch_imc(net, sch_lanes, CFG)
+    theirs = evaluate_sc_cram(net, sch_1, CFG)
+    assert compute_cycles(theirs) > 50 * compute_cycles(ours)
+
+
+def test_pipeline_passes_scale_with_bitstream_demand():
+    net = circuits.sc_multiply()
+    sch = schedule(net, n_lanes=1)      # 1 lane/subarray -> 256 lanes/pass
+    cost1 = evaluate_stoch_imc(net, sch, CFG, n_instances=1)
+    cost4 = evaluate_stoch_imc(net, sch, CFG, n_instances=4)
+    assert cost1.n_passes == 1
+    assert cost4.n_passes == 4
+    assert compute_cycles(cost4) == 4 * compute_cycles(cost1)
+
+
+def test_parallel_mode_collapses_passes():
+    net = circuits.sc_multiply()
+    sch = schedule(net, n_lanes=1)
+    pipe = evaluate_stoch_imc(net, sch, CFG, n_instances=4)
+    par_cfg = StochIMCConfig(mode="parallel", n_banks=4)
+    par = evaluate_stoch_imc(net, sch, par_cfg, n_instances=4)
+    assert par.total_cycles < pipe.total_cycles
+
+
+def test_lifetime_stoch_beats_sc_cram_by_orders_of_magnitude():
+    # Fig. 11: 216.3X average over [22] — bit-serial reuse hammers one subarray.
+    net = circuits.sc_multiply()
+    ours = evaluate_stoch_imc(net, schedule(net, n_lanes=256), CFG)
+    cram = evaluate_sc_cram(net, schedule(net, n_lanes=1), CFG)
+    imp = lifetime_improvement(ours, cram)
+    assert imp > 50, imp
+
+
+def test_energy_breakdown_shares_sum_to_one():
+    net = circuits.sc_scaled_add()
+    cost = evaluate_stoch_imc(net, schedule(net, n_lanes=256), CFG)
+    shares = cost.energy.shares()
+    assert abs(sum(shares.values()) - 1.0) < 1e-9
+    assert all(v >= 0 for v in shares.values())
+    # Fig. 10: logic + preset dominate in stochastic methods.
+    assert shares["logic"] + shares["preset"] > shares["peripheral"]

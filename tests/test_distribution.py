@@ -1,0 +1,221 @@
+"""Distribution-stack tests on a small host-device mesh: sharding rules,
+train step, optimizer, compression, data pipeline, checkpointing.
+
+Runs on 1 CPU device (mesh (1,1)) — the semantics, pytree plumbing and
+resume behaviour are device-count independent; the 256/512-way versions are
+exercised by launch/dryrun.py.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro.checkpoint import latest_step, restore, save
+from repro.configs import reduced_config
+from repro.data import SyntheticLM
+from repro.models import RunCtx, init_params, model_params
+from repro.optim import adamw_init, adamw_update, compress_decompress
+from repro.sharding import make_rules, param_pspec_tree, validate_divisibility
+from repro.train import make_train_step, train_state_init
+
+
+def small_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# ------------------------------- sharding rules -----------------------------------
+
+def test_param_pspec_tree_covers_every_leaf():
+    cfg = reduced_config("qwen3-8b")
+    mesh = small_mesh()
+    sr = make_rules(mesh)
+    skel = model_params(cfg)
+    specs = param_pspec_tree(skel, sr)
+    n_skel = len(jax.tree.leaves(skel, is_leaf=lambda x: hasattr(x, "axes")))
+    n_spec = len(jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, PS)))
+    assert n_skel == n_spec > 10
+
+
+def test_divisibility_fallback_reports_and_replicates():
+    """whisper: 20 heads / 51866 vocab don't divide a 16-way model axis."""
+    import repro.configs.whisper_large_v3 as w
+    cfg = w.config()
+    devs = jax.devices() * 256          # fake a 16x16 shape check (sizes only)
+    mesh = small_mesh()                 # actual spec math uses axis sizes
+
+    # Build a fake 16x16 mesh object via axis-size monkeypatching: rules only
+    # read mesh.shape, so use a simple namespace.
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    from repro.sharding.rules import ShardingRules, _spec_for
+    sr = ShardingRules(mesh=FakeMesh(), rules=make_rules(mesh).rules,
+                       batch=("data",))
+    skel = model_params(cfg)
+    notes = validate_divisibility(skel, sr)
+    assert any("heads=20" in n for n in notes)
+    assert any("vocab=51866" in n for n in notes)
+
+
+# ------------------------------- optimizer ----------------------------------------
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.array([2.0, -3.0, 1.0])}
+    state = adamw_init(params)
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}          # d/dw |w|^2
+        params, state = adamw_update(grads, state, params, lr=5e-2,
+                                     weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+    assert int(state.step) == 300
+
+
+def test_adamw_grad_clip_bounds_update():
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params)
+    huge = {"w": jnp.full(4, 1e9)}
+    p2, _ = adamw_update(huge, state, params, lr=1.0, clip_norm=1.0,
+                         weight_decay=0.0)
+    assert float(jnp.abs(p2["w"]).max()) < 10.0
+
+
+# --------------------------- gradient compression ----------------------------------
+
+def test_compression_unbiased_and_error_feedback_telescopes():
+    key = jax.random.key(0)
+    g = {"a": jax.random.normal(jax.random.key(1), (512,))}
+    # Unbiasedness: mean over many independent quantizations ~ g.
+    reps = []
+    for i in range(30):
+        dq, _ = compress_decompress(g, jax.random.key(i), bits=4)
+        reps.append(dq["a"])
+    mean = jnp.stack(reps).mean(0)
+    assert float(jnp.abs(mean - g["a"]).mean()) < 0.05
+    # Error feedback: quantized + residual == pre-quantization signal.
+    dq, err = compress_decompress(g, key, bits=4)
+    recon = dq["a"] + err["a"]
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(g["a"]), atol=1e-5)
+
+
+def test_compression_with_feedback_tracks_sum_over_steps():
+    # With error feedback, sum of dequantized grads ~ sum of true grads
+    # (telescoping: sum dq_t = sum g + e_0 - e_T).  At very low bit widths
+    # the residual can random-walk (amax is data-dependent), so test at 4.
+    g = {"a": jnp.linspace(-1, 1, 256)}
+    err = None
+    total = jnp.zeros(256)
+    for i in range(50):
+        dq, err = compress_decompress(g, jax.random.key(i), bits=4, errors=err)
+        total = total + dq["a"]
+    np.testing.assert_allclose(np.asarray(total / 50), np.asarray(g["a"]),
+                               atol=0.05)
+
+
+# ------------------------------- data pipeline -------------------------------------
+
+def test_data_pipeline_deterministic_and_resumable():
+    pipe = SyntheticLM(vocab_size=97, seq_len=16, global_batch=8, seed=3)
+    b1 = pipe.batch(7)
+    b2 = pipe.batch(7)                          # same step -> same batch
+    assert (b1["tokens"] == b2["tokens"]).all()
+    assert (b1["labels"][:, :-1] == b1["tokens"][:, 1:]).all()
+    b3 = pipe.batch(8)
+    assert not (b1["tokens"] == b3["tokens"]).all()
+
+
+def test_data_pipeline_host_slices_partition_global_batch():
+    pipe = SyntheticLM(vocab_size=97, seq_len=8, global_batch=8)
+    full = pipe.batch(0)["tokens"]
+    parts = [pipe.host_batch(0, h, 4)["tokens"] for h in range(4)]
+    assert (jnp.concatenate(parts) == full).all()
+
+
+# ------------------------------- train step ---------------------------------------
+
+@pytest.mark.parametrize("accum", [1, 2])
+def test_train_step_loss_decreases(accum):
+    cfg = reduced_config("qwen3-8b")
+    mesh = small_mesh()
+    rules = make_rules(mesh)
+    ctx = RunCtx(mesh=mesh, act_spec=NamedSharding(mesh, rules.act_spec()),
+                 data_axes=("data",))
+    params = init_params(cfg, jax.random.key(0))
+    state = train_state_init(cfg, params)
+    step = jax.jit(make_train_step(cfg, ctx, accum_steps=accum, lr=5e-3))
+    pipe = SyntheticLM(cfg.vocab_size, seq_len=32, global_batch=4)
+    losses = []
+    for i in range(8):
+        state, m = step(state, pipe.batch(0))   # same batch: must overfit
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_train_step_accum_matches_full_batch_loss():
+    cfg = reduced_config("rwkv6-1.6b")
+    mesh = small_mesh()
+    ctx = RunCtx(mesh=mesh, data_axes=("data",))
+    params = init_params(cfg, jax.random.key(0))
+    pipe = SyntheticLM(cfg.vocab_size, seq_len=32, global_batch=4)
+    batch = pipe.batch(0)
+    s1 = train_state_init(cfg, params)
+    s2 = train_state_init(cfg, params)
+    _, m1 = jax.jit(make_train_step(cfg, ctx, accum_steps=1))(s1, batch)
+    _, m2 = jax.jit(make_train_step(cfg, ctx, accum_steps=2))(s2, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-3)
+
+
+# ------------------------------- checkpointing -------------------------------------
+
+def test_checkpoint_save_restore_roundtrip(tmp_path):
+    cfg = reduced_config("qwen3-8b")
+    params = init_params(cfg, jax.random.key(0))
+    state = train_state_init(cfg, params)
+    d = str(tmp_path / "ckpt")
+    save(d, 10, state)
+    save(d, 20, state)
+    assert latest_step(d) == 20
+    restored = restore(d, 20, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        if hasattr(a, "dtype") and jax.dtypes.issubdtype(a.dtype,
+                                                         jax.dtypes.prng_key):
+            a, b = jax.random.key_data(a), jax.random.key_data(b)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    params = {"w": jnp.arange(8, dtype=jnp.float32)}
+    d = str(tmp_path / "ckpt")
+    path = save(d, 1, params)
+    # Corrupt a leaf on disk.
+    leaf = os.path.join(path, "leaf_00000.npy")
+    arr = np.load(leaf)
+    arr[0] = 999.0
+    np.save(leaf, arr)
+    with pytest.raises(IOError):
+        restore(d, 1, params)
+
+
+def test_checkpoint_atomicity_no_partial_dirs(tmp_path):
+    params = {"w": jnp.zeros(4)}
+    d = str(tmp_path / "ckpt")
+    save(d, 1, params)
+    entries = os.listdir(d)
+    assert entries == ["step_00000001"]         # no tmp leftovers
+
+
+def test_train_driver_resume(tmp_path):
+    """launch/train.py resumes from the latest checkpoint (auto-resume)."""
+    from repro.launch import train as train_mod
+    d = str(tmp_path / "ck")
+    train_mod.main(["--arch", "rwkv6-1.6b", "--smoke", "--steps", "4",
+                    "--seq", "16", "--batch", "2", "--ckpt_dir", d,
+                    "--ckpt_every", "2", "--log_every", "100"])
+    assert latest_step(d) == 4
+    # Re-invoke with more steps: must resume from 4, not restart.
+    train_mod.main(["--arch", "rwkv6-1.6b", "--smoke", "--steps", "6",
+                    "--seq", "16", "--batch", "2", "--ckpt_dir", d,
+                    "--ckpt_every", "2", "--log_every", "100"])
+    assert latest_step(d) == 6

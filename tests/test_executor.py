@@ -1,0 +1,78 @@
+"""Netlist interpreter tests: sequential circuits, correlation, fault injection."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitstream as bs, circuits, executor, sc_ops
+from repro.core.gates import Netlist, PIKind
+
+BL = 4096
+
+
+def test_vectorized_execution_broadcasts_over_batch():
+    net = circuits.sc_multiply()
+    a = jnp.asarray(np.linspace(0.1, 0.9, 8), jnp.float32)
+    b = jnp.full((8,), 0.5, jnp.float32)
+    out = executor.execute_value(net, {"a": a, "b": b}, jax.random.key(0), BL)
+    np.testing.assert_allclose(np.asarray(out["out"]), np.asarray(a) * 0.5,
+                               atol=5 / np.sqrt(BL))
+
+
+def test_sequential_divider_state_scan_matches_functional_op():
+    a, b = 0.4, 0.4
+    net = circuits.sc_scaled_div()
+    out = executor.execute_value(net, {"a": jnp.float32(a), "b": jnp.float32(b)},
+                                 jax.random.key(1), 16384)
+    assert abs(float(out["Q_next"]) - 0.5) < 0.03
+
+
+def test_bitflip_injection_shifts_extreme_values_toward_half():
+    net = circuits.sc_multiply()
+    vals = {"a": jnp.float32(0.95), "b": jnp.float32(0.95)}
+    clean = executor.execute_value(net, vals, jax.random.key(2), BL)
+    noisy = executor.execute_value(net, vals, jax.random.key(2), BL,
+                                   bitflip_rate=0.2, flip_key=jax.random.key(3))
+    # flipping 20% of bits pulls high-probability streams toward 0.5
+    assert float(noisy["out"]) < float(clean["out"])
+    assert abs(float(clean["out"]) - 0.9025) < 5 / np.sqrt(BL)
+
+
+def test_flip_bits_rate_statistics():
+    w = jnp.zeros((64, BL // 32), jnp.uint32)
+    flipped = sc_ops.flip_bits(jax.random.key(4), w, 0.1)
+    rate = float(bs.popcount(flipped).sum()) / (64 * BL)
+    assert abs(rate - 0.1) < 0.01
+
+
+def test_correlation_groups_share_randomness():
+    net = Netlist("corr")
+    a = net.add_pi("A", value_key="a", corr_group="g")
+    b = net.add_pi("B", value_key="b", corr_group="g")
+    net.add_gate("NAND", [a, b], "n")
+    net.add_gate("NOT", ["n"], "out")    # AND of correlated = min(a, b)
+    net.set_outputs(["out"])
+    out = executor.execute_value(net, {"a": jnp.float32(0.3), "b": jnp.float32(0.8)},
+                                 jax.random.key(5), BL)
+    assert abs(float(out["out"]) - 0.3) < 5 / np.sqrt(BL)   # min, not product
+
+
+def test_independent_copies_are_decorrelated():
+    net = Netlist("indep")
+    a1 = net.add_pi("A1", value_key="a", indep_copy=0)
+    a2 = net.add_pi("A2", value_key="a", indep_copy=1)
+    net.add_gate("NAND", [a1, a2], "n")
+    net.add_gate("NOT", ["n"], "out")    # AND of independent copies = a^2
+    net.set_outputs(["out"])
+    out = executor.execute_value(net, {"a": jnp.float32(0.5)}, jax.random.key(6), BL)
+    assert abs(float(out["out"]) - 0.25) < 5 / np.sqrt(BL)
+
+
+def test_constant_pis_fill_from_const_value():
+    net = Netlist("const")
+    a = net.add_pi("A", value_key="a")
+    c = net.add_pi("C", kind=PIKind.CONSTANT, const_value=0.5)
+    net.add_gate("NAND", [a, c], "n")
+    net.add_gate("NOT", ["n"], "out")
+    net.set_outputs(["out"])
+    out = executor.execute_value(net, {"a": jnp.float32(0.8)}, jax.random.key(7), BL)
+    assert abs(float(out["out"]) - 0.4) < 5 / np.sqrt(BL)

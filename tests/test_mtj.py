@@ -1,0 +1,58 @@
+"""MTJ stochastic-switching model tests (paper Eqs. (1)-(2), Fig. 3, Table 1)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import mtj
+
+
+def test_fig3_anchor_point():
+    # Fig. 3: a 310 mV / 4 ns pulse switches with probability ~0.7.
+    p = mtj.switching_probability(0.310, 4e-9)
+    assert abs(p - 0.7) < 0.05
+
+
+def test_probability_monotonic_in_voltage_and_duration():
+    # Non-strict at the float-saturated tails (P -> 0 or 1 exactly); strictly
+    # increasing through the Fig. 3 transition region.
+    for t_p in (3e-9, 5e-9, 10e-9):
+        ps = [mtj.switching_probability(v, t_p) for v in np.linspace(0.2, 0.4, 9)]
+        assert all(b >= a for a, b in zip(ps, ps[1:]))
+        assert ps[-1] > ps[0]
+    for v in (0.28, 0.3, 0.32):
+        ps = [mtj.switching_probability(v, t) for t in np.linspace(3e-9, 10e-9, 9)]
+        assert all(b >= a for a, b in zip(ps, ps[1:]))
+        assert ps[-1] > ps[0]
+
+
+@pytest.mark.parametrize("p_target", [0.01, 0.1, 0.3, 0.5, 0.7, 0.9, 0.99])
+@pytest.mark.parametrize("t_p", [3e-9, 4e-9, 10e-9])
+def test_pulse_voltage_inverts_model(p_target, t_p):
+    v = mtj.pulse_voltage_for(p_target, t_p)
+    assert abs(mtj.switching_probability(v, t_p) - p_target) < 1e-9
+
+
+def test_optimal_pulse_is_energy_minimal_on_grid():
+    spec = mtj.optimal_pulse(0.5, n_grid=32)
+    for t_p in np.linspace(mtj.T_P_MIN_S, mtj.T_P_MAX_S, 32):
+        v = mtj.pulse_voltage_for(0.5, float(t_p))
+        if v > 0:
+            assert spec.energy_j <= mtj.write_energy(v, float(t_p)) + 1e-30
+    assert mtj.switching_probability(spec.v_p, spec.t_p) == pytest.approx(0.5, abs=1e-6)
+
+
+def test_btos_lut_shape_and_monotonicity():
+    lut = mtj.btos_lut(8)
+    assert len(lut) == 256                      # 2^8 entries = 256 B BtoS memory
+    assert mtj.lut_size_bytes(8) == 256
+    probs = [e.p_sw for e in lut]
+    assert probs == sorted(probs)
+    assert lut[0].energy_j == 0.0
+    # Switching energies are sub-femtojoule scale for this MTJ (aJ..fJ).
+    assert 0 < lut[128].energy_j < 1e-13
+
+
+def test_sbg_energy_positive_and_small():
+    e = mtj.sbg_energy(0.5)
+    assert 0 < e < 1e-13

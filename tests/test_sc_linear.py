@@ -1,0 +1,75 @@
+"""ScLinear (the paper's technique inside the LM) — mode equivalence and
+noise-model calibration."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models.mlp import sc_linear
+
+
+def _cfg(mode, bl=256):
+    cfg = reduced_config("qwen3-8b")
+    return dataclasses.replace(cfg, sc_mode=mode, sc_bitstream_length=bl)
+
+
+KEY = jax.random.key(0)
+X = jax.random.normal(jax.random.key(1), (8, 32)) * 0.5
+W = jax.random.normal(jax.random.key(2), (32, 16)) * 0.3
+
+
+def test_off_mode_is_exact():
+    y = sc_linear(X, W, _cfg("off"))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(X @ W), rtol=1e-6)
+
+
+def test_analytic_mode_unbiased():
+    cfg = _cfg("analytic", bl=256)
+    ys = [sc_linear(X, W, cfg, key=jax.random.key(i)) for i in range(48)]
+    mean = jnp.stack(ys).mean(0)
+    exact = X @ W
+    resid = float(jnp.abs(mean - exact).mean())
+    scale = float(jnp.abs(exact).mean())
+    assert resid < 0.15 * scale, (resid, scale)
+
+
+def test_analytic_noise_shrinks_with_bl():
+    errs = []
+    for bl in (64, 1024):
+        cfg = _cfg("analytic", bl=bl)
+        y = sc_linear(X, W, cfg, key=KEY)
+        errs.append(float(jnp.abs(y - X @ W).mean()))
+    assert errs[1] < errs[0]
+
+
+def test_exact_mode_matches_ref_oracle_statistics():
+    # exact mode = packed-bitstream kernels via the bipolar decomposition;
+    # must approximate the true product with ~1/sqrt(BL) relative error.
+    cfg = _cfg("exact", bl=256)
+    y = sc_linear(X, W, cfg)
+    exact = X @ W
+    rel = float(jnp.abs(y - exact).mean() / jnp.abs(exact).mean())
+    assert rel < 0.5, rel
+
+
+def test_exact_mode_deterministic_given_seed():
+    cfg = _cfg("exact", bl=64)
+    y1 = sc_linear(X, W, cfg, seed=3)
+    y2 = sc_linear(X, W, cfg, seed=3)
+    assert (y1 == y2).all()
+    y3 = sc_linear(X, W, cfg, seed=4)
+    assert not (y1 == y3).all()
+
+
+def test_sc_mlp_forward_runs_in_model():
+    import repro.models as M
+    cfg = dataclasses.replace(reduced_config("qwen3-8b"), sc_mode="analytic",
+                              sc_bitstream_length=128)
+    params = M.init_params(cfg, KEY)
+    tokens = jax.random.randint(jax.random.key(5), (2, 16), 0, cfg.vocab_size)
+    logits, _ = M.forward(cfg, params, tokens,
+                          M.RunCtx(rng=jax.random.key(6)))
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())

@@ -1,0 +1,170 @@
+"""Algorithm 1 tests — the paper's worked examples and hardware constraints.
+
+Key paper anchors:
+  * Fig. 7(b): stochastic 4-bit-equivalent scaled addition = 4 logic cycles,
+    independent of bitstream length.
+  * Fig. 7(a) / Section 4-1: binary ripple-carry addition = 2(n-1) cycles of
+    carry transfer + 3 (even n) or 4 (odd n) for the MSB => 9 cycles at n=4.
+  * Table 2 column budgets for the six arithmetic circuits.
+"""
+import pytest
+
+from repro.core import circuits
+from repro.core.gates import ALL_ROWS, Netlist, PIKind
+from repro.core.scheduler import input_init_cycles, schedule
+
+
+def test_stochastic_scaled_add_is_4_cycles_any_bitstream_length():
+    for lanes in (1, 16, 256):
+        sch = schedule(circuits.sc_scaled_add(), n_lanes=lanes)
+        assert sch.logic_cycles == 4, lanes
+        assert sch.n_cols == 7                      # Table 2: 256x7
+        assert sch.n_rows == lanes
+
+
+@pytest.mark.parametrize("n_bits,expected", [(2, 5), (3, 8), (4, 9), (6, 13), (8, 17)])
+def test_binary_rca_cycles_match_paper_formula(n_bits, expected):
+    # 2*(n-1) + 3 for even n, 2*(n-1) + 4 for odd n  (Section 4-1).
+    sch = schedule(circuits.binary_ripple_carry_adder(n_bits))
+    assert sch.logic_cycles == expected
+
+
+def test_stochastic_vs_binary_speedup_at_4_bits():
+    stoch = schedule(circuits.sc_scaled_add(), n_lanes=256)
+    binary = schedule(circuits.binary_ripple_carry_adder(4))
+    assert binary.logic_cycles == 9 and stoch.logic_cycles == 4
+
+
+TABLE2_COLS = {
+    "sc_multiply": 4,        # Table 2: 256x4
+    "sc_scaled_add": 7,      # 256x7
+    "sc_abs_sub": 8,         # 256x8
+    "sc_scaled_div": 13,     # 256x13
+    "sc_sqrt": 10,           # 256x10
+    "sc_exp": 31,            # 256x31
+}
+
+
+@pytest.mark.parametrize("name,builder", [
+    ("sc_multiply", circuits.sc_multiply),
+    ("sc_scaled_add", circuits.sc_scaled_add),
+    ("sc_abs_sub", circuits.sc_abs_sub),
+    ("sc_scaled_div", circuits.sc_scaled_div),
+    ("sc_sqrt", circuits.sc_sqrt),
+    ("sc_exp", circuits.sc_exp),
+])
+def test_table2_column_budgets(name, builder):
+    sch = schedule(builder(), n_lanes=256)
+    assert sch.n_cols <= TABLE2_COLS[name], (name, sch.n_cols)
+    assert sch.n_rows == 256
+
+
+def test_no_shared_fanin_within_cycle():
+    # Two gates reading the same node must not fire in the same cycle.
+    net = Netlist("fanin")
+    a = net.add_pi("A")
+    b = net.add_pi("B")
+    net.add_gate("NAND", [a, b], "x")
+    net.add_gate("NAND", [a, b], "y")     # same fan-in as x
+    net.set_outputs(["x", "y"])
+    sch = schedule(net, n_lanes=4)
+    cyc = {o.out_col: o.cycle for o in sch.ops}
+    cycles = [o.cycle for o in sch.ops if not o.is_copy]
+    assert cycles[0] != cycles[1]
+
+
+def test_independent_row_local_gates_parallelize_into_one_cycle():
+    # Algorithm 1's input-column-aligned subsets: same gate type in different
+    # rows with aligned operand columns fire in a single cycle (one V_SL
+    # drive pattern serves every row — the Fig. 7(a) parallelism).
+    net = Netlist("par")
+    for r in range(4):
+        net.add_pi(f"A{r}", kind=PIKind.BINARY, row=r)   # col 0 of row r
+        net.add_pi(f"B{r}", kind=PIKind.BINARY, row=r)   # col 1 of row r
+    for r in range(4):
+        net.add_gate("NAND", [f"A{r}", f"B{r}"], f"o{r}", row=r)
+    net.set_outputs([f"o{r}" for r in range(4)])
+    sch = schedule(net)
+    assert sch.logic_cycles == 1          # all four NANDs fire together
+
+
+def test_simd_gates_serialize_per_row_constraint():
+    # Two distinct ALL_ROWS gates occupy every row, so they cannot share a
+    # cycle (one logic op per row per cycle).
+    net = Netlist("simd2")
+    pis = [net.add_pi(f"I{i}") for i in range(4)]
+    net.add_gate("NAND", [pis[0], pis[1]], "x")
+    net.add_gate("NAND", [pis[2], pis[3]], "y")
+    net.set_outputs(["x", "y"])
+    sch = schedule(net, n_lanes=16)
+    assert sch.logic_cycles == 2
+
+
+def test_strict_same_type_serializes_mixed_types():
+    net = Netlist("mixed")
+    a, b = net.add_pi("A"), net.add_pi("B")
+    net.add_gate("NAND", [a, b], "x")
+    net.add_gate("NOT", [a], "y")         # different type, shares operand A
+    net.set_outputs(["x", "y"])
+    loose = schedule(net, n_lanes=1)
+    strict = schedule(net, n_lanes=1, strict_same_type=True)
+    assert strict.logic_cycles >= loose.logic_cycles
+
+
+def test_cross_row_copy_inserted_for_binary_operands():
+    net = Netlist("xrow")
+    a = net.add_pi("A", kind=PIKind.BINARY, row=0)
+    b = net.add_pi("B", kind=PIKind.BINARY, row=1)
+    net.add_gate("NAND", [a, b], "o", row=0)    # B must be copied into row 0
+    net.set_outputs(["o"])
+    sch = schedule(net)
+    assert sch.n_copies == 1
+    copies = [o for o in sch.ops if o.is_copy]
+    assert copies[0].src_row == 1 and copies[0].row == 0
+    assert sch.logic_cycles == 2                # copy cycle + NAND cycle
+
+
+def test_subarray_capacity_enforced():
+    with pytest.raises(ValueError):
+        schedule(circuits.sc_scaled_add(), n_lanes=512, r_available=256)
+    net = Netlist("wide")
+    pis = [net.add_pi(f"I{i}") for i in range(300)]
+    prev = pis[0]
+    for i in range(1, 300):
+        prev = net.add_gate("NAND", [prev, pis[i]], f"n{i}")
+    net.set_outputs([prev])
+    with pytest.raises(ValueError):
+        schedule(net, n_lanes=1, c_available=256)
+
+
+def test_priority_follows_inverse_topological_order():
+    # The gate furthest from the outputs fires first when both are ready.
+    net = Netlist("prio")
+    a, b, c = net.add_pi("A"), net.add_pi("B"), net.add_pi("C")
+    deep = net.add_gate("NAND", [a, b], "deep")     # feeds a chain of 2
+    net.add_gate("NAND", [a, c], "shallow")         # feeds nothing further
+    x = net.add_gate("NOT", [deep], "x")
+    net.add_gate("NAND", [x, c], "out")
+    net.set_outputs(["out", "shallow"])
+    sch = schedule(net, n_lanes=1)
+    cycle_of = {}
+    for op, g in zip([o for o in sch.ops if not o.is_copy], net.gates):
+        pass  # ops order == commit order; map via placements instead
+    # deep (inv-topo 2) must not be scheduled after shallow (inv-topo 0)
+    ops = [o for o in sch.ops if not o.is_copy]
+    assert ops[0].cycle <= ops[1].cycle
+
+
+def test_schedule_accounting_consistency():
+    sch = schedule(circuits.sc_exp(), n_lanes=64)
+    assert sch.preset_count == sum(sch.gate_exec_counts.values())
+    assert sch.cells_used <= sch.n_rows * sch.n_cols
+    assert sch.cell_writes >= sch.input_cells + 2 * sch.preset_count
+    assert sch.total_cycles() == sch.logic_cycles + 1   # preset overlap (+1st)
+
+
+def test_input_init_cycles_accounting():
+    assert input_init_cycles(circuits.sc_multiply()) == 2       # preset + SBG
+    rca = circuits.binary_ripple_carry_adder(4)
+    # binary: preset + one write cycle per occupied row (4 rows)
+    assert input_init_cycles(rca) == 1 + 4
