@@ -1,28 +1,54 @@
 """Benchmark driver: one module per paper table/figure + kernel benches.
 
-  PYTHONPATH=src python -m benchmarks.run
+  PYTHONPATH=src python -m benchmarks.run            # full paper-claim run
+  PYTHONPATH=src python -m benchmarks.run --smoke    # tiny sizes (CI job)
+
+Emits BENCH_plan_exec.json (interpreter-vs-compiled netlist execution
+timings) so the perf trajectory is tracked PR over PR.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 
 
-def main():
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="tiny BL/sizes: fast paper-claim sanity pass")
+    parser.add_argument("--bench-out", default=None,
+                        help="where to write the plan-exec benchmark record "
+                             "(default: BENCH_plan_exec.json; smoke runs "
+                             "write BENCH_plan_exec_smoke.json so indicative "
+                             "timings never clobber the tracked record)")
+    args = parser.parse_args(argv)
+    if args.bench_out is None:
+        args.bench_out = ("BENCH_plan_exec_smoke.json" if args.smoke
+                          else "BENCH_plan_exec.json")
+
     t0 = time.time()
-    from . import (fig10_energy, fig11_lifetime, sc_matmul_bench,
-                   table2_arith, table3_apps, table4_bitflip)
+    from . import (fig10_energy, fig11_lifetime, plan_exec_bench,
+                   sc_matmul_bench, table2_arith, table3_apps, table4_bitflip)
 
     print("=" * 72)
     print("Stoch-IMC reproduction benchmarks (paper: 10.1016/j.aeue.2024.155614)")
+    if args.smoke:
+        print("SMOKE MODE: reduced sizes — timings indicative only")
     print("=" * 72)
 
     t2 = table2_arith.run()
-    t3 = table3_apps.run()
-    t4 = table4_bitflip.run()
+    t3 = table3_apps.run(exec_check=not args.smoke)  # opt-in: once, here only
+    t4 = table4_bitflip.run(smoke=args.smoke)
     f10 = fig10_energy.run()
     f11 = fig11_lifetime.run()
-    mm = sc_matmul_bench.run()
+    mm = sc_matmul_bench.run(smoke=args.smoke)
+    pe = plan_exec_bench.run(smoke=args.smoke)
+
+    with open(args.bench_out, "w") as f:
+        json.dump(pe, f, indent=2)
+    print(f"\nwrote {args.bench_out}")
 
     s = t3["summary"]
     print("\n" + "=" * 72)
@@ -39,15 +65,25 @@ def main():
          "4.9X", f11["geomean_vs_binary"] > 0.05),
         ("Lifetime vs [22]", f"{f11['geomean_vs_cram']:.1f}X",
          "216.3X", f11["geomean_vs_cram"] > 50),
+        # Smoke halves the Table-4 sample sizes, so the bound widens with
+        # the extra sampling noise (HDP sits at ~10% even at full size).
         ("Bitflip: SC worst err @20%",
          f"{max(t4[a]['stoch'][-1] for a in t4):.2f}%", "<6.5%",
-         max(t4[a]["stoch"][-1] for a in t4) < 10.0),
+         max(t4[a]["stoch"][-1] for a in t4) < (12.0 if args.smoke else 10.0)),
+        ("Exec: compiled == paper math (Table 2)",
+         f"{max(t2[o]['exec_value_err'] for o in t2):.4f}", "small",
+         max(t2[o]["exec_value_err"] for o in t2) < 0.05),
     ]
+    if not args.smoke:
+        checks.append(
+            ("Plan-exec speedup vs interpreter",
+             f"{pe['geomean_speedup_table2']:.1f}X", ">=5X (target)",
+             pe["geomean_speedup_table2"] >= 5.0))
     ok = True
     for name, got, paper, passed in checks:
         mark = "PASS" if passed else "FAIL"
         ok &= passed
-        print(f"  [{mark}] {name:36s} ours: {got:>9s}   paper: {paper}")
+        print(f"  [{mark}] {name:38s} ours: {got:>9s}   paper: {paper}")
     print("\n  [DEV*] documented deviations (EXPERIMENTS.md #paper-validation):")
     print("    perf-vs-binary: every app is individually faster than binary and")
     print("    the op-level Table 2 ratios reproduce tightly (0.0556X vs paper's")

@@ -18,16 +18,16 @@ from repro.kernels.sc_matmul import sc_matmul
 from .common import fmt_table
 
 
-def run(verbose=True) -> dict:
+def run(verbose=True, smoke=False) -> dict:
     key = jax.random.key(0)
-    m, k, n = 32, 256, 64
+    m, k, n = (8, 64, 16) if smoke else (32, 256, 64)
     a = jax.random.uniform(jax.random.key(1), (m, k))
     w = jax.random.uniform(jax.random.key(2), (k, n))
     exact = a @ w
     scale = float(jnp.abs(exact).mean())
 
     rows, results = [], {}
-    for bl in (32, 64, 128, 256, 512):
+    for bl in ((32, 128) if smoke else (32, 64, 128, 256, 512)):
         t0 = time.time()
         approx = sc_matmul(a, w, bl, bm=8, bn=64, bk=64, interpret=True)
         approx.block_until_ready()

@@ -8,7 +8,9 @@ constructions in circuits.py — absolute shapes are printed for comparison.
 """
 from __future__ import annotations
 
-from repro.core import circuits
+import jax
+
+from repro.core import circuits, executor
 from repro.core.scheduler import schedule
 
 from .common import (CFG, binary_cost, compute_cycles, cram_cost, fmt_table,
@@ -34,6 +36,28 @@ PAPER_TIME_RATIO = {
     "Square Root": 0.002, "Exponential": 0.019,
 }
 
+# Executed-value check: (inputs, exact closed form) per op — the netlist is
+# *run* through the compiled execution plan and its decoded output compared
+# against the op's math (sqrt's reconstructed circuit computes 1-(1-cx)^2).
+EXEC_CHECK = {
+    "Scaled Addition": ({"a": 0.3, "b": 0.7}, lambda a, b: (a + b) / 2),
+    "Multiplication": ({"a": 0.6, "b": 0.5}, lambda a, b: a * b),
+    "Abs Subtraction": ({"a": 0.8, "b": 0.3}, lambda a, b: abs(a - b)),
+    "Scaled Division": ({"a": 0.3, "b": 0.5}, lambda a, b: a / (a + b)),
+    "Square Root": ({"a": 0.5},
+                    lambda a: 1.0 - (1.0 - circuits.SQRT_C * a) ** 2),
+    "Exponential": ({"a": 0.5}, lambda a: 2.718281828 ** (-a)),
+}
+
+EXEC_BL = 4096
+
+
+def _exec_value_err(name: str, net) -> float:
+    """|decoded - exact| of the op netlist executed via the compiled plan."""
+    inputs, exact = EXEC_CHECK[name]
+    out = executor.execute_value(net, inputs, jax.random.key(42), EXEC_BL)
+    return abs(float(next(iter(out.values()))) - exact(**inputs))
+
 
 def run(verbose=True) -> dict:
     rows = []
@@ -51,24 +75,28 @@ def run(verbose=True) -> dict:
         t_ratio_cram = c.logic_cycles / b.logic_cycles
         area_ratio = s.cells_used / b.cells_used
         e_ratio = s.total_energy_j / b.total_energy_j
+        exec_err = _exec_value_err(name, sc_net)
         results[name] = {
             "array_bin": f"{bin_sch.n_rows}x{bin_sch.n_cols}",
             "array_stoch": f"{sc_sch.n_rows}x{sc_sch.n_cols}",
             "area_ratio": area_ratio, "time_ratio": t_ratio,
             "time_ratio_cram": t_ratio_cram, "energy_ratio": e_ratio,
             "paper_time_ratio": PAPER_TIME_RATIO[name],
+            "exec_value_err": exec_err,
         }
         rows.append([name, f"{bin_sch.n_rows}x{bin_sch.n_cols}",
                      f"{sc_sch.n_rows}x{sc_sch.n_cols}",
                      f"{area_ratio:.3f}X", f"{t_ratio_cram:.2f}X",
                      f"{t_ratio:.4f}X", f"{PAPER_TIME_RATIO[name]:.3f}X",
-                     f"{e_ratio:.3f}X"])
+                     f"{e_ratio:.3f}X", f"{exec_err:.4f}"])
     if verbose:
         print(fmt_table(
             ["Operation", "BinArray", "StochArray", "Area(norm)",
-             "T [22](norm)", "T this(norm)", "T paper", "Energy(norm)"],
+             "T [22](norm)", "T this(norm)", "T paper", "Energy(norm)",
+             "ExecErr"],
             rows, title="\n== Table 2: arithmetic operations "
-                        "(normalized to binary IMC) =="))
+                        "(normalized to binary IMC; ExecErr = compiled-plan "
+                        f"executed value vs exact @ BL={EXEC_BL}) =="))
     return results
 
 

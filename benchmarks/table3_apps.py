@@ -9,6 +9,10 @@ application output, matching the paper's application accounting.
 from __future__ import annotations
 
 import math
+import time
+
+import jax
+import numpy as np
 
 from repro.core import apps
 from repro.core.energy import EnergyBreakdown
@@ -73,7 +77,43 @@ def app_costs(app: str):
     return ours, cram, binary
 
 
-def run(verbose=True) -> dict:
+def _exec_check(bl: int = 256) -> dict:
+    """Run every composed appnet end to end through the compiled plan.
+
+    The cost model above only *schedules* these netlists; this executes them
+    (fused level passes; HDP's divider scans over words) and reports the
+    decoded output plus per-evaluation latency — the proof that the circuits
+    Algorithm 1 maps are the circuits we can actually run.
+    """
+    from repro.core.appnet import APP_NETLISTS
+    key = jax.random.key(11)
+    inputs = {
+        "lit": {"a": np.linspace(0.1, 0.9, 81)},
+        "ol": {"p": np.full((16, 6), 0.9)},
+        "hdp": {"v": {k: 0.5 for k in apps.HDP_KEYS}},
+        "kde": {"x_t": 0.4, "hist": np.linspace(0.2, 0.8, apps.KDE_N)},
+    }
+    out = {}
+    for app in apps.APPS:
+        net = APP_NETLISTS[app]()
+        run_once = lambda: apps.appnet_stochastic(app, key, bl, net=net,
+                                                  **inputs[app])
+        first = run_once()                         # trace + compile
+        jax.block_until_ready(first)
+        ts = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run_once())
+            ts.append(time.perf_counter() - t0)
+        val = float(next(iter(first.values())))    # deterministic per key
+        out[app] = {"value": val, "ms_per_eval": min(ts) * 1e3}
+    return out
+
+
+def run(verbose=True, exec_check=False) -> dict:
+    # exec_check is opt-in: fig10/fig11 re-enter run() for the cost model
+    # only, and the check recompiles every appnet (fresh node names defeat
+    # the plan cache) — benchmarks.run requests it once at top level.
     rows = []
     results = {}
     for app in apps.APPS:
@@ -103,6 +143,12 @@ def run(verbose=True) -> dict:
                                       for r in results.values()])
     summary = {"perf_vs_binary": perf_vs_binary, "perf_vs_cram": perf_vs_cram,
                "energy_vs_binary": energy_vs_binary}
+    exec_results = _exec_check() if exec_check else {}
+    if verbose and exec_results:
+        print("\n  Compiled-plan execution of the composed appnets (BL=256):")
+        for app, r in exec_results.items():
+            print(f"    {app.upper():4s} out={r['value']:.3f}  "
+                  f"{r['ms_per_eval']:.2f} ms/eval")
     if verbose:
         print(fmt_table(
             ["App", "BinCyc", "[22]Cyc", "OurCyc", "T[22](norm)",
@@ -115,7 +161,7 @@ def run(verbose=True) -> dict:
               f"{perf_vs_cram:.1f}X   (paper: 124.2X)")
         print(f"  Energy reduction vs binary IMC (geomean): "
               f"{energy_vs_binary:.2f}X   (paper: 1.5X)")
-    return {"apps": results, "summary": summary}
+    return {"apps": results, "summary": summary, "exec": exec_results}
 
 
 if __name__ == "__main__":

@@ -16,19 +16,22 @@ BL = 256
 PAPER_STOCH_20 = {"lit": 6.4, "ol": 0.18, "hdp": 0.13, "kde": 1.53}
 
 
-def _cases(rng):
-    lit_a = rng.random((48, 81))
-    ol_p = rng.random((128, 6)) * 0.5 + 0.5
+def _cases(rng, smoke=False):
+    n = 2 if smoke else 1       # smoke: halve batch sizes, keep BL/rates
+    lit_a = rng.random((48 // n, 81))
+    ol_p = rng.random((128 // n, 6)) * 0.5 + 0.5
+    # HDP keeps its full batch: its divider error sits closest to the 10%
+    # validation bound and needs the sample size to stay below it.
     hdp_v = {k: rng.random(64) * 0.8 + 0.1 for k in apps.HDP_KEYS}
-    kde_x = rng.random(16)
-    kde_h = rng.random((16, apps.KDE_N))
+    kde_x = rng.random(16 // n)
+    kde_h = rng.random((16 // n, apps.KDE_N))
     return lit_a, ol_p, hdp_v, kde_x, kde_h
 
 
-def run(verbose=True) -> dict:
+def run(verbose=True, smoke=False) -> dict:
     rng = np.random.default_rng(0)
     key = jax.random.key(0)
-    lit_a, ol_p, hdp_v, kde_x, kde_h = _cases(rng)
+    lit_a, ol_p, hdp_v, kde_x, kde_h = _cases(rng, smoke)
     exact = {
         "lit": apps.lit_exact(lit_a),
         "ol": apps.ol_exact(ol_p),

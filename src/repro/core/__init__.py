@@ -6,15 +6,17 @@ Layers:
   gates      — gate-level netlist IR for the 2T-1MTJ method
   circuits   — stochastic (Fig. 5) and binary netlist builders
   scheduler  — Algorithm 1 (co-scheduling + mapping)
-  executor   — netlist interpreter (functional validation, fault injection)
+  plan       — execution-plan compiler (leveled, type-batched fused passes)
+  executor   — netlist execution: compiled plans + gate-by-gate reference
   sc_ops     — vectorized functional stochastic arithmetic
   energy     — Eq. (3)-(4) energy model (paper SPICE gate energies)
   arch       — Stoch-IMC [n, m] architecture model + baselines (Table 3)
   apps       — LIT / OL / HDP / KDE applications (Fig. 9, Tables 3-4)
 """
-from . import apps, arch, bitstream, circuits, energy, executor, gates, mtj, sc_ops, scheduler
+from . import (apps, arch, bitstream, circuits, energy, executor, gates, mtj,
+               plan, sc_ops, scheduler)
 
 __all__ = [
     "apps", "arch", "bitstream", "circuits", "energy", "executor", "gates",
-    "mtj", "sc_ops", "scheduler",
+    "mtj", "plan", "sc_ops", "scheduler",
 ]

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import bitstream as bs
-from . import circuits, sc_ops
+from . import circuits, executor, sc_ops
 from .gates import Netlist
 
 
@@ -360,6 +360,56 @@ def kde_cost_stages() -> list[CostStage]:
         stages.append(CostStage(circuits.sc_scaled_add(), pairs, 1))
         k = pairs + (k % 2)
     return stages
+
+
+# ================== composed per-bit netlist execution ===========================
+
+def appnet_inputs(app: str, *, a=None, p=None, v=None, x_t=None,
+                  hist=None) -> dict[str, jax.Array]:
+    """Map app-level inputs to the PI value keys of ``appnet.APP_NETLISTS``.
+
+    Shapes (trailing dims consumed, leading dims broadcast as batch):
+      lit: ``a`` (..., 81) window pixels      ol: ``p`` (..., 16, 6) pixel probs
+      hdp: ``v`` dict over HDP_KEYS           kde: ``x_t`` (...), ``hist`` (..., N)
+    """
+    if app == "lit":
+        a = jnp.asarray(a, jnp.float32)
+        return {f"a{i}": a[..., i] for i in range(a.shape[-1])}
+    if app == "ol":
+        p = jnp.asarray(p, jnp.float32)
+        return {f"p{r}_{j}": p[..., r, j]
+                for r in range(p.shape[-2]) for j in range(p.shape[-1])}
+    if app == "hdp":
+        return {k: jnp.asarray(v[k], jnp.float32) for k in HDP_KEYS}
+    if app == "kde":
+        hist = jnp.asarray(hist, jnp.float32)
+        vals = {f"h{i}": hist[..., i] for i in range(hist.shape[-1])}
+        vals["x_t"] = jnp.asarray(x_t, jnp.float32)
+        return vals
+    raise KeyError(app)
+
+
+def appnet_stochastic(app: str, key: jax.Array, bl: int = 256,
+                      backend: str | None = None, bitflip_rate: float = 0.0,
+                      flip_key: jax.Array | None = None,
+                      net: Netlist | None = None, **inputs) -> dict[str, jax.Array]:
+    """Execute the composed per-bit application netlist end to end.
+
+    This is the cost-path netlist (``appnet.APP_NETLISTS`` — the circuit
+    Algorithm 1 actually schedules) *run* through the executor's compiled
+    plan: every gate level becomes one fused bit-parallel pass, sequential
+    state (HDP's divider) scans over words.  Returns decoded output values.
+
+    Pass ``net`` to reuse a built netlist across calls (appnet node names are
+    uniquified per build, so reuse keeps the plan/jit caches warm).
+    """
+    from .appnet import APP_NETLISTS
+    if net is None:
+        net = APP_NETLISTS[app]()
+    values = appnet_inputs(app, **inputs)
+    return executor.execute_value(net, values, key, bl,
+                                  bitflip_rate=bitflip_rate, flip_key=flip_key,
+                                  backend=backend)
 
 
 # ============================== registry =========================================

@@ -1,4 +1,4 @@
-"""Netlist interpreter: executes gate netlists on packed bitstreams.
+"""Netlist execution: compiled fused plans with a gate-by-gate reference.
 
 Bridges the structural view (circuits.py netlists, used for scheduling and
 cost) and the value view (sc_ops.py): every netlist can be *run* and its
@@ -6,24 +6,44 @@ output streams decoded, so tests can assert that the scheduled circuits
 compute what the paper says they compute — including sequential (stateful)
 circuits like the Gaines divider, and under injected bitflips (Table 4).
 
+Two backends share identical semantics (bit-for-bit):
+
+  * ``"compiled"`` (default): the netlist is lowered once by
+    ``core/plan.py`` into leveled, type-batched fused passes and executed by
+    ``kernels/netlist_exec.py`` inside a single jit — stream generation,
+    logic, fault injection and state recurrence all in one XLA program.
+    ``"compiled_pallas"`` additionally routes each fused pass through the
+    packed-logic Pallas kernel.
+  * ``"reference"``: the original Python interpreter, one dispatch per gate.
+    It is the oracle the compiled path is tested against, and the fallback
+    for debugging new circuits.
+
 Binary netlists execute on packed test-vector words: lane ``t`` of the packed
 words is test vector ``t``, so one call evaluates 32*W random input
 combinations at once.
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 
 from . import bitstream as bs
-from .gates import Netlist, PIKind
 from . import sc_ops
+from .gates import Netlist, PIKind
+from .plan import ExecutionPlan, compile_plan
+
+#: Default backend for execute()/execute_value()/execute_binary().
+DEFAULT_BACKEND = "compiled"
+
+_BACKENDS = ("compiled", "compiled_pallas", "reference")
 
 
-def _gen_pi_streams(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
+def _gen_pi_streams(pis, values: dict[str, jax.Array], key: jax.Array,
                     bitstream_length: int) -> dict[str, jax.Array]:
     """Generate packed streams for every PI, honoring correlation groups and
-    independent-copy indices."""
+    independent-copy indices.  ``pis`` is any sequence of PrimaryInput."""
     shape = jnp.broadcast_shapes(*[jnp.shape(jnp.asarray(v)) for v in values.values()]) \
         if values else ()
     streams: dict[str, jax.Array] = {}
@@ -31,7 +51,7 @@ def _gen_pi_streams(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
     # Correlated groups share underlying uniforms.
     groups: dict[str, list] = {}
     singles: list = []
-    for pi in net.pis:
+    for pi in pis:
         if pi.kind == PIKind.STATE:
             continue
         if pi.corr_group is not None:
@@ -42,14 +62,14 @@ def _gen_pi_streams(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
     n_keys = len(groups) + len(singles)
     keys = jax.random.split(key, max(n_keys, 1))
     ki = 0
-    for gname, pis in sorted(groups.items()):
+    for gname, gpis in sorted(groups.items()):
         vals = []
-        for pi in pis:
+        for pi in gpis:
             v = values[pi.value_key] if pi.value_key else pi.const_value
             vals.append(jnp.broadcast_to(jnp.asarray(v, jnp.float32), shape))
         outs = bs.generate_correlated(keys[ki], vals, bitstream_length)
         ki += 1
-        for pi, o in zip(pis, outs):
+        for pi, o in zip(gpis, outs):
             streams[pi.name] = o
     for pi in singles:
         v = values[pi.value_key] if pi.value_key is not None else pi.const_value
@@ -59,16 +79,165 @@ def _gen_pi_streams(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
     return streams
 
 
+# ------------------------------ compiled backend ----------------------------------
+
+@partial(jax.jit, static_argnames=("plan", "bitstream_length", "bitflip_rate",
+                                   "use_pallas", "decode"))
+def _execute_compiled(plan: ExecutionPlan, values: dict[str, jax.Array],
+                      key: jax.Array, flip_key, bitstream_length: int,
+                      bitflip_rate: float, use_pallas: bool,
+                      decode: bool = False) -> dict[str, jax.Array]:
+    """Whole-netlist execution as one XLA program.
+
+    Mirrors the reference interpreter's key discipline exactly: one fkey per
+    sorted PI stream, then one per gate id (combinational) / per sorted
+    output (sequential).  ``decode=True`` folds the StoB popcount decode into
+    the same program (used by execute_value), leaving one dispatch per call.
+    """
+    from ..kernels import netlist_exec
+
+    streams = _gen_pi_streams(plan.pis, values, key, bitstream_length)
+
+    gate_fkeys = None
+    if bitflip_rate > 0.0:
+        fkeys = jax.random.split(flip_key, len(streams) + plan.n_gates)
+        for i, name in enumerate(sorted(streams)):
+            streams[name] = sc_ops.flip_bits(fkeys[i], streams[name], bitflip_rate)
+        gate_fkeys = fkeys[len(streams):]
+
+    if not plan.is_sequential:
+        env = dict(streams)
+        netlist_exec.run_combinational(plan, env, gate_fkeys=gate_fkeys,
+                                       bitflip_rate=bitflip_rate,
+                                       use_pallas=use_pallas)
+        packed_outs = {o: env[o] for o in plan.outputs}
+    else:
+        packed_outs = netlist_exec.run_sequential(plan, streams,
+                                                  use_pallas=use_pallas)
+        if bitflip_rate > 0.0:
+            for i, o in enumerate(sorted(packed_outs)):
+                packed_outs[o] = sc_ops.flip_bits(gate_fkeys[i], packed_outs[o],
+                                                  bitflip_rate)
+    if decode:
+        return {o: bs.to_value(w, bitstream_length)
+                for o, w in packed_outs.items()}
+    return packed_outs
+
+
+def _binary_env(pis, operand_bits: dict[str, jax.Array]) -> dict[str, jax.Array]:
+    """PI env for a binary netlist: supplied operands + const-PI fills."""
+    env: dict[str, jax.Array] = {}
+    shape = next(iter(operand_bits.values())).shape
+    for pi in pis:
+        if pi.name in operand_bits:
+            env[pi.name] = operand_bits[pi.name]
+        elif pi.const_value is not None:
+            fill = jnp.uint32(0xFFFFFFFF) if pi.const_value >= 1.0 else jnp.uint32(0)
+            env[pi.name] = jnp.full(shape, fill)
+        else:
+            raise KeyError(f"missing binary operand {pi.name}")
+    return env
+
+
+@partial(jax.jit, static_argnames=("plan", "use_pallas"))
+def _execute_binary_compiled(plan: ExecutionPlan,
+                             operand_bits: dict[str, jax.Array],
+                             use_pallas: bool) -> dict[str, jax.Array]:
+    from ..kernels import netlist_exec
+
+    env = _binary_env(plan.pis, operand_bits)
+    netlist_exec.run_combinational(plan, env, use_pallas=use_pallas)
+    return {o: env[o] for o in plan.outputs}
+
+
+def _plan_for(net: Netlist, bitflip_rate: float) -> ExecutionPlan:
+    # Per-gate fault injection must observe the 4-gate MUX intermediates, so
+    # the fused plan is only valid for clean combinational runs; sequential
+    # runs inject at PI/output streams only (like the reference) and may fuse.
+    fuse = bitflip_rate == 0.0 or net.is_sequential
+    return compile_plan(net, fuse_mux=fuse)
+
+
+# -------------------------------- public API --------------------------------------
+
+def _dispatch(net: Netlist, values, key, bitstream_length: int,
+              bitflip_rate: float, flip_key, backend: str | None,
+              decode: bool) -> dict[str, jax.Array]:
+    backend = backend or DEFAULT_BACKEND
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {_BACKENDS}")
+    if bitflip_rate > 0.0:
+        assert flip_key is not None
+    if backend == "reference":
+        outs = _execute_reference(net, values, key, bitstream_length,
+                                  bitflip_rate, flip_key)
+        if decode:
+            outs = {k: bs.to_value(v, bitstream_length) for k, v in outs.items()}
+        return outs
+    plan = _plan_for(net, bitflip_rate)
+    values = {k: jnp.asarray(v, jnp.float32) for k, v in values.items()}
+    return _execute_compiled(plan, values, key, flip_key, bitstream_length,
+                             float(bitflip_rate),
+                             backend == "compiled_pallas", decode=decode)
+
+
 def execute(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
             bitstream_length: int, bitflip_rate: float = 0.0,
-            flip_key: jax.Array | None = None) -> dict[str, jax.Array]:
+            flip_key: jax.Array | None = None,
+            backend: str | None = None) -> dict[str, jax.Array]:
     """Execute a (possibly sequential) netlist; returns packed output streams.
 
     ``bitflip_rate`` injects faults on the PI streams and on every gate
     output stream (the paper injects at input/output nodes of the
-    arithmetic operations).
+    arithmetic operations).  ``backend`` selects the execution engine (see
+    module docstring); all backends are bit-identical.
     """
-    streams = _gen_pi_streams(net, values, key, bitstream_length)
+    return _dispatch(net, values, key, bitstream_length, bitflip_rate,
+                     flip_key, backend, decode=False)
+
+
+def execute_value(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
+                  bitstream_length: int, bitflip_rate: float = 0.0,
+                  flip_key: jax.Array | None = None,
+                  backend: str | None = None) -> dict[str, jax.Array]:
+    """Execute and decode each output stream to its unipolar value.
+
+    On the compiled backends the decode is fused into the execution program
+    (single dispatch per call)."""
+    return _dispatch(net, values, key, bitstream_length, bitflip_rate,
+                     flip_key, backend, decode=True)
+
+
+def execute_binary(net: Netlist, operand_bits: dict[str, jax.Array],
+                   backend: str | None = None) -> dict[str, jax.Array]:
+    """Execute a binary netlist on packed test-vector words.
+
+    ``operand_bits`` maps PI names to uint32 words whose lane ``t`` is the
+    PI's value in test vector ``t``.  Constant PIs (const_value set) are
+    filled automatically.  Inverted-polarity storage (the Fig. 7(a) trick) is
+    applied by the *caller* via the netlist's value conventions.
+    """
+    backend = backend or DEFAULT_BACKEND
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {_BACKENDS}")
+    if backend == "reference":
+        env = _binary_env(net.pis, operand_bits)
+        for g in net.gates:
+            env[g.output] = bs.GATE_FNS[g.gtype](*[env[i] for i in g.inputs])
+        return {o: env[o] for o in net.outputs}
+    plan = compile_plan(net, fuse_mux=True)
+    return _execute_binary_compiled(plan, dict(operand_bits),
+                                    backend == "compiled_pallas")
+
+
+# ----------------------------- reference backend ----------------------------------
+
+def _execute_reference(net: Netlist, values: dict[str, jax.Array],
+                       key: jax.Array, bitstream_length: int,
+                       bitflip_rate: float = 0.0,
+                       flip_key: jax.Array | None = None) -> dict[str, jax.Array]:
+    """Gate-by-gate interpreter: the oracle for the compiled plans."""
+    streams = _gen_pi_streams(net.pis, values, key, bitstream_length)
 
     if bitflip_rate > 0.0:
         assert flip_key is not None
@@ -77,10 +246,14 @@ def execute(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
             streams[name] = sc_ops.flip_bits(fkeys[i], streams[name], bitflip_rate)
 
     if not net.is_sequential:
+        # Snapshot the PI-stream count: gate outputs are appended to the env
+        # below, and letting the flip-key index grow with it would silently
+        # clamp past the end of ``fkeys`` and reuse the last key.
+        n_streams = len(streams)
         for gi, g in enumerate(net.gates):
             out = bs.GATE_FNS[g.gtype](*[streams[i] for i in g.inputs])
             if bitflip_rate > 0.0:
-                out = sc_ops.flip_bits(fkeys[len(streams) + gi], out, bitflip_rate)
+                out = sc_ops.flip_bits(fkeys[n_streams + gi], out, bitflip_rate)
             streams[g.output] = out
         return {o: streams[o] for o in net.outputs}
 
@@ -113,39 +286,12 @@ def execute(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
     for o, seq in out_seq.items():
         seq = jnp.moveaxis(seq, 0, -1)                # (..., BL)
         bits = seq.reshape(seq.shape[:-1] + (bl // 32, 32))
-        packed_outs[o] = bs.pack_bits(bits)
+        # Mask to bit 0 before packing: inverting gates (~x) leave garbage
+        # in bits 1..31 of the per-step values, which pack_bits would sum
+        # into other bit positions of the word.
+        packed_outs[o] = bs.pack_bits(bits & jnp.uint32(1))
     if bitflip_rate > 0.0:
         for i, o in enumerate(sorted(packed_outs)):
             packed_outs[o] = sc_ops.flip_bits(fkeys[len(streams) + i],
                                               packed_outs[o], bitflip_rate)
     return packed_outs
-
-
-def execute_value(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
-                  bitstream_length: int, **kw) -> dict[str, jax.Array]:
-    """Execute and decode each output stream to its unipolar value."""
-    outs = execute(net, values, key, bitstream_length, **kw)
-    return {k: bs.to_value(v, bitstream_length) for k, v in outs.items()}
-
-
-def execute_binary(net: Netlist, operand_bits: dict[str, jax.Array]) -> dict[str, jax.Array]:
-    """Execute a binary netlist on packed test-vector words.
-
-    ``operand_bits`` maps PI names to uint32 words whose lane ``t`` is the
-    PI's value in test vector ``t``.  Constant PIs (const_value set) are
-    filled automatically.  Inverted-polarity storage (the Fig. 7(a) trick) is
-    applied by the *caller* via the netlist's value conventions.
-    """
-    env: dict[str, jax.Array] = {}
-    shape = next(iter(operand_bits.values())).shape
-    for pi in net.pis:
-        if pi.name in operand_bits:
-            env[pi.name] = operand_bits[pi.name]
-        elif pi.const_value is not None:
-            fill = jnp.uint32(0xFFFFFFFF) if pi.const_value >= 1.0 else jnp.uint32(0)
-            env[pi.name] = jnp.full(shape, fill)
-        else:
-            raise KeyError(f"missing binary operand {pi.name}")
-    for g in net.gates:
-        env[g.output] = bs.GATE_FNS[g.gtype](*[env[i] for i in g.inputs])
-    return {o: env[o] for o in net.outputs}

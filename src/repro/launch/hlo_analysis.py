@@ -52,6 +52,28 @@ TRAFFIC_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
                   "ragged-all-to-all": 1.0}
 
 
+def _split_top(s: str) -> list[str]:
+    """Split on commas at bracket depth 0 — shapes embed commas both in dims
+    (``f32[64,128]``) and in layout annotations (``{1,0}``, printed by newer
+    XLA versions), so a naive ``split(",")`` corrupts operand names."""
+    parts: list[str] = []
+    depth = 0
+    cur: list[str] = []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
 def _shape_bytes(shape_str: str) -> int:
     total = 0
     for dtype, dims in _SHAPE_TOK.findall(shape_str):
@@ -145,7 +167,7 @@ class HloModule:
             opm = _OPERANDS.search(rest)
             operands = []
             if opm:
-                for tok in opm.group(1).split(","):
+                for tok in _split_top(opm.group(1)):
                     tok = tok.strip().lstrip("%")
                     if tok and not tok[0].isdigit():
                         operands.append(tok.split(" ")[-1].lstrip("%"))

@@ -18,7 +18,10 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+try:
+    from jax import shard_map
+except ImportError:  # jax < 0.6 exposes it under jax.experimental
+    from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as PS
 
 from .common import P, ModelConfig

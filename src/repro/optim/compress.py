@@ -86,7 +86,10 @@ def make_pod_sync(mesh, pspecs, bits: int = 8, pod_axis: str = "pod"):
     parameters are replicated across pods, sharded FSDP/TP within a pod).
     """
     import numpy as np
-    from jax import shard_map
+    try:
+        from jax import shard_map
+    except ImportError:  # jax < 0.6 exposes it under jax.experimental
+        from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as PS
 
     n_pods = mesh.shape[pod_axis]
@@ -137,7 +140,10 @@ def make_pod_sync(mesh, pspecs, bits: int = 8, pod_axis: str = "pod"):
 
 def make_pod_sync_uncompressed(mesh, pspecs, pod_axis: str = "pod"):
     """fp32 pmean baseline for the same sync (the all-reduce we replace)."""
-    from jax import shard_map
+    try:
+        from jax import shard_map
+    except ImportError:  # jax < 0.6 exposes it under jax.experimental
+        from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as PS
 
     def body(*flat):

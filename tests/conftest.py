@@ -2,6 +2,9 @@
 
 NOTE: tests must see the single real CPU device — the 512-device
 XLA_FLAGS override belongs to launch/dryrun.py ONLY.
+
+``hypothesis`` is optional: when installed, the fast profile below is
+registered; when absent, property tests skip per-test via tests/_hyp.py.
 """
 import os
 import sys
@@ -11,12 +14,15 @@ _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
 
-from hypothesis import HealthCheck, settings
-
-settings.register_profile(
-    "fast",
-    max_examples=25,
-    deadline=None,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
-)
-settings.load_profile("fast")
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:
+    pass
+else:
+    settings.register_profile(
+        "fast",
+        max_examples=25,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    settings.load_profile("fast")

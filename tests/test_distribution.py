@@ -21,6 +21,8 @@ from repro.optim import adamw_init, adamw_update, compress_decompress
 from repro.sharding import make_rules, param_pspec_tree, validate_divisibility
 from repro.train import make_train_step, train_state_init
 
+pytestmark = pytest.mark.slow  # full distribution stack: excluded from CI default
+
 
 def small_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))

@@ -11,6 +11,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # 512-device dry-run compiles: excluded from CI default
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

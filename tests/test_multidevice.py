@@ -11,6 +11,10 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+pytestmark = pytest.mark.slow  # subprocess multi-device runs: excluded from CI default
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

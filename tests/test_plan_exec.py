@@ -1,0 +1,224 @@
+"""Compiled execution plans are bit-identical to the reference interpreter.
+
+Every backend claim of executor.py is pinned here with exact stream equality
+(not value tolerance): combinational, sequential (Gaines-divider class),
+bitflip-injected, and binary netlists; MUX fusion; plan/jit cache reuse; and
+the Pallas-routed pass variant.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import apps, circuits, executor
+from repro.core.appnet import APP_NETLISTS
+from repro.core.gates import Netlist
+from repro.core.plan import FUSED_MUX, compile_plan
+
+KEY = jax.random.key(0)
+FLIP_KEY = jax.random.key(99)
+BL = 1024
+
+SC_CASES = [
+    (circuits.sc_multiply, {"a": 0.3, "b": 0.7}),
+    (circuits.sc_scaled_add, {"a": 0.2, "b": 0.9}),
+    (circuits.sc_scaled_add_var, {"a": 0.2, "b": 0.9, "s": 0.4}),
+    (circuits.sc_abs_sub, {"a": 0.4, "b": 0.1}),
+    (circuits.sc_sqrt, {"a": 0.5}),
+    (circuits.sc_exp, {"a": 0.5}),
+]
+
+
+def assert_streams_equal(net, values, bl=BL, **kw):
+    ref = executor.execute(net, values, KEY, bl, backend="reference", **kw)
+    cmp = executor.execute(net, values, KEY, bl, backend="compiled", **kw)
+    assert set(ref) == set(cmp)
+    for o in ref:
+        assert (ref[o] == cmp[o]).all(), f"{net.name}:{o} diverges"
+
+
+# ------------------------------ combinational -------------------------------------
+
+@pytest.mark.parametrize("builder,values", SC_CASES,
+                         ids=[b.__name__ for b, _ in SC_CASES])
+def test_combinational_bit_identical(builder, values):
+    assert_streams_equal(builder(), {k: jnp.float32(v) for k, v in values.items()})
+
+
+def test_combinational_batched_values_bit_identical():
+    net = circuits.sc_multiply()
+    a = jnp.asarray(np.linspace(0.1, 0.9, 8), jnp.float32)
+    assert_streams_equal(net, {"a": a, "b": jnp.full((8,), 0.5, jnp.float32)})
+
+
+def test_mux_tree_bit_identical_and_fused():
+    net = Netlist("tree")
+    leaves = [net.add_pi(f"L{i}", value_key=f"v{i}") for i in range(8)]
+    root = circuits.sc_mux_tree(leaves, net)
+    net.set_outputs([root])
+    vals = {f"v{i}": jnp.float32(0.1 * (i + 1)) for i in range(8)}
+    assert_streams_equal(net, vals)
+    plan = compile_plan(net)
+    assert plan.n_fused_mux == 7           # balanced tree over 8 leaves
+    assert plan.n_passes < plan.n_gates
+
+
+# -------------------------------- sequential --------------------------------------
+
+def test_sequential_divider_bit_identical():
+    net = circuits.sc_scaled_div()
+    assert_streams_equal(net, {"a": jnp.float32(0.4), "b": jnp.float32(0.4)},
+                         bl=2048)
+
+
+def test_sequential_batched_bit_identical():
+    net = circuits.sc_scaled_div()
+    a = jnp.asarray(np.linspace(0.1, 0.6, 4), jnp.float32)
+    assert_streams_equal(net, {"a": a, "b": jnp.full((4,), 0.3, jnp.float32)},
+                         bl=512)
+
+
+def test_sequential_inverting_output_bit_identical_and_correct():
+    # Regression: an output driven by a NOT gate carries garbage in bits
+    # 1..31 of the per-step values; both backends must mask before packing.
+    net = Netlist("div_with_qbar_out")
+    a = net.add_pi("A", value_key="a")
+    b = net.add_pi("B", value_key="b")
+    from repro.core.gates import PIKind
+    q = net.add_pi("Q", kind=PIKind.STATE)
+    qb = net.add_gate("NOT", [q], "Q_bar")
+    bb = net.add_gate("NOT", [b], "B_bar")
+    n1 = net.add_gate("NAND", [a, qb], "n1")
+    n2 = net.add_gate("NAND", [bb, q], "n2")
+    qn = net.add_gate("NAND", [n1, n2], "Q_next")
+    qnb = net.add_gate("NOT", [qn], "Qn_bar")
+    net.bind_state(q, qn, init=0.0)
+    net.set_outputs([qn, qnb])
+    vals = {"a": jnp.float32(0.4), "b": jnp.float32(0.5)}
+    assert_streams_equal(net, vals, bl=2048)
+    out = executor.execute_value(net, vals, jax.random.key(2), 16384)
+    assert abs(float(out["Q_next"]) - 0.4 / 0.9) < 0.03
+    assert abs(float(out["Qn_bar"]) - (1 - 0.4 / 0.9)) < 0.03
+
+
+def test_sequential_value_converges():
+    # The scan-over-words path reproduces the divider fixed point.
+    out = executor.execute_value(circuits.sc_scaled_div(),
+                                 {"a": jnp.float32(0.4), "b": jnp.float32(0.4)},
+                                 jax.random.key(1), 16384, backend="compiled")
+    assert abs(float(out["Q_next"]) - 0.5) < 0.03
+
+
+# --------------------------------- bitflips ---------------------------------------
+
+@pytest.mark.parametrize("rate", [0.05, 0.2])
+def test_bitflip_combinational_bit_identical(rate):
+    for builder, values in SC_CASES[:3]:
+        assert_streams_equal(builder(),
+                             {k: jnp.float32(v) for k, v in values.items()},
+                             bitflip_rate=rate, flip_key=FLIP_KEY)
+
+
+def test_bitflip_sequential_bit_identical():
+    assert_streams_equal(circuits.sc_scaled_div(),
+                         {"a": jnp.float32(0.4), "b": jnp.float32(0.2)},
+                         bl=512, bitflip_rate=0.1, flip_key=FLIP_KEY)
+
+
+def test_bitflip_uses_unfused_plan():
+    net = circuits.sc_scaled_add()
+    assert compile_plan(net, fuse_mux=True).n_fused_mux == 1
+    assert compile_plan(net, fuse_mux=False).n_fused_mux == 0
+
+
+# ---------------------------------- binary ----------------------------------------
+
+@pytest.mark.parametrize("n_bits", [3, 8])
+def test_binary_adder_bit_identical_and_correct(n_bits):
+    rng = np.random.default_rng(n_bits)
+    a = jnp.asarray(rng.integers(0, 1 << n_bits, 64), jnp.uint32)
+    b = jnp.asarray(rng.integers(0, 1 << n_bits, 64), jnp.uint32)
+    net = circuits.binary_ripple_carry_adder(n_bits)
+    bits = circuits.rca_prepare_inputs(a, b, n_bits)
+    ref = executor.execute_binary(net, bits, backend="reference")
+    cmp = executor.execute_binary(net, bits, backend="compiled")
+    for o in ref:
+        assert (ref[o] == cmp[o]).all()
+    dec = circuits.rca_decode_outputs(cmp, n_bits)
+    assert (np.asarray(dec) == np.asarray(a) + np.asarray(b)).all()
+
+
+def test_binary_missing_operand_raises():
+    net = circuits.binary_ripple_carry_adder(2)
+    with pytest.raises(KeyError):
+        executor.execute_binary(net, {"A0": jnp.zeros((4,), jnp.uint32)},
+                                backend="compiled")
+
+
+# --------------------------------- appnets ----------------------------------------
+
+def test_appnet_ol_bit_identical_and_level_batched():
+    net = APP_NETLISTS["ol"]()
+    vals = apps.appnet_inputs("ol", p=np.full((16, 6), 0.8))
+    assert_streams_equal(net, vals, bl=256)
+    plan = compile_plan(net)
+    # 16 parallel pixel circuits collapse to one fused pass per level.
+    assert plan.n_gates == 160 and plan.n_passes <= 10
+
+
+def test_appnet_hdp_sequential_bit_identical():
+    vals = {k: jnp.float32(0.5) for k in apps.HDP_KEYS}
+    net = APP_NETLISTS["hdp"]()
+    assert_streams_equal(net, apps.appnet_inputs("hdp", v=vals), bl=256)
+
+
+def test_appnet_stochastic_tracks_exact_product():
+    p = np.full((16, 6), 0.9)
+    out = apps.appnet_stochastic("ol", jax.random.key(3), bl=2048, p=p)
+    got = np.asarray(list(out.values())).mean()
+    assert abs(got - 0.9 ** 6) < 0.05
+
+
+# ------------------------------ plan properties -----------------------------------
+
+def test_plan_cache_interns_equal_structures():
+    p1 = compile_plan(circuits.sc_multiply())
+    p2 = compile_plan(circuits.sc_multiply())
+    assert p1 is p2
+
+
+def test_fusion_is_not_applied_to_observable_intermediates():
+    # If a MUX intermediate is also a primary output it must stay
+    # materialized — no fusion may swallow it.
+    net = Netlist("observed_mux")
+    a = net.add_pi("A", value_key="a")
+    b = net.add_pi("B", value_key="b")
+    s = net.add_pi("S", value_key="s")
+    sb = net.add_gate("NOT", [s], "sb")
+    n1 = net.add_gate("NAND", [a, s], "n1")
+    n2 = net.add_gate("NAND", [b, sb], "n2")
+    net.add_gate("NAND", [n1, n2], "out")
+    net.set_outputs(["out", "n1"])
+    plan = compile_plan(net)
+    assert plan.n_fused_mux == 0
+    vals = {"a": jnp.float32(0.3), "b": jnp.float32(0.6), "s": jnp.float32(0.5)}
+    assert_streams_equal(net, vals)
+
+
+def test_fused_plan_collapses_scaled_add_to_single_pass():
+    plan = compile_plan(circuits.sc_scaled_add())
+    assert plan.n_passes == 1
+    assert plan.levels[0][0].op == FUSED_MUX
+
+
+# ---------------------------------- pallas ----------------------------------------
+
+@pytest.mark.pallas
+def test_pallas_backend_bit_identical():
+    for builder, values in (SC_CASES[0], SC_CASES[3]):
+        net = builder()
+        vals = {k: jnp.float32(v) for k, v in values.items()}
+        ref = executor.execute(net, vals, KEY, 256, backend="reference")
+        pal = executor.execute(net, vals, KEY, 256, backend="compiled_pallas")
+        for o in ref:
+            assert (ref[o] == pal[o]).all()
