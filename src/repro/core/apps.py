@@ -412,6 +412,54 @@ def appnet_stochastic(app: str, key: jax.Array, bl: int = 256,
                                   backend=backend)
 
 
+def appnet_stochastic_many(requests, key, bl: int = 256,
+                           backend: str | None = None,
+                           bitflip_rate: float = 0.0, flip_keys=None,
+                           nets: "list[Netlist] | None" = None) -> list:
+    """Serve N concurrent app evaluations as ONE fused bank-level plan.
+
+    ``requests``: sequence of ``(app, inputs)`` pairs — ``app`` one of
+    ``APPS``, ``inputs`` the keyword dict ``appnet_inputs`` expects.  The
+    member netlists (heterogeneous — e.g. 4 LIT windows + 2 OL tiles + an HDP
+    query) merge into one bank plan (``core/plan.compile_bank_plan``): every
+    gate level is type-batched *across* requests and the whole bank runs as a
+    single jit dispatch instead of one ``execute`` per request — the paper's
+    Fig. 8 bank-level SIMD, and the serving path for many concurrent app
+    requests per device.  ``key`` may be one key (split N ways) or N keys;
+    results are bit-identical to per-request ``appnet_stochastic`` calls with
+    the same per-member keys.  Pass ``nets`` to reuse built netlists across
+    calls (keeps the bank-plan/jit caches warm).  Returns one decoded-output
+    dict per request, in request order.
+    """
+    from .appnet import APP_NETLISTS
+    if nets is None:
+        nets = [APP_NETLISTS[app]() for app, _ in requests]
+    values = [appnet_inputs(app, **inp) for app, inp in requests]
+    return executor.execute_value_many(nets, values, key, bl,
+                                       bitflip_rate=bitflip_rate,
+                                       flip_keys=flip_keys, backend=backend)
+
+
+def cost_stage_netlists(app: str, max_instances: int | None = None) -> list:
+    """Expand an app's ``cost_stages()`` into per-instance bank members.
+
+    Every stage instance becomes one member (repeating the stage's netlist
+    object — structure-equal members intern to one compiled plan), so
+    ``compile_bank_plan(cost_stage_netlists(app))`` is the bank-level plan of
+    the whole Table-3 application: all same-type gates of a level across all
+    stage instances fire in one pass (``arch.evaluate_bank_plan`` maps the
+    pass counts onto the [n, m] bank cycle model).
+    """
+    stages_fn = {"lit": lit_cost_stages, "ol": ol_cost_stages,
+                 "hdp": hdp_cost_stages, "kde": kde_cost_stages}[app]
+    nets = []
+    for st in stages_fn():
+        k = st.n_instances if max_instances is None \
+            else min(st.n_instances, max_instances)
+        nets.extend([st.netlist] * k)
+    return nets
+
+
 # ============================== registry =========================================
 
 APPS = ("lit", "ol", "hdp", "kde")

@@ -220,6 +220,60 @@ def evaluate_sc_cram(net: Netlist, sch_1lane: Schedule, cfg: StochIMCConfig,
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class BankPlanCost:
+    """Cycle accounting for a bank-merged plan vs a per-member dispatch loop."""
+
+    n_members: int
+    merged_passes: int           # fused passes of the merged plan
+    looped_passes: int           # sum of per-member plan passes
+    pipeline_factor: int         # sequential bank passes to cover BL lanes
+    accumulation_cycles: int     # n + m hierarchical StoB steps
+    merged_cycles: int
+    looped_cycles: int
+
+    @property
+    def simd_speedup(self) -> float:
+        return self.looped_cycles / max(self.merged_cycles, 1)
+
+
+def evaluate_bank_plan(bank, cfg: StochIMCConfig,
+                       q_lanes: int | None = None) -> BankPlanCost:
+    """Map merged-plan pass counts onto the [n, m] bank model (Fig. 8).
+
+    ``bank`` is a ``core.plan.BankPlan``.  One fused pass = one bank cycle:
+    the same gate type fires across every occupied column of every subarray
+    simultaneously, so same-type gates of a level — *across member circuits*,
+    which occupy disjoint columns — share the pass.  Bitstream bits occupy
+    ``q_lanes`` rows per subarray (default: all rows) and spread over the
+    bank's n*m subarrays; longer streams pipeline (``pipeline_factor``
+    sequential bank passes, the paper's evaluation mode).
+
+    Merged vs looped: a per-member dispatch loop pays every member's own pass
+    count (types can't share passes across dispatches) *and* one hierarchical
+    accumulation (n + m steps) per dispatch, while the merged plan pays its
+    cross-member type-batched passes once and accumulates all members' output
+    columns in one n + m hierarchy — this is the memory-level-parallelism gap
+    the bank merging closes, and what Table-3 accounting reflects when N
+    instances are served per bank.
+    """
+    q = q_lanes if q_lanes is not None else cfg.subarray_rows
+    lanes_per_pass = q * cfg.subarrays_per_bank * cfg.n_banks
+    pipeline = max(1, math.ceil(cfg.bitstream_length / lanes_per_pass))
+    acc = cfg.accumulation_steps()
+    merged = bank.n_passes * pipeline + acc
+    looped = bank.n_passes_looped * pipeline + acc * bank.n_members
+    return BankPlanCost(
+        n_members=bank.n_members,
+        merged_passes=bank.n_passes,
+        looped_passes=bank.n_passes_looped,
+        pipeline_factor=pipeline,
+        accumulation_cycles=acc,
+        merged_cycles=merged,
+        looped_cycles=looped,
+    )
+
+
 def lifetime_improvement(a: AppCost, baseline: AppCost) -> float:
     """Eq. (11) ratio: (E_max * C / B) relative to baseline, with C = utilized
     cells and B = write traffic (write accesses dominate endurance)."""

@@ -37,12 +37,17 @@ def _threshold_u32(p: jax.Array) -> jax.Array:
     This is the digital analogue of the BtoS voltage-pulse LUT: the value is
     quantized to a threshold such that P(rand_u32 < threshold) = p.
     """
-    p = jnp.clip(p.astype(jnp.float64) if jax.config.read("jax_enable_x64") else p.astype(jnp.float32), 0.0, 1.0)
-    # 2**32 cannot be represented in uint32; clamp to the max so p=1.0 gives
-    # an (almost-surely) all-ones stream: threshold 0xFFFFFFFF covers all but
-    # one value in 2^32.
-    scaled = jnp.round(p * jnp.float32(4294967296.0))
-    return jnp.minimum(scaled, jnp.float32(4294967295.0)).astype(jnp.uint32)
+    dt = jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
+    p = jnp.clip(p.astype(dt), 0.0, 1.0)
+    scaled = jnp.round(p * dt(4294967296.0))
+    # 2^32 is not representable in uint32 — and float32 cannot even hold
+    # 2^32 - 1 (it rounds to 2^32), so a float-side minimum is a no-op and the
+    # out-of-range float->uint32 cast it was meant to prevent is undefined
+    # across XLA backends.  Clamp on the integer side instead: anything that
+    # rounded to >= 2^32 maps to 0xFFFFFFFF, so p=1.0 gives an (almost-surely)
+    # all-ones stream — threshold 0xFFFFFFFF covers all but one value in 2^32.
+    return jnp.where(scaled >= dt(4294967296.0), jnp.uint32(0xFFFFFFFF),
+                     scaled.astype(jnp.uint32))
 
 
 def _uniform_u32(key: jax.Array, shape: tuple[int, ...]) -> jax.Array:

@@ -32,7 +32,8 @@ import jax.numpy as jnp
 from . import bitstream as bs
 from . import sc_ops
 from .gates import Netlist, PIKind
-from .plan import ExecutionPlan, compile_plan
+from .plan import (BankPlan, ExecutionPlan, compile_bank_plan, compile_plan,
+                   member_prefix)
 
 #: Default backend for execute()/execute_value()/execute_binary().
 DEFAULT_BACKEND = "compiled"
@@ -112,8 +113,9 @@ def _execute_compiled(plan: ExecutionPlan, values: dict[str, jax.Array],
                                        use_pallas=use_pallas)
         packed_outs = {o: env[o] for o in plan.outputs}
     else:
-        packed_outs = netlist_exec.run_sequential(plan, streams,
-                                                  use_pallas=use_pallas)
+        packed_outs = netlist_exec.run_sequential(
+            plan, streams, use_pallas=use_pallas,
+            n_words=bs.n_words(bitstream_length))
         if bitflip_rate > 0.0:
             for i, o in enumerate(sorted(packed_outs)):
                 packed_outs[o] = sc_ops.flip_bits(gate_fkeys[i], packed_outs[o],
@@ -132,7 +134,17 @@ def _binary_env(pis, operand_bits: dict[str, jax.Array]) -> dict[str, jax.Array]
         if pi.name in operand_bits:
             env[pi.name] = operand_bits[pi.name]
         elif pi.const_value is not None:
-            fill = jnp.uint32(0xFFFFFFFF) if pi.const_value >= 1.0 else jnp.uint32(0)
+            c = float(pi.const_value)
+            if c == 0.0:
+                fill = jnp.uint32(0)
+            elif c == 1.0:
+                fill = jnp.uint32(0xFFFFFFFF)
+            else:
+                # A binary constant cell holds one bit; flooring 0 < c < 1 to
+                # an all-zeros word would silently miscompute.
+                raise ValueError(
+                    f"binary PI {pi.name}: const_value must be 0.0 or 1.0, "
+                    f"got {pi.const_value}")
             env[pi.name] = jnp.full(shape, fill)
         else:
             raise KeyError(f"missing binary operand {pi.name}")
@@ -166,8 +178,8 @@ def _dispatch(net: Netlist, values, key, bitstream_length: int,
     backend = backend or DEFAULT_BACKEND
     if backend not in _BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected one of {_BACKENDS}")
-    if bitflip_rate > 0.0:
-        assert flip_key is not None
+    if bitflip_rate > 0.0 and flip_key is None:
+        raise ValueError("bitflip_rate > 0 requires flip_key")
     if backend == "reference":
         outs = _execute_reference(net, values, key, bitstream_length,
                                   bitflip_rate, flip_key)
@@ -230,6 +242,179 @@ def execute_binary(net: Netlist, operand_bits: dict[str, jax.Array],
                                     backend == "compiled_pallas")
 
 
+# ----------------------------- bank-level execution -------------------------------
+
+def _restrict(x: jax.Array, batch: tuple[int, ...]) -> jax.Array:
+    """Undo a broadcast: restrict ``x`` of shape (*common, W) to (*batch, W).
+
+    Exact, not approximate: a merged member's nodes only ever combine
+    elementwise with that member's own (broadcast) streams, so the restricted
+    entries equal the member's native computation bit for bit.
+    """
+    want = len(batch) + 1
+    if x.ndim == want and x.shape[:-1] == batch:
+        return x
+    x = x[(0,) * (x.ndim - want)]
+    for ax, d in enumerate(batch):
+        if d == 1 and x.shape[ax] != 1:
+            x = jax.lax.slice_in_dim(x, 0, 1, axis=ax)
+    return x
+
+
+@partial(jax.jit, static_argnames=("bank", "bitstream_length", "bitflip_rate",
+                                   "use_pallas", "decode"))
+def _execute_bank(bank: BankPlan, values_seq, keys, flip_keys,
+                  bitstream_length: int, bitflip_rate: float,
+                  use_pallas: bool, decode: bool):
+    """Whole-bank execution of N member netlists as one XLA program.
+
+    Stream generation and fault keying stay *per member*: member ``i``'s
+    streams are drawn from ``keys[i]`` / ``flip_keys[i]`` exactly as a
+    standalone ``execute`` call would draw them, so a merged run is
+    bit-identical to a loop of per-member runs.  Only the logic merges — all
+    combinational members execute through one merged plan (cross-member
+    type-batched levels), all sequential members through one merged scan.
+    """
+    from ..kernels import netlist_exec
+
+    comb_env: dict[str, jax.Array] = {}
+    seq_words: dict[str, jax.Array] = {}
+    comb_gate_fkeys: list[jax.Array] = []
+    seq_out_fkeys: dict[int, jax.Array | None] = {}
+    native_batch: dict[int, tuple[int, ...]] = {}
+    for i, plan in enumerate(bank.members):
+        pre = member_prefix(i)
+        streams = _gen_pi_streams(plan.pis, values_seq[i], keys[i],
+                                  bitstream_length)
+        tail = None
+        if bitflip_rate > 0.0:
+            fkeys = jax.random.split(flip_keys[i], len(streams) + plan.n_gates)
+            for j, nm in enumerate(sorted(streams)):
+                streams[nm] = sc_ops.flip_bits(fkeys[j], streams[nm],
+                                               bitflip_rate)
+            tail = fkeys[len(streams):]
+        native_batch[i] = (next(iter(streams.values())).shape[:-1]
+                           if streams else ())
+        target = seq_words if plan.is_sequential else comb_env
+        for nm, v in streams.items():
+            target[pre + nm] = v
+        if plan.is_sequential:
+            seq_out_fkeys[i] = tail
+        elif tail is not None:
+            # Flat per-gate key blocks in merge (= ascending member) order:
+            # the merged plan's gids are offset to index this concatenation.
+            comb_gate_fkeys.append(tail)
+
+    outs: list = [None] * bank.n_members
+    if bank.comb is not None:
+        gf = jnp.concatenate(comb_gate_fkeys) if comb_gate_fkeys else None
+        netlist_exec.run_combinational(bank.comb, comb_env, gate_fkeys=gf,
+                                       bitflip_rate=bitflip_rate,
+                                       use_pallas=use_pallas)
+        for i in bank.comb_members:
+            pre = member_prefix(i)
+            outs[i] = {o: comb_env[pre + o] for o in bank.members[i].outputs}
+    if bank.seq is not None:
+        packed = netlist_exec.run_sequential(
+            bank.seq, seq_words, use_pallas=use_pallas,
+            n_words=bs.n_words(bitstream_length))
+        for i in bank.seq_members:
+            pre = member_prefix(i)
+            m = {o: _restrict(packed[pre + o], native_batch[i])
+                 for o in bank.members[i].outputs}
+            if bitflip_rate > 0.0:
+                tail = seq_out_fkeys[i]
+                for j, o in enumerate(sorted(m)):
+                    m[o] = sc_ops.flip_bits(tail[j], m[o], bitflip_rate)
+            outs[i] = m
+    if decode:
+        outs = [{o: bs.to_value(w, bitstream_length) for o, w in m.items()}
+                for m in outs]
+    return tuple(outs)
+
+
+def _as_f32(v) -> jax.Array:
+    """asarray(v, float32), skipping the (surprisingly costly) conversion
+    machinery on the serving hot path when the caller already holds f32."""
+    if isinstance(v, jax.Array) and v.dtype == jnp.float32:
+        return v
+    return jnp.asarray(v, jnp.float32)
+
+
+def _normalize_keys(keys, n: int, what: str = "keys") -> jax.Array:
+    """Accept one key (split n ways), a key array, or a sequence of keys.
+
+    Returns a stacked (n,) key array — members index it *inside* the jitted
+    program, so the per-member key slicing costs no host dispatches.
+    """
+    if isinstance(keys, (list, tuple)):
+        keys = jnp.stack(keys)
+    elif jnp.ndim(keys) == 0:
+        keys = jax.random.split(keys, n)
+    if keys.shape[0] != n:
+        raise ValueError(f"{what}: got {keys.shape[0]} for {n} netlists")
+    return keys
+
+
+def _dispatch_many(nets, values_seq, keys, bitstream_length: int,
+                   bitflip_rate: float, flip_keys, backend: str | None,
+                   decode: bool) -> list:
+    backend = backend or DEFAULT_BACKEND
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {_BACKENDS}")
+    n = len(nets)
+    if n == 0:
+        raise ValueError("execute_many: need at least one netlist")
+    if len(values_seq) != n:
+        raise ValueError(f"values: got {len(values_seq)} for {n} netlists")
+    keys = _normalize_keys(keys, n)
+    if bitflip_rate > 0.0:
+        if flip_keys is None:
+            raise ValueError("bitflip_rate > 0 requires flip_keys")
+        flip_keys = _normalize_keys(flip_keys, n, "flip_keys")
+    else:
+        flip_keys = None
+    if backend == "reference":
+        return [_dispatch(net, dict(vals), keys[i], bitstream_length,
+                          bitflip_rate,
+                          flip_keys[i] if flip_keys is not None else None,
+                          backend, decode)
+                for i, (net, vals) in enumerate(zip(nets, values_seq))]
+    bank = compile_bank_plan(list(nets), fuse_mux=bitflip_rate == 0.0)
+    values_seq = tuple({k: _as_f32(v) for k, v in vals.items()}
+                       for vals in values_seq)
+    outs = _execute_bank(bank, values_seq, keys, flip_keys, bitstream_length,
+                         float(bitflip_rate), backend == "compiled_pallas",
+                         decode)
+    return list(outs)
+
+
+def execute_many(nets, values_seq, keys, bitstream_length: int,
+                 bitflip_rate: float = 0.0, flip_keys=None,
+                 backend: str | None = None) -> list:
+    """Execute N (possibly different) netlists as ONE fused bank-level plan.
+
+    ``nets[i]`` runs with PI values ``values_seq[i]`` and PRNG key ``keys[i]``
+    (``keys`` may also be a single key, which is split N ways).  Returns one
+    packed-output dict per member, bit-identical to calling ``execute`` per
+    netlist with the same per-member keys — the merged plan batches same-type
+    gates of each level *across* members (core/plan.py bank merging), so the
+    whole bank runs in a single jit dispatch instead of N.  Member batch
+    shapes may differ.  ``bitflip_rate`` injects per-member faults keyed by
+    ``flip_keys[i]`` (single key allowed, split N ways).
+    """
+    return _dispatch_many(nets, values_seq, keys, bitstream_length,
+                          bitflip_rate, flip_keys, backend, decode=False)
+
+
+def execute_value_many(nets, values_seq, keys, bitstream_length: int,
+                       bitflip_rate: float = 0.0, flip_keys=None,
+                       backend: str | None = None) -> list:
+    """``execute_many`` with the StoB decode fused into the same program."""
+    return _dispatch_many(nets, values_seq, keys, bitstream_length,
+                          bitflip_rate, flip_keys, backend, decode=True)
+
+
 # ----------------------------- reference backend ----------------------------------
 
 def _execute_reference(net: Netlist, values: dict[str, jax.Array],
@@ -240,7 +425,8 @@ def _execute_reference(net: Netlist, values: dict[str, jax.Array],
     streams = _gen_pi_streams(net.pis, values, key, bitstream_length)
 
     if bitflip_rate > 0.0:
-        assert flip_key is not None
+        if flip_key is None:
+            raise ValueError("bitflip_rate > 0 requires flip_key")
         fkeys = jax.random.split(flip_key, len(streams) + len(net.gates))
         for i, name in enumerate(sorted(streams)):
             streams[name] = sc_ops.flip_bits(fkeys[i], streams[name], bitflip_rate)
@@ -259,7 +445,9 @@ def _execute_reference(net: Netlist, values: dict[str, jax.Array],
 
     # Sequential: iterate the combinational core over bitstream bits.
     state_pis = list(net.state_bindings.keys())
-    shape = next(iter(streams.values())).shape  # (..., W)
+    # State-only recurrences have no streams to read the shape from.
+    shape = (next(iter(streams.values())).shape if streams
+             else (bitstream_length // bs.WORD_BITS,))  # (..., W)
     bl = bitstream_length
 
     def unpack_time_major(w):
@@ -270,7 +458,7 @@ def _execute_reference(net: Netlist, values: dict[str, jax.Array],
     time_streams = {k: unpack_time_major(v) for k, v in streams.items()}
 
     def step(state, xs):
-        env = dict(xs)
+        env = dict(xs) if xs is not None else {}
         for s_name in state_pis:
             env[s_name] = state[s_name]
         for g in net.gates:
@@ -281,7 +469,8 @@ def _execute_reference(net: Netlist, values: dict[str, jax.Array],
 
     init = {s: jnp.full(shape[:-1], jnp.uint32(round(net.state_bindings[s][1])))
             for s in state_pis}
-    _, out_seq = jax.lax.scan(step, init, time_streams)
+    _, out_seq = jax.lax.scan(step, init, time_streams or None,
+                              length=None if time_streams else bl)
     packed_outs = {}
     for o, seq in out_seq.items():
         seq = jnp.moveaxis(seq, 0, -1)                # (..., BL)

@@ -103,12 +103,18 @@ class Netlist:
         self.state_bindings: dict[str, tuple[str, float]] = {}  # state PI -> (driving node, init value)
         self._node_driver: dict[str, int] = {}
         self._gid = 0
+        #: Mutation counter: bumped by every structural mutator so downstream
+        #: caches (the plan compiler's per-instance memo) can detect in-place
+        #: edits that leave PI/gate counts unchanged.  Structural edits MUST go
+        #: through the mutators below — direct list surgery is unsupported.
+        self._version = 0
 
     # -- construction -----------------------------------------------------------
     def add_pi(self, name: str, **kw) -> str:
         if name in self._node_driver or any(p.name == name for p in self.pis):
             raise ValueError(f"duplicate node {name}")
         self.pis.append(PrimaryInput(name=name, **kw))
+        self._version += 1
         return name
 
     def add_gate(self, gtype: str, inputs: Sequence[str], output: str, row: int = ALL_ROWS) -> str:
@@ -118,13 +124,33 @@ class Netlist:
         self.gates.append(g)
         self._node_driver[output] = g.gid
         self._gid += 1
+        self._version += 1
         return output
+
+    def replace_gate(self, gid: int, gtype: str | None = None,
+                     inputs: Sequence[str] | None = None) -> None:
+        """Replace an existing gate's type and/or inputs in place.
+
+        The gate keeps its gid and output node.  This is the supported way to
+        edit a built netlist: it bumps the mutation counter so compiled plans
+        memoized against the old structure are invalidated (the gate *count*
+        does not change, so count-based cache guards cannot see the edit).
+        """
+        old = self.gates[gid]
+        assert old.gid == gid  # gids are assigned densely in append order
+        new = Gate(gid, gtype if gtype is not None else old.gtype,
+                   tuple(inputs) if inputs is not None else old.inputs,
+                   old.output, old.row)
+        self.gates[gid] = new
+        self._version += 1
 
     def bind_state(self, state_pi: str, driving_node: str, init: float = 0.0) -> None:
         self.state_bindings[state_pi] = (driving_node, init)
+        self._version += 1
 
     def set_outputs(self, names: Iterable[str]) -> None:
         self.outputs = list(names)
+        self._version += 1
 
     # -- queries ----------------------------------------------------------------
     @property

@@ -161,14 +161,16 @@ def _signature(net: Netlist) -> tuple:
 
 
 _PLAN_CACHE: dict[tuple, ExecutionPlan] = {}
+_BANK_CACHE: dict[tuple, "BankPlan"] = {}
 
 
 def cache_info() -> dict[str, int]:
-    return {"plans": len(_PLAN_CACHE)}
+    return {"plans": len(_PLAN_CACHE), "banks": len(_BANK_CACHE)}
 
 
 def clear_cache() -> None:
     _PLAN_CACHE.clear()
+    _BANK_CACHE.clear()
 
 
 def compile_plan(net: Netlist, fuse_mux: bool = True) -> ExecutionPlan:
@@ -178,18 +180,25 @@ def compile_plan(net: Netlist, fuse_mux: bool = True) -> ExecutionPlan:
     per-gate fault injection must observe the intermediate streams (Table 4),
     and by construction bit-identical to the interpreter in all cases.
 
-    Netlists are treated as immutable once compiled: a fast per-instance memo
-    (guarded by the PI/gate/output counts) front-runs the structural cache so
-    the hot execute() path doesn't rebuild the signature every call.
+    A fast per-instance memo front-runs the structural cache so the hot
+    execute() path doesn't rebuild the signature every call.  The memo is
+    guarded by the netlist's mutation counter (bumped by every Netlist
+    mutator, including in-place ``replace_gate`` edits that leave the gate
+    count unchanged) plus the PI/gate counts as a belt-and-braces check, so
+    mutating a compiled netlist through its mutators always recompiles.
     """
     memo = net.__dict__.setdefault("_plan_memo", {})
-    # PIs/gates can only be appended (lengths catch that); outputs and state
-    # bindings can be *replaced* at equal length, so they go in by value.
-    memo_key = (fuse_mux, len(net.pis), len(net.gates), tuple(net.outputs),
-                tuple(sorted(net.state_bindings.items())))
+    memo_key = (fuse_mux, getattr(net, "_version", None),
+                len(net.pis), len(net.gates))
     hit = memo.get(memo_key)
     if hit is not None:
         return hit
+
+    # Entries from older netlist versions can never hit again — drop them so
+    # a mutate/recompile loop doesn't grow the memo (at most the two fuse_mux
+    # variants of the current version remain).
+    for k in [k for k in memo if k[1] != memo_key[1]]:
+        del memo[k]
 
     key = (_signature(net), fuse_mux)
     cached = _PLAN_CACHE.get(key)
@@ -244,3 +253,152 @@ def compile_plan(net: Netlist, fuse_mux: bool = True) -> ExecutionPlan:
     _PLAN_CACHE[key] = plan
     memo[memo_key] = plan
     return plan
+
+
+# ---------------------------- bank-level merging -----------------------------------
+#
+# The paper's Fig. 8 bank executes many circuit instances side by side: every
+# subarray pass fires the same gate type across ALL columns of ALL subarrays,
+# so independent circuits mapped to disjoint columns share passes.  The TPU
+# translation: merge N (possibly different) netlists' plans into ONE plan
+# whose levels type-batch gates *across* members — one CompiledOp pass covers
+# every same-type gate of a level bank-wide, and N app instances execute as a
+# single fused XLA program (executor.execute_many).
+
+def member_prefix(index: int) -> str:
+    """Node-namespace prefix for bank member ``index`` ("b3/out" etc.)."""
+    return f"b{index}/"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BankPlan:
+    """N member plans merged for bank-level execution.
+
+    Combinational members merge into one word-parallel plan (``comb``);
+    sequential members merge into one plan run as a single scan (``seq``) —
+    mixing them would re-execute combinational logic per bitstream bit.
+    ``comb_members`` / ``seq_members`` hold the caller-order member indices of
+    each group, in merge order (ascending), which is also the order of the
+    per-member flat fault-key blocks (see ``executor._execute_bank``).
+    """
+
+    name: str
+    members: tuple[ExecutionPlan, ...]
+    comb: ExecutionPlan | None
+    seq: ExecutionPlan | None
+    comb_members: tuple[int, ...]
+    seq_members: tuple[int, ...]
+
+    @property
+    def n_members(self) -> int:
+        return len(self.members)
+
+    @property
+    def n_passes(self) -> int:
+        """Fused passes per bank-wide evaluation (the merged headline)."""
+        return (self.comb.n_passes if self.comb else 0) + \
+               (self.seq.n_passes if self.seq else 0)
+
+    @property
+    def n_passes_looped(self) -> int:
+        """Passes a per-member dispatch loop would execute (the baseline)."""
+        return sum(m.n_passes for m in self.members)
+
+
+def merge_plans(plans: "list[ExecutionPlan]", indices: "list[int]",
+                name: str) -> ExecutionPlan:
+    """Merge same-kind plans into one cross-member type-batched plan.
+
+    ``indices`` are the members' caller-order positions — they become the node
+    namespace prefixes, so the executor can scatter outputs back per member.
+    Members are independent graphs, so each gate keeps its per-member level;
+    merging level ``L`` across members and type-batching within it is a valid
+    re-leveling of the union graph.  Gate ids are offset by the running gate
+    count so they index a flat per-merge-order fault-key array.
+    """
+    if len({p.is_sequential for p in plans}) > 1:
+        raise ValueError("merge_plans: cannot mix sequential and "
+                         "combinational members in one merged plan")
+    prefixes = [member_prefix(i) for i in indices]
+    offsets = []
+    off = 0
+    for p in plans:
+        offsets.append(off)
+        off += p.n_gates
+
+    n_levels = max(len(p.levels) for p in plans)
+    levels = []
+    for lvl in range(n_levels):
+        by_op: dict[str, list[tuple]] = {}
+        for p, pre, goff in zip(plans, prefixes, offsets):
+            if lvl >= len(p.levels):
+                continue
+            for cop in p.levels[lvl]:
+                by_op.setdefault(cop.op, []).append((cop, pre, goff))
+        ops = []
+        for op, entries in by_op.items():
+            arity = len(entries[0][0].inputs)
+            ops.append(CompiledOp(
+                op=op,
+                gids=tuple(goff + g for cop, _, goff in entries
+                           for g in cop.gids),
+                inputs=tuple(tuple(pre + n for cop, pre, _ in entries
+                                   for n in cop.inputs[j])
+                             for j in range(arity)),
+                outputs=tuple(pre + o for cop, pre, _ in entries
+                              for o in cop.outputs),
+            ))
+        levels.append(tuple(ops))
+
+    pis = tuple(dataclasses.replace(
+        pi, name=pre + pi.name,
+        corr_group=(pre + pi.corr_group) if pi.corr_group else None)
+        for p, pre in zip(plans, prefixes) for pi in p.pis)
+    return ExecutionPlan(
+        name=name,
+        pis=pis,
+        n_gates=off,
+        levels=tuple(levels),
+        outputs=tuple(pre + o for p, pre in zip(plans, prefixes)
+                      for o in p.outputs),
+        state_pis=tuple(pre + s for p, pre in zip(plans, prefixes)
+                        for s in p.state_pis),
+        state_drivers=tuple(pre + d for p, pre in zip(plans, prefixes)
+                            for d in p.state_drivers),
+        state_inits=tuple(i for p in plans for i in p.state_inits),
+        fused=any(p.fused for p in plans),
+        n_fused_mux=sum(p.n_fused_mux for p in plans),
+    )
+
+
+def compile_bank_plan(nets: "list[Netlist]", fuse_mux: bool = True,
+                      name: str | None = None) -> BankPlan:
+    """Compile N netlists into one bank-level plan (cached).
+
+    Members may repeat (N instances of one circuit) and mix combinational and
+    sequential netlists; equal structures intern to the same member plan, so
+    the cache key is the member-plan identity tuple.  ``fuse_mux=False``
+    compiles combinational members unfused (per-gate fault injection);
+    sequential members always fuse — their injection points are PI/output
+    streams, outside the plan (mirroring ``executor._plan_for``).
+    """
+    if not nets:
+        raise ValueError("compile_bank_plan: need at least one netlist")
+    members = tuple(compile_plan(n, fuse_mux=fuse_mux or n.is_sequential)
+                    for n in nets)
+    key = (members, fuse_mux)
+    cached = _BANK_CACHE.get(key)
+    if cached is not None:
+        return cached
+
+    comb_idx = tuple(i for i, m in enumerate(members) if not m.is_sequential)
+    seq_idx = tuple(i for i, m in enumerate(members) if m.is_sequential)
+    bank_name = name or f"bank{len(members)}"
+    comb = merge_plans([members[i] for i in comb_idx], list(comb_idx),
+                       f"{bank_name}/comb") if comb_idx else None
+    seq = merge_plans([members[i] for i in seq_idx], list(seq_idx),
+                      f"{bank_name}/seq") if seq_idx else None
+    bank = BankPlan(name=bank_name, members=members, comb=comb, seq=seq,
+                    comb_members=comb_idx, seq_members=seq_idx)
+    _BANK_CACHE[key] = bank
+    return bank

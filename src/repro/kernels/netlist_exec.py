@@ -63,8 +63,8 @@ def run_combinational(plan: ExecutionPlan, env: dict[str, jax.Array],
     requires an unfused plan (``compile_plan(net, fuse_mux=False)``).
     """
     inject = gate_fkeys is not None and bitflip_rate > 0.0
-    assert not (inject and plan.fused), \
-        "per-gate fault injection requires an unfused plan"
+    if inject and plan.fused:
+        raise ValueError("per-gate fault injection requires an unfused plan")
     for level in plan.levels:
         for cop in level:
             k = cop.n_batched
@@ -72,9 +72,7 @@ def run_combinational(plan: ExecutionPlan, env: dict[str, jax.Array],
                 ins = [env[names[0]] for names in cop.inputs]
                 outs = [_apply_pass(cop.op, ins, use_pallas)]
             else:
-                ins = [jnp.stack([env[n] for n in names]) for names in cop.inputs]
-                stacked = _apply_pass(cop.op, ins, use_pallas)
-                outs = [stacked[i] for i in range(k)]
+                outs = _batched_pass(cop, env, use_pallas)
             if inject:
                 outs = [sc_ops.flip_bits(gate_fkeys[gid], o, bitflip_rate)
                         for gid, o in zip(cop.gids, outs)]
@@ -83,8 +81,41 @@ def run_combinational(plan: ExecutionPlan, env: dict[str, jax.Array],
     return env
 
 
+def _batched_pass(cop, env: dict[str, jax.Array],
+                  use_pallas: bool) -> list[jax.Array]:
+    """Execute one multi-gate CompiledOp, allowing heterogeneous batch shapes.
+
+    Bank-merged plans batch gates from different member netlists into one op,
+    and members may carry different batch shapes (one member serves a (8,)
+    request while another serves a scalar).  Gates are grouped by input-shape
+    signature; each group stacks into one fused pass, so same-shape members
+    still share a single pass while differently-shaped ones keep their native
+    shapes — no broadcasting, which keeps every node's stream (and therefore
+    fault injection and decode) bit-identical to a per-member run.
+    """
+    k = cop.n_batched
+    rows = [[env[n] for n in names] for names in cop.inputs]   # arity x k
+    groups: dict[tuple, list[int]] = {}
+    for i in range(k):
+        sig = tuple(row[i].shape for row in rows)
+        groups.setdefault(sig, []).append(i)
+
+    outs: list[jax.Array | None] = [None] * k
+    for idxs in groups.values():
+        if len(idxs) == 1:
+            i = idxs[0]
+            outs[i] = _apply_pass(cop.op, [row[i] for row in rows], use_pallas)
+            continue
+        ins = [jnp.stack([row[i] for i in idxs]) for row in rows]
+        stacked = _apply_pass(cop.op, ins, use_pallas)
+        for j, i in enumerate(idxs):
+            outs[i] = stacked[j]
+    return outs
+
+
 def run_sequential(plan: ExecutionPlan, pi_words: dict[str, jax.Array],
-                   use_pallas: bool = False) -> dict[str, jax.Array]:
+                   use_pallas: bool = False,
+                   n_words: int | None = None) -> dict[str, jax.Array]:
     """Run a stateful plan as scan-over-words with an inner 32-bit loop.
 
     ``pi_words``: packed streams for every non-state PI, shape (..., W).
@@ -92,11 +123,33 @@ def run_sequential(plan: ExecutionPlan, pi_words: dict[str, jax.Array],
     across bits (the paper's wavefront across subarrays); bit ``t`` of the
     output is the circuit's emission at time step ``t``, with state read
     *before* update — exactly the interpreter's scan semantics.
+
+    Members of a bank-merged sequential plan may carry different (broadcast-
+    compatible) batch shapes; the scan then runs at the common shape and the
+    caller restricts each member's outputs back to its native shape (exact:
+    every op is elementwise, so restriction commutes with the recurrence).
+    Plans with zero stream PIs (state-only recurrences, e.g. a NOT-feedback
+    oscillator) have nothing to stack — ``n_words`` then supplies the scan
+    length that is otherwise read off the stacked words.
     """
     names = plan.stream_pi_names()
-    stacked = jnp.stack([pi_words[n] for n in names])          # (P, ..., W)
-    batch = stacked.shape[1:-1]
-    xs = jnp.moveaxis(stacked, -1, 0)                          # (W, P, ...)
+    if names:
+        shapes = {pi_words[n].shape for n in names}
+        if len(shapes) > 1:
+            common = jnp.broadcast_shapes(*shapes)
+            stacked = jnp.stack([jnp.broadcast_to(pi_words[n], common)
+                                 for n in names])              # (P, ..., W)
+        else:
+            stacked = jnp.stack([pi_words[n] for n in names])  # (P, ..., W)
+        batch = stacked.shape[1:-1]
+        xs = jnp.moveaxis(stacked, -1, 0)                      # (W, P, ...)
+    else:
+        if n_words is None:
+            raise ValueError(
+                f"plan {plan.name} has no stream PIs; pass n_words "
+                "(= bitstream_length // 32) to size the scan")
+        batch = ()
+        xs = jnp.zeros((n_words, 0), jnp.uint32)               # (W, 0)
 
     state0 = tuple(jnp.full(batch, jnp.uint32(round(init)))
                    for init in plan.state_inits)

@@ -1,0 +1,232 @@
+"""Bank-level plan merging: merged execution is bit-identical to looped.
+
+Pins the tentpole claim of the bank layer (core/plan.py merge_plans /
+compile_bank_plan + executor.execute_many): executing N heterogeneous
+netlists through ONE merged bank plan produces, member by member and bit for
+bit, the streams a loop of per-netlist ``execute`` calls produces with the
+same per-member keys — for mixed combinational+sequential member sets,
+heterogeneous batch shapes, and under bitflip injection.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import apps, arch, circuits, executor
+from repro.core.appnet import APP_NETLISTS
+from repro.core.plan import compile_bank_plan, merge_plans, compile_plan
+
+KEY = jax.random.key(7)
+FLIP_KEY = jax.random.key(77)
+BL = 512
+
+
+def mixed_bank():
+    """Heterogeneous members: comb + sequential, Table-2 + appnet circuits."""
+    nets = [circuits.sc_multiply(), circuits.sc_scaled_div(),
+            circuits.sc_abs_sub(), circuits.sc_exp(),
+            circuits.sc_scaled_div(), APP_NETLISTS["ol"]()]
+    values = [{"a": jnp.float32(0.3), "b": jnp.float32(0.7)},
+              {"a": jnp.float32(0.4), "b": jnp.float32(0.4)},
+              {"a": jnp.float32(0.8), "b": jnp.float32(0.3)},
+              {"a": jnp.float32(0.5)},
+              {"a": jnp.float32(0.2), "b": jnp.float32(0.6)},
+              apps.appnet_inputs("ol", p=np.full((16, 6), 0.9))]
+    return nets, values
+
+
+def assert_bank_matches_loop(nets, values, bl=BL, **kw):
+    keys = jax.random.split(KEY, len(nets))
+    flip_keys = None
+    if kw.get("bitflip_rate", 0.0) > 0.0:
+        flip_keys = jax.random.split(FLIP_KEY, len(nets))
+    merged = executor.execute_many(nets, values, keys, bl,
+                                   flip_keys=flip_keys, **kw)
+    for i, (net, vals) in enumerate(zip(nets, values)):
+        ref = executor.execute(net, vals, keys[i], bl,
+                               flip_key=flip_keys[i] if flip_keys is not None
+                               else None, **kw)
+        assert set(merged[i]) == set(ref)
+        for o in ref:
+            assert merged[i][o].shape == ref[o].shape, f"member {i}:{o}"
+            assert (merged[i][o] == ref[o]).all(), \
+                f"member {i} ({net.name}) output {o} diverges"
+
+
+# --------------------------------- parity -----------------------------------------
+
+def test_mixed_comb_seq_bank_bit_identical():
+    nets, values = mixed_bank()
+    assert_bank_matches_loop(nets, values)
+
+
+@pytest.mark.parametrize("rate", [0.05, 0.2])
+def test_mixed_bank_bit_identical_under_bitflip(rate):
+    nets, values = mixed_bank()
+    assert_bank_matches_loop(nets, values, bitflip_rate=rate)
+
+
+def test_heterogeneous_batch_shapes_bit_identical():
+    # Combinational members with arbitrary batch shapes (shape-grouped
+    # passes), sequential members with broadcast-compatible shapes.
+    nets = [circuits.sc_multiply(), circuits.sc_multiply(),
+            circuits.sc_sqrt(), circuits.sc_scaled_div(),
+            circuits.sc_scaled_div()]
+    values = [{"a": jnp.asarray(np.linspace(0.1, 0.9, 8), jnp.float32),
+               "b": jnp.full((8,), 0.5, jnp.float32)},
+              {"a": jnp.float32(0.3), "b": jnp.float32(0.7)},
+              {"a": jnp.asarray(np.linspace(0.2, 0.8, 5), jnp.float32)},
+              {"a": jnp.asarray(np.linspace(0.1, 0.6, 4), jnp.float32),
+               "b": jnp.full((4,), 0.3, jnp.float32)},
+              {"a": jnp.float32(0.4), "b": jnp.float32(0.4)}]
+    assert_bank_matches_loop(nets, values)
+
+
+def test_single_key_splits_like_loop():
+    nets, values = mixed_bank()
+    keys = jax.random.split(KEY, len(nets))
+    merged = executor.execute_many(nets, values, KEY, BL)   # one key, split
+    for i, (net, vals) in enumerate(zip(nets, values)):
+        ref = executor.execute(net, vals, keys[i], BL)
+        for o in ref:
+            assert (merged[i][o] == ref[o]).all()
+
+
+def test_execute_value_many_decodes_like_loop():
+    nets, values = mixed_bank()
+    keys = jax.random.split(KEY, len(nets))
+    merged = executor.execute_value_many(nets, values, keys, BL)
+    for i, (net, vals) in enumerate(zip(nets, values)):
+        ref = executor.execute_value(net, vals, keys[i], BL)
+        for o in ref:
+            np.testing.assert_array_equal(np.asarray(merged[i][o]),
+                                          np.asarray(ref[o]))
+
+
+def test_state_only_member_in_bank():
+    # A zero-stream-PI recurrence merged with ordinary members.
+    from repro.core.gates import Netlist, PIKind
+    osc = Netlist("osc")
+    q = osc.add_pi("Q", kind=PIKind.STATE)
+    osc.add_gate("NOT", [q], "Qn")
+    osc.bind_state(q, "Qn", init=0.0)
+    osc.set_outputs(["Qn"])
+    nets = [osc, circuits.sc_scaled_div(), circuits.sc_multiply()]
+    values = [{}, {"a": jnp.float32(0.4), "b": jnp.float32(0.2)},
+              {"a": jnp.float32(0.5), "b": jnp.float32(0.5)}]
+    assert_bank_matches_loop(nets, values)
+
+
+def test_reference_backend_loops():
+    nets, values = mixed_bank()
+    keys = jax.random.split(KEY, len(nets))
+    ref = executor.execute_many(nets, values, keys, 256, backend="reference")
+    cmp = executor.execute_many(nets, values, keys, 256)
+    for r, c in zip(ref, cmp):
+        for o in r:
+            assert (r[o] == c[o]).all()
+
+
+def test_reference_backend_loops_under_bitflip():
+    # Regression: the reference branch tested its per-member flip-key array
+    # for truthiness, which is ambiguous for arrays.
+    nets, values = mixed_bank()
+    keys = jax.random.split(KEY, len(nets))
+    fks = jax.random.split(FLIP_KEY, len(nets))
+    ref = executor.execute_many(nets, values, keys, 256, bitflip_rate=0.1,
+                                flip_keys=fks, backend="reference")
+    cmp = executor.execute_many(nets, values, keys, 256, bitflip_rate=0.1,
+                                flip_keys=fks)
+    for r, c in zip(ref, cmp):
+        for o in r:
+            assert (r[o] == c[o]).all()
+
+
+# ------------------------------ appnet serving ------------------------------------
+
+def test_appnet_stochastic_many_matches_per_request():
+    requests = [("ol", {"p": np.full((16, 6), 0.9)}),
+                ("hdp", {"v": {k: 0.5 for k in apps.HDP_KEYS}}),
+                ("ol", {"p": np.full((16, 6), 0.7)})]
+    nets = [APP_NETLISTS[app]() for app, _ in requests]
+    keys = jax.random.split(KEY, len(requests))
+    merged = apps.appnet_stochastic_many(requests, keys, bl=256, nets=nets)
+    for i, (app, inp) in enumerate(requests):
+        ref = apps.appnet_stochastic(app, keys[i], bl=256, net=nets[i], **inp)
+        for o in ref:
+            np.testing.assert_array_equal(np.asarray(merged[i][o]),
+                                          np.asarray(ref[o]))
+
+
+# ----------------------------- plan-level properties ------------------------------
+
+def test_bank_plan_merges_passes_across_members():
+    nets = [circuits.sc_multiply() for _ in range(8)]
+    bank = compile_bank_plan(nets)
+    # 8 structurally-equal members intern to one member plan and collapse to
+    # that plan's passes: one batched NAND pass + one batched NOT pass.
+    assert len(set(bank.members)) == 1
+    assert bank.n_passes == bank.members[0].n_passes == 2
+    assert bank.n_passes_looped == 16
+    assert bank.comb.levels[0][0].n_batched == 8
+
+
+def test_bank_plan_is_cached():
+    nets = [circuits.sc_multiply(), circuits.sc_abs_sub()]
+    assert compile_bank_plan(nets) is compile_bank_plan(
+        [circuits.sc_multiply(), circuits.sc_abs_sub()])
+
+
+def test_bank_plan_partitions_comb_and_seq():
+    nets = [circuits.sc_multiply(), circuits.sc_scaled_div(),
+            circuits.sc_exp()]
+    bank = compile_bank_plan(nets)
+    assert bank.comb_members == (0, 2)
+    assert bank.seq_members == (1,)
+    assert not bank.comb.is_sequential
+    assert bank.seq.is_sequential
+    # Namespaced outputs scatter back per member.
+    assert bank.comb.outputs == ("b0/out", "b2/s1")
+    assert bank.seq.outputs == ("b1/Q_next",)
+
+
+def test_merge_plans_rejects_mixed_kinds():
+    comb = compile_plan(circuits.sc_multiply())
+    seq = compile_plan(circuits.sc_scaled_div())
+    with pytest.raises(ValueError, match="mix"):
+        merge_plans([comb, seq], [0, 1], "bad")
+
+
+def test_merged_gids_are_offset_per_member():
+    p = compile_plan(circuits.sc_multiply(), fuse_mux=False)
+    merged = merge_plans([p, p], [0, 1], "two")
+    gids = sorted(g for level in merged.levels for cop in level
+                  for g in cop.gids)
+    assert gids == [0, 1, 2, 3]          # member 1's gids offset by n_gates=2
+
+
+# ------------------------------- arch accounting ----------------------------------
+
+def test_evaluate_bank_plan_reflects_bank_simd():
+    cfg = arch.StochIMCConfig()
+    for app in apps.APPS:
+        bank = compile_bank_plan(apps.cost_stage_netlists(app))
+        cost = arch.evaluate_bank_plan(bank, cfg)
+        assert cost.n_members == bank.n_members
+        assert cost.merged_passes <= cost.looped_passes
+        assert cost.merged_cycles < cost.looped_cycles
+        assert cost.simd_speedup > 1.0
+        # Accumulation is charged once bank-wide vs once per dispatch.
+        assert cost.looped_cycles - cost.looped_passes * cost.pipeline_factor \
+            == cost.accumulation_cycles * cost.n_members
+
+
+def test_bank_pipeline_factor_scales_with_bitstream_length():
+    bank = compile_bank_plan(apps.cost_stage_netlists("ol"))
+    small = arch.evaluate_bank_plan(bank, arch.StochIMCConfig())
+    big = arch.evaluate_bank_plan(
+        bank, arch.StochIMCConfig(bitstream_length=4 * 256 * 256 * 2),
+        q_lanes=256)
+    assert small.pipeline_factor == 1
+    assert big.pipeline_factor == 8
+    assert big.merged_cycles > small.merged_cycles

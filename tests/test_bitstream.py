@@ -88,3 +88,27 @@ def test_maj5_matches_bit_count():
 def test_bad_bitstream_length_rejected():
     with pytest.raises(ValueError):
         bs.n_words(100)
+
+
+def test_threshold_top_of_range_is_exact():
+    # Regression: float32 rounds 2^32 - 1 up to 2^32, so the old float-side
+    # minimum was a no-op and p=1.0 hit an out-of-range float->uint32 cast
+    # that only "worked" because XLA:CPU saturates (undefined elsewhere).
+    # The integer-side clamp must pin the top of the range on every backend.
+    assert int(bs._threshold_u32(jnp.float32(1.0))) == 0xFFFFFFFF
+    assert int(bs._threshold_u32(jnp.float32(1.0 - 2.0 ** -32))) == 0xFFFFFFFF
+    assert int(bs._threshold_u32(jnp.float32(0.0))) == 0
+    # Monotone and in-range across the interior.
+    ps = jnp.linspace(0.0, 1.0, 257, dtype=jnp.float32)
+    th = np.asarray(bs._threshold_u32(ps), dtype=np.uint64)
+    assert (np.diff(th.astype(np.int64)) >= 0).all()
+    assert th[-1] == 0xFFFFFFFF
+
+
+def test_p_one_decodes_to_one():
+    for bl in (32, 1024):
+        v = bs.to_value(bs.generate(KEY, jnp.float32(1.0), bl), bl)
+        assert float(v) >= 1.0 - 2.0 / bl
+    near = jnp.float32(1.0 - 2.0 ** -32)   # rounds to 1.0 in float32
+    v = bs.to_value(bs.generate(KEY, near, 1024), 1024)
+    assert float(v) >= 1.0 - 2.0 / 1024

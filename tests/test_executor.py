@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import bitstream as bs, circuits, executor, sc_ops
 from repro.core.gates import Netlist, PIKind
@@ -76,3 +77,57 @@ def test_constant_pis_fill_from_const_value():
     net.set_outputs(["out"])
     out = executor.execute_value(net, {"a": jnp.float32(0.8)}, jax.random.key(7), BL)
     assert abs(float(out["out"]) - 0.4) < 5 / np.sqrt(BL)
+
+
+# ------------------------------ strict validation ---------------------------------
+
+@pytest.mark.parametrize("backend", ["compiled", "reference"])
+def test_bitflip_without_flip_key_raises(backend):
+    # Regression: this used to be a bare assert, stripped under `python -O`.
+    net = circuits.sc_multiply()
+    vals = {"a": jnp.float32(0.5), "b": jnp.float32(0.5)}
+    with pytest.raises(ValueError, match="flip_key"):
+        executor.execute(net, vals, jax.random.key(0), 256,
+                         bitflip_rate=0.1, backend=backend)
+
+
+@pytest.mark.parametrize("backend", ["compiled", "reference"])
+def test_binary_fractional_const_raises(backend):
+    # Regression: 0 < const_value < 1 was silently floored to an all-zeros
+    # word; a binary constant cell can only hold 0 or 1.
+    net = Netlist("frac_const")
+    a = net.add_pi("A", kind=PIKind.BINARY, value_key="a", row=0)
+    c = net.add_pi("C", kind=PIKind.BINARY, const_value=0.5, row=0)
+    net.add_gate("AND", [a, c], "o", row=0)
+    net.set_outputs(["o"])
+    with pytest.raises(ValueError, match="const_value"):
+        executor.execute_binary(net, {"A": jnp.zeros((4,), jnp.uint32)},
+                                backend=backend)
+
+
+# --------------------------- state-only recurrences -------------------------------
+
+def _oscillator() -> Netlist:
+    # Q' = NOT(Q): no non-state stream PIs at all (the jnp.stack([]) crash).
+    net = Netlist("osc")
+    q = net.add_pi("Q", kind=PIKind.STATE)
+    net.add_gate("NOT", [q], "Qn")
+    net.bind_state(q, "Qn", init=0.0)
+    net.set_outputs(["Qn"])
+    return net
+
+
+@pytest.mark.parametrize("backend", ["compiled", "reference"])
+def test_sequential_without_stream_pis_executes(backend):
+    out = executor.execute(_oscillator(), {}, jax.random.key(0), 256,
+                           backend=backend)
+    # Q starts 0, is emitted after the NOT: 1,0,1,0,... -> exactly 0.5.
+    assert float(bs.to_value(out["Qn"], 256)) == 0.5
+
+
+def test_sequential_without_stream_pis_backends_bit_identical():
+    ref = executor.execute(_oscillator(), {}, jax.random.key(1), 128,
+                           backend="reference")
+    cmp = executor.execute(_oscillator(), {}, jax.random.key(1), 128,
+                           backend="compiled")
+    assert (ref["Qn"] == cmp["Qn"]).all()

@@ -187,6 +187,30 @@ def test_plan_cache_interns_equal_structures():
     assert p1 is p2
 
 
+def test_mutating_compiled_netlist_recompiles():
+    # Regression: the per-instance memo was keyed on PI/gate *counts*, so an
+    # in-place gate replacement at equal count returned the stale plan.
+    net = circuits.sc_multiply()            # NAND(A,B) -> NOT -> out = a*b
+    p1 = compile_plan(net)
+    net.replace_gate(0, gtype="NOR")        # same gate count, new structure
+    p2 = compile_plan(net)
+    assert p2 is not p1
+    assert p2.levels[0][0].op == "NOR"
+    # And the recompiled plan executes the *new* semantics:
+    # out = NOT(NOR(a, b)) = a OR b.
+    vals = {"a": jnp.float32(0.3), "b": jnp.float32(0.6)}
+    out = executor.execute_value(net, vals, jax.random.key(0), 8192)
+    expected = 0.3 + 0.6 - 0.3 * 0.6
+    assert abs(float(out["out"]) - expected) < 0.03
+    assert_streams_equal(net, vals)
+    # The per-instance memo stays bounded across mutate/recompile cycles
+    # (stale-version entries are evicted on the next compile).
+    for gt in ("NAND", "NOR", "AND", "OR") * 2:
+        net.replace_gate(0, gtype=gt)
+        compile_plan(net)
+    assert len(net._plan_memo) <= 2
+
+
 def test_fusion_is_not_applied_to_observable_intermediates():
     # If a MUX intermediate is also a primary output it must stay
     # materialized — no fusion may swallow it.
