@@ -18,20 +18,26 @@ bank cycle model (``arch.evaluate_bank_plan``) for the measured bank and for
 each Table-3 application's full cost-stage instance set — the architectural
 view of the same memory-level-parallelism win.
 
+The record also splits merged wall-clock into a stream-generation phase
+(``gen_ms`` — the batched bulk-BtoS pass, timed via
+``executor.generate_bank_streams``) and the remaining logic/decode phase
+(``pass_ms = merged_ms - gen_ms``), so PR-over-PR perf work can see which
+phase moved.
+
 Output schema (written here and by benchmarks/run.py):
-  {"bitstream_length", "n_members", "members", "looped_ms", "merged_ms",
-   "speedup", "merged_passes", "looped_passes", "arch_bank": {...},
-   "table3_banks": {app: {...}}}
+  {"bitstream_length", "n_members", "members", "key_mode", "looped_ms",
+   "merged_ms", "gen_ms", "pass_ms", "speedup", "merged_passes",
+   "looped_passes", "arch_bank": {...}, "table3_banks": {app: {...}}}
 """
 from __future__ import annotations
-
-import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import apps, arch, circuits, executor
 from repro.core.plan import compile_bank_plan
+
+from .common import time_ms as _time
 
 
 def bank_members() -> tuple[list, list, list]:
@@ -68,18 +74,6 @@ def bank_members() -> tuple[list, list, list]:
     return nets, values, names
 
 
-def _time(fn, iters: int) -> float:
-    """Min-of-iters wall time (ms); two warmup calls (trace + steady state)."""
-    jax.block_until_ready(fn())
-    jax.block_until_ready(fn())
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e3
-
-
 def _arch_record(bank, cfg) -> dict:
     c = arch.evaluate_bank_plan(bank, cfg)
     return {"n_members": c.n_members, "merged_passes": c.merged_passes,
@@ -102,6 +96,12 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
     looped_ms = _time(looped_fn, iters)
 
     bank = compile_bank_plan(nets)
+    # Phase split: time the stream-generation phase on its own jitted entry;
+    # the remainder of the merged wall-clock is logic passes + decode.
+    vals_f32 = tuple({k: jnp.asarray(v, jnp.float32) for k, v in v_.items()}
+                     for v_ in values)
+    gen_fn = lambda: executor.generate_bank_streams(bank, vals_f32, keys, bl)
+    gen_ms = _time(gen_fn, iters)
     cfg = arch.StochIMCConfig(bitstream_length=bl)
     table3 = {app: _arch_record(
         compile_bank_plan(apps.cost_stage_netlists(app)), cfg)
@@ -111,8 +111,11 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
         "bitstream_length": bl,
         "n_members": len(nets),
         "members": names,
+        "key_mode": executor.DEFAULT_KEY_MODE,
         "looped_ms": round(looped_ms, 3),
         "merged_ms": round(merged_ms, 3),
+        "gen_ms": round(gen_ms, 3),
+        "pass_ms": round(max(merged_ms - gen_ms, 0.0), 3),
         "speedup": round(looped_ms / merged_ms, 2),
         "merged_passes": bank.n_passes,
         "looped_passes": bank.n_passes_looped,
@@ -125,7 +128,9 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
         print(f"  looped : {looped_ms:8.3f} ms  "
               f"({bank.n_passes_looped} passes + {len(nets)} dispatches)")
         print(f"  merged : {merged_ms:8.3f} ms  "
-              f"({bank.n_passes} passes, 1 dispatch)")
+              f"({bank.n_passes} passes, 1 dispatch; "
+              f"gen {results['gen_ms']:.3f} ms + "
+              f"pass {results['pass_ms']:.3f} ms)")
         print(f"  speedup: {results['speedup']:.1f}X  (target: >= 3X)")
         print("  [n, m] bank model — Table-3 apps as full cost-stage banks:")
         for app, r in table3.items():

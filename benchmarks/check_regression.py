@@ -1,0 +1,93 @@
+"""Soft-fail perf-regression check: smoke bench records vs committed records.
+
+  PYTHONPATH=src python -m benchmarks.check_regression
+
+Compares the aggregate ``*speedup*`` fields of each freshly-written smoke
+record (``BENCH_*_smoke.json``) against the same field of the committed
+full-size record (``BENCH_*.json``), recursing into nested dicts.  Per-op
+*list* entries (BENCH_plan_exec's ``ops``/``appnets`` arrays) are
+deliberately NOT compared: single-op smoke timings at BL=128 are sub-ms and
+routinely deviate >2X run to run, so warning on them would be noise — the
+geomean and bank/SNG headlines are the watched signals.  Smoke runs use tiny
+sizes, so absolute timings are incomparable — but a smoke *speedup ratio*
+collapsing far below the committed one is the early-warning signal that a PR
+regressed a fused path back toward its looped baseline.
+
+Always exits 0 (soft fail): regressions print GitHub-annotation
+``::warning::`` lines so they are visible on the PR without blocking it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+#: Per-record tolerance: smoke speedup may sit this far below the committed
+#: full-size speedup before a warning fires.  Smoke sizes shrink fused-path
+#: wins by design and CI machines add timing noise on top; the SNG record
+#: gets extra headroom because its smoke workload (batch=64, BL=512) is
+#: structurally further from the full run (batch=256, BL=1024) than the
+#: pass-count-dominated records — its warning threshold still sits near the
+#: 3X acceptance floor, so a genuine collapse toward 1X is caught.
+PAIRS = [
+    ("BENCH_plan_exec_smoke.json", "BENCH_plan_exec.json", 0.4),
+    ("BENCH_bank_plan_smoke.json", "BENCH_bank_plan.json", 0.4),
+    ("BENCH_sng_smoke.json", "BENCH_sng.json", 0.25),
+]
+
+
+def speedup_fields(record: dict, prefix: str = "") -> dict[str, float]:
+    """Flatten the aggregate numeric fields whose name mentions 'speedup'.
+
+    Recurses into nested dicts; list entries (per-op arrays) are skipped on
+    purpose — see the module docstring.
+    """
+    out: dict[str, float] = {}
+    for k, v in record.items():
+        path = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(speedup_fields(v, f"{path}."))
+        elif isinstance(v, (int, float)) and "speedup" in k:
+            out[path] = float(v)
+    return out
+
+
+def check_pair(smoke_path: str, committed_path: str,
+               tolerance: float) -> list[str]:
+    if not os.path.exists(smoke_path) or not os.path.exists(committed_path):
+        return [f"::notice::{smoke_path} or {committed_path} missing; "
+                "skipping perf diff"]
+    with open(smoke_path) as f:
+        smoke = speedup_fields(json.load(f))
+    with open(committed_path) as f:
+        committed = speedup_fields(json.load(f))
+    lines = []
+    for field, want in sorted(committed.items()):
+        got = smoke.get(field)
+        if got is None:
+            lines.append(f"::warning::{smoke_path}: field {field} missing "
+                         f"(committed {committed_path} has {want:.2f}X)")
+        elif got < want * tolerance:
+            lines.append(
+                f"::warning::perf regression signal: {smoke_path} {field} = "
+                f"{got:.2f}X vs committed {want:.2f}X in {committed_path} "
+                f"(< {tolerance:.0%} of committed)")
+        else:
+            lines.append(f"::notice::{field}: smoke {got:.2f}X vs committed "
+                         f"{want:.2f}X  ok")
+    return lines
+
+
+def main() -> int:
+    any_warn = False
+    for smoke_path, committed_path, tolerance in PAIRS:
+        for line in check_pair(smoke_path, committed_path, tolerance):
+            any_warn |= line.startswith("::warning::")
+            print(line)
+    print("perf diff complete"
+          + (" — warnings above are advisory (soft fail)" if any_warn else ""))
+    return 0                               # soft fail by design
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,8 +2,11 @@
 from __future__ import annotations
 
 import math
+import time
 
-from repro.core import apps, arch, circuits
+import jax
+
+from repro.core import arch, circuits
 from repro.core.arch import StochIMCConfig
 from repro.core.scheduler import schedule
 
@@ -73,3 +76,20 @@ def fmt_table(headers, rows, title=None):
 def geomean(xs):
     xs = [x for x in xs if x > 0]
     return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 0.0
+
+
+def time_ms(fn, iters: int) -> float:
+    """Min-of-iters wall time (ms); two warmup calls (trace + steady state).
+
+    The shared measurement protocol for the perf benches — keep the wall-
+    clock records comparable across BENCH_*.json files (check_regression.py
+    diffs their speedup ratios against each other PR over PR).
+    """
+    jax.block_until_ready(fn())
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3

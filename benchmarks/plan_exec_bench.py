@@ -20,8 +20,6 @@ Output schema (written by benchmarks/run.py to BENCH_plan_exec.json):
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -30,7 +28,7 @@ from repro.core import circuits, executor
 from repro.core.appnet import APP_NETLISTS
 from repro.core.plan import compile_plan
 
-from .common import fmt_table, geomean
+from .common import fmt_table, geomean, time_ms
 
 TABLE2_OPS = (
     ("scaled_add", circuits.sc_scaled_add, {"a": 0.3, "b": 0.7}),
@@ -43,16 +41,10 @@ TABLE2_OPS = (
 
 
 def _time_backend(net, values, key, bl, backend, iters) -> float:
-    """Min-of-iters wall time (ms) for one execute_value call."""
+    """Min-of-iters wall time (ms) for one execute_value call (shared
+    measurement protocol — see benchmarks/common.py time_ms)."""
     fn = lambda: executor.execute_value(net, values, key, bl, backend=backend)
-    jax.block_until_ready(fn())     # trace/compile
-    jax.block_until_ready(fn())     # steady state
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e3
+    return time_ms(fn, iters)
 
 
 def _bench_net(name, net, values, key, bl, iters) -> dict:

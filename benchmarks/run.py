@@ -31,7 +31,7 @@ def main(argv=None):
 
     t0 = time.time()
     from . import (bank_plan_bench, fig10_energy, fig11_lifetime,
-                   plan_exec_bench, sc_matmul_bench, table2_arith,
+                   plan_exec_bench, sc_matmul_bench, sng_bench, table2_arith,
                    table3_apps, table4_bitflip)
 
     print("=" * 72)
@@ -47,6 +47,7 @@ def main(argv=None):
     f11 = fig11_lifetime.run()
     mm = sc_matmul_bench.run(smoke=args.smoke)
     pe = plan_exec_bench.run(smoke=args.smoke)
+    sg = sng_bench.run(smoke=args.smoke)
     # Smoke runs skip the bank bench: CI exercises it as its own step
     # (`python -m benchmarks.bank_plan_bench --smoke`), which writes
     # BENCH_bank_plan_smoke.json — running it here too would just repeat
@@ -55,10 +56,13 @@ def main(argv=None):
 
     with open(args.bench_out, "w") as f:
         json.dump(pe, f, indent=2)
+    sng_out = "BENCH_sng_smoke.json" if args.smoke else "BENCH_sng.json"
+    with open(sng_out, "w") as f:
+        json.dump(sg, f, indent=2)
     if bp is not None:
         with open("BENCH_bank_plan.json", "w") as f:
             json.dump(bp, f, indent=2)
-    print(f"\nwrote {args.bench_out}"
+    print(f"\nwrote {args.bench_out} and {sng_out}"
           + ("" if bp is None else " and BENCH_bank_plan.json"))
 
     s = t3["summary"]
@@ -94,6 +98,10 @@ def main(argv=None):
             ("Bank-plan speedup vs looped execute",
              f"{bp['speedup']:.1f}X", ">=3X (target)",
              bp["speedup"] >= 3.0))
+        checks.append(
+            ("Batched SNG speedup vs per-PI loop",
+             f"{sg['speedup']:.1f}X", ">=3X (target)",
+             sg["speedup"] >= 3.0))
     ok = True
     for name, got, paper, passed in checks:
         mark = "PASS" if passed else "FAIL"

@@ -12,7 +12,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref
 from repro.kernels.sc_matmul import sc_matmul
 
 from .common import fmt_table

@@ -13,7 +13,7 @@ import jax
 from repro.core import circuits, executor
 from repro.core.scheduler import schedule
 
-from .common import (CFG, binary_cost, compute_cycles, cram_cost, fmt_table,
+from .common import (CFG, binary_cost, cram_cost, fmt_table,
                      stoch_cost)
 
 OPS = [

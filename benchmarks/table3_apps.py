@@ -8,7 +8,6 @@ application output, matching the paper's application accounting.
 """
 from __future__ import annotations
 
-import math
 import time
 
 import jax

@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.core import apps, bitstream as bs, circuits
 from repro.core.appnet import APP_NETLISTS
-from repro.core.arch import StochIMCConfig, evaluate_binary_imc, evaluate_stoch_imc
+from repro.core.arch import StochIMCConfig, evaluate_stoch_imc
 from repro.core.executor import execute_value
 from repro.core.scheduler import schedule
 

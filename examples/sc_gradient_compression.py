@@ -22,7 +22,6 @@ sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as PS
 
 from repro.configs import reduced_config
 from repro.data import SyntheticLM

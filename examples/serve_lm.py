@@ -10,7 +10,6 @@ import time
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, reduced_config
 from repro.models import RunCtx, init_params

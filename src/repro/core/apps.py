@@ -21,7 +21,6 @@ addition); its netlist form is the balanced MUX tree of circuits.sc_mux_tree.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

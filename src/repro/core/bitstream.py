@@ -76,16 +76,78 @@ def generate_correlated(key: jax.Array, ps: tuple[jax.Array, ...] | list[jax.Arr
     with different pulse amplitudes, in paper terms), so
     XOR(stream_a, stream_b) has value exactly |a - b| in expectation.
     Values must be broadcast-compatible.
+
+    The per-stream thresholds are stacked into one leading axis and compared
+    against the shared uniforms in a single broadcast — bit-identical to (but
+    one dispatch instead of N of) thresholding each stream separately.
     """
     shape = jnp.broadcast_shapes(*[jnp.shape(p) for p in ps])
     w = n_words(bitstream_length)
     u = _uniform_u32(key, shape + (w, WORD_BITS))
-    outs = []
-    for p in ps:
-        p = jnp.broadcast_to(jnp.asarray(p), shape)
-        bits = (u < _threshold_u32(p)[..., None, None]).astype(jnp.uint32)
-        outs.append(pack_bits(bits))
-    return tuple(outs)
+    stacked = jnp.stack([jnp.broadcast_to(jnp.asarray(p), shape) for p in ps])
+    thr = _threshold_u32(stacked)[..., None, None]        # (N, *shape, 1, 1)
+    words = pack_bits((u[None] < thr).astype(jnp.uint32))  # (N, *shape, W)
+    return tuple(words[i] for i in range(len(ps)))
+
+
+# --- batched stream-table generation (the bulk BtoS pass) -------------------------
+#
+# The paper writes ALL operand streams into subarray rows in bulk before any
+# gate pass runs (Sec. 2-3, Fig. 8); stream generation, not logic, dominates
+# end-to-end SC cost.  ``generate_batch`` is that bulk write: every stream of
+# a compiled plan's stream table (core/plan.py) generates in ONE fused
+# threshold+pack pass over a stacked (N, *batch) value tensor, using the
+# counter-based RNG of kernels/common.py (murmur3 finalizer) instead of one
+# threefry call per stream.  Rows with equal key-lane index share their
+# uniforms, so correlation groups ride through the same pass.  This is the
+# ``key_mode="batched"`` discipline (executor.py): streams differ bit-wise
+# from the legacy per-PI threefry splits but are statistically equivalent,
+# and the jnp fallback is bit-identical to the Pallas kernel.
+
+def stream_row_seeds(key: jax.Array, lanes) -> jax.Array:
+    """Mixed per-row seeds for a stream table: row i <- hash(key seed, lane_i).
+
+    A row's stream depends only on (key, lane, element, bit), never on how
+    many other rows are generated alongside it — so concatenating tables
+    (bank-level generation) or splitting them changes nothing bit-wise.
+    """
+    from ..kernels.sng import lane_seeds
+    seed = jax.random.bits(key, (), jnp.uint32)
+    return lane_seeds(seed, jnp.asarray(lanes, jnp.uint32))
+
+
+def generate_batch_seeded(row_seeds: jax.Array, ps: jax.Array,
+                          bitstream_length: int,
+                          use_pallas: bool = False) -> jax.Array:
+    """Batched SNG from pre-mixed row seeds: ps (N, *batch) -> (N, *batch, W).
+
+    Thresholds and packs by compare-and-accumulate over the 32 lane shifts —
+    the (..., W, 32) unpacked uniform tensor of ``generate`` is never
+    materialized.  ``use_pallas`` routes through the fused Pallas SNG kernel
+    (kernels/sng.py), bit-identical to the jnp fallback.
+    """
+    from ..kernels.sng import sng_words
+    w = n_words(bitstream_length)
+    ps = jnp.asarray(ps)
+    thr = _threshold_u32(ps).reshape(ps.shape[0], -1)      # (N, B)
+    words = sng_words(row_seeds, thr, w, use_pallas=use_pallas)
+    return words.reshape(ps.shape + (w,))
+
+
+def generate_batch(key: jax.Array, ps: jax.Array, bitstream_length: int,
+                   lanes=None, use_pallas: bool = False) -> jax.Array:
+    """Generate N packed streams in one pass: ps (N, *batch) -> (N, *batch, W).
+
+    ``lanes`` (default ``arange(N)``) assigns each row its key-lane index:
+    rows with distinct lanes are independent; rows sharing a lane share their
+    underlying uniforms (a correlation group — XOR of two such rows decodes
+    exact |a - b|).
+    """
+    ps = jnp.asarray(ps)
+    if lanes is None:
+        lanes = jnp.arange(ps.shape[0], dtype=jnp.uint32)
+    return generate_batch_seeded(stream_row_seeds(key, lanes), ps,
+                                 bitstream_length, use_pallas=use_pallas)
 
 
 def pack_bits(bits: jax.Array) -> jax.Array:

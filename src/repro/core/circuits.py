@@ -8,7 +8,7 @@ choices are documented inline and in DESIGN.md §7.
 """
 from __future__ import annotations
 
-from .gates import ALL_ROWS, Netlist, PIKind
+from .gates import Netlist, PIKind
 
 
 # =============================== stochastic ops ===================================

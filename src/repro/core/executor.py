@@ -21,6 +21,12 @@ Two backends share identical semantics (bit-for-bit):
 Binary netlists execute on packed test-vector words: lane ``t`` of the packed
 words is test vector ``t``, so one call evaluates 32*W random input
 combinations at once.
+
+Orthogonal to the backend, ``key_mode`` selects the stream-generation key
+discipline (both backends honor it identically): ``"batched"`` (default)
+generates every PI stream of a plan — or a whole bank — in ONE fused
+threshold+pack pass over the plan's stream table; ``"legacy"`` reproduces
+the pre-batching per-PI threefry splits bit-exactly.
 """
 from __future__ import annotations
 
@@ -32,21 +38,81 @@ import jax.numpy as jnp
 from . import bitstream as bs
 from . import sc_ops
 from .gates import Netlist, PIKind
-from .plan import (BankPlan, ExecutionPlan, compile_bank_plan, compile_plan,
-                   member_prefix)
+from .plan import (BankPlan, ExecutionPlan, StreamTable, build_stream_table,
+                   compile_bank_plan, compile_plan, member_prefix)
 
 #: Default backend for execute()/execute_value()/execute_binary().
 DEFAULT_BACKEND = "compiled"
 
 _BACKENDS = ("compiled", "compiled_pallas", "reference")
 
+#: Default key discipline for PI-stream generation (see ``_gen_pi_streams``).
+DEFAULT_KEY_MODE = "batched"
+
+_KEY_MODES = ("batched", "legacy")
+
+
+def _pi_shape(values: dict[str, jax.Array],
+              batch_shape: tuple[int, ...] | None) -> tuple[int, ...]:
+    """Common broadcast shape of the PI streams.
+
+    Derived from the supplied values AND the caller-declared ``batch_shape``
+    — so a netlist whose stream PIs are all const-valued (empty ``values``)
+    can still generate batched streams for batched downstream use instead of
+    silently falling back to scalar shape ``()``.
+    """
+    shapes = [jnp.shape(jnp.asarray(v)) for v in values.values()]
+    if batch_shape is not None:
+        shapes.append(tuple(batch_shape))
+    return jnp.broadcast_shapes(*shapes) if shapes else ()
+
+
+def _stack_table_values(table: StreamTable, values: dict[str, jax.Array],
+                        shape: tuple[int, ...]) -> jax.Array:
+    """Stack the stream table's row values into one (n_rows, *shape) tensor."""
+    rows = []
+    for vk, const in zip(table.value_keys, table.const_values):
+        v = values[vk] if vk is not None else const
+        rows.append(jnp.broadcast_to(jnp.asarray(v, jnp.float32), shape))
+    return jnp.stack(rows)
+
 
 def _gen_pi_streams(pis, values: dict[str, jax.Array], key: jax.Array,
-                    bitstream_length: int) -> dict[str, jax.Array]:
+                    bitstream_length: int, key_mode: str = DEFAULT_KEY_MODE,
+                    batch_shape: tuple[int, ...] | None = None,
+                    use_pallas: bool = False,
+                    table: StreamTable | None = None) -> dict[str, jax.Array]:
     """Generate packed streams for every PI, honoring correlation groups and
-    independent-copy indices.  ``pis`` is any sequence of PrimaryInput."""
-    shape = jnp.broadcast_shapes(*[jnp.shape(jnp.asarray(v)) for v in values.values()]) \
-        if values else ()
+    independent-copy indices.  ``pis`` is any sequence of PrimaryInput.
+
+    ``key_mode`` selects the key discipline (identical for every backend, so
+    reference and compiled stay bit-for-bit interchangeable):
+
+      * ``"batched"`` (default): ONE fused threshold+pack pass generates all
+        streams from the plan's stream table (``bs.generate_batch``) —
+        correlation groups share a key lane, singles get one lane each.
+      * ``"legacy"``: one PRNG split per correlation group / single PI, one
+        ``bs.generate*`` dispatch each — bit-exactly the pre-batching
+        behavior, kept for reproducibility pins.
+
+    The two modes differ bit-wise but are statistically equivalent (same
+    Bernoulli marginals, same correlation structure).
+    """
+    shape = _pi_shape(values, batch_shape)
+    if key_mode == "batched":
+        if table is None:
+            table = build_stream_table(pis)
+        if not table.names:
+            return {}
+        ps = _stack_table_values(table, values, shape)
+        words = bs.generate_batch(key, ps, bitstream_length,
+                                  lanes=jnp.asarray(table.lanes, jnp.uint32),
+                                  use_pallas=use_pallas)
+        return {name: words[i] for i, name in enumerate(table.names)}
+    if key_mode != "legacy":
+        raise ValueError(f"unknown key_mode {key_mode!r}; "
+                         f"expected one of {_KEY_MODES}")
+
     streams: dict[str, jax.Array] = {}
 
     # Correlated groups share underlying uniforms.
@@ -83,21 +149,29 @@ def _gen_pi_streams(pis, values: dict[str, jax.Array], key: jax.Array,
 # ------------------------------ compiled backend ----------------------------------
 
 @partial(jax.jit, static_argnames=("plan", "bitstream_length", "bitflip_rate",
-                                   "use_pallas", "decode"))
+                                   "use_pallas", "decode", "key_mode",
+                                   "batch_shape"))
 def _execute_compiled(plan: ExecutionPlan, values: dict[str, jax.Array],
                       key: jax.Array, flip_key, bitstream_length: int,
                       bitflip_rate: float, use_pallas: bool,
-                      decode: bool = False) -> dict[str, jax.Array]:
+                      decode: bool = False,
+                      key_mode: str = DEFAULT_KEY_MODE,
+                      batch_shape: tuple[int, ...] | None = None) -> dict[str, jax.Array]:
     """Whole-netlist execution as one XLA program.
 
-    Mirrors the reference interpreter's key discipline exactly: one fkey per
-    sorted PI stream, then one per gate id (combinational) / per sorted
-    output (sequential).  ``decode=True`` folds the StoB popcount decode into
-    the same program (used by execute_value), leaving one dispatch per call.
+    Mirrors the reference interpreter's key discipline exactly (whatever the
+    ``key_mode``): one fkey per sorted PI stream, then one per gate id
+    (combinational) / per sorted output (sequential).  ``decode=True`` folds
+    the StoB popcount decode into the same program (used by execute_value),
+    leaving one dispatch per call.  In batched key mode the PI streams come
+    from ONE fused SNG pass over the plan's stream table — generation, logic,
+    fault injection and decode are all one XLA program either way.
     """
     from ..kernels import netlist_exec
 
-    streams = _gen_pi_streams(plan.pis, values, key, bitstream_length)
+    streams = _gen_pi_streams(plan.pis, values, key, bitstream_length,
+                              key_mode=key_mode, batch_shape=batch_shape,
+                              use_pallas=use_pallas, table=plan.stream_table)
 
     gate_fkeys = None
     if bitflip_rate > 0.0:
@@ -172,17 +246,30 @@ def _plan_for(net: Netlist, bitflip_rate: float) -> ExecutionPlan:
 
 # -------------------------------- public API --------------------------------------
 
-def _dispatch(net: Netlist, values, key, bitstream_length: int,
-              bitflip_rate: float, flip_key, backend: str | None,
-              decode: bool) -> dict[str, jax.Array]:
+def _check_modes(backend: str | None, key_mode: str | None) -> tuple[str, str]:
     backend = backend or DEFAULT_BACKEND
     if backend not in _BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected one of {_BACKENDS}")
+    key_mode = key_mode or DEFAULT_KEY_MODE
+    if key_mode not in _KEY_MODES:
+        raise ValueError(f"unknown key_mode {key_mode!r}; "
+                         f"expected one of {_KEY_MODES}")
+    return backend, key_mode
+
+
+def _dispatch(net: Netlist, values, key, bitstream_length: int,
+              bitflip_rate: float, flip_key, backend: str | None,
+              decode: bool, key_mode: str | None = None,
+              batch_shape: tuple[int, ...] | None = None) -> dict[str, jax.Array]:
+    backend, key_mode = _check_modes(backend, key_mode)
+    if batch_shape is not None:
+        batch_shape = tuple(batch_shape)   # hashable for the jit static arg
     if bitflip_rate > 0.0 and flip_key is None:
         raise ValueError("bitflip_rate > 0 requires flip_key")
     if backend == "reference":
         outs = _execute_reference(net, values, key, bitstream_length,
-                                  bitflip_rate, flip_key)
+                                  bitflip_rate, flip_key, key_mode=key_mode,
+                                  batch_shape=batch_shape)
         if decode:
             outs = {k: bs.to_value(v, bitstream_length) for k, v in outs.items()}
         return outs
@@ -190,34 +277,44 @@ def _dispatch(net: Netlist, values, key, bitstream_length: int,
     values = {k: jnp.asarray(v, jnp.float32) for k, v in values.items()}
     return _execute_compiled(plan, values, key, flip_key, bitstream_length,
                              float(bitflip_rate),
-                             backend == "compiled_pallas", decode=decode)
+                             backend == "compiled_pallas", decode=decode,
+                             key_mode=key_mode, batch_shape=batch_shape)
 
 
 def execute(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
             bitstream_length: int, bitflip_rate: float = 0.0,
             flip_key: jax.Array | None = None,
-            backend: str | None = None) -> dict[str, jax.Array]:
+            backend: str | None = None, key_mode: str | None = None,
+            batch_shape: tuple[int, ...] | None = None) -> dict[str, jax.Array]:
     """Execute a (possibly sequential) netlist; returns packed output streams.
 
     ``bitflip_rate`` injects faults on the PI streams and on every gate
     output stream (the paper injects at input/output nodes of the
     arithmetic operations).  ``backend`` selects the execution engine (see
-    module docstring); all backends are bit-identical.
+    module docstring); all backends are bit-identical.  ``key_mode`` selects
+    the stream-generation key discipline (``"batched"`` default — one fused
+    SNG pass for all PI streams; ``"legacy"`` — one PRNG split per stream,
+    bit-exactly the pre-batching behavior); both backends honor it
+    identically.  ``batch_shape`` declares the stream batch shape when it is
+    not derivable from ``values`` (e.g. all stream PIs const-valued).
     """
     return _dispatch(net, values, key, bitstream_length, bitflip_rate,
-                     flip_key, backend, decode=False)
+                     flip_key, backend, decode=False, key_mode=key_mode,
+                     batch_shape=batch_shape)
 
 
 def execute_value(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
                   bitstream_length: int, bitflip_rate: float = 0.0,
                   flip_key: jax.Array | None = None,
-                  backend: str | None = None) -> dict[str, jax.Array]:
+                  backend: str | None = None, key_mode: str | None = None,
+                  batch_shape: tuple[int, ...] | None = None) -> dict[str, jax.Array]:
     """Execute and decode each output stream to its unipolar value.
 
     On the compiled backends the decode is fused into the execution program
     (single dispatch per call)."""
     return _dispatch(net, values, key, bitstream_length, bitflip_rate,
-                     flip_key, backend, decode=True)
+                     flip_key, backend, decode=True, key_mode=key_mode,
+                     batch_shape=batch_shape)
 
 
 def execute_binary(net: Netlist, operand_bits: dict[str, jax.Array],
@@ -261,19 +358,104 @@ def _restrict(x: jax.Array, batch: tuple[int, ...]) -> jax.Array:
     return x
 
 
+def _gen_bank_streams(bank: BankPlan, values_seq, keys, bitstream_length: int,
+                      key_mode: str, use_pallas: bool,
+                      batch_shapes) -> list[dict[str, jax.Array]]:
+    """Per-member PI streams for a whole bank (list indexed by member).
+
+    Batched key mode is the paper's bulk BtoS pass bank-wide: every member's
+    stream-table rows stack into ONE threshold tensor per distinct batch
+    shape and generate in one fused SNG pass — instead of one dispatch per
+    PI per member.  Each row's randomness is keyed by (member key, fixed
+    key-lane index), independent of the stacking, so a merged run stays
+    bit-identical to a loop of per-member ``execute`` calls in the same mode.
+    """
+    n = bank.n_members
+    streams: list[dict[str, jax.Array]] = [{} for _ in range(n)]
+    if key_mode != "batched":
+        for i, plan in enumerate(bank.members):
+            streams[i] = _gen_pi_streams(
+                plan.pis, values_seq[i], keys[i], bitstream_length,
+                key_mode=key_mode,
+                batch_shape=batch_shapes[i] if batch_shapes else None)
+        return streams
+
+    # Group member tables by broadcast shape; one fused SNG pass per shape.
+    buckets: dict[tuple[int, ...], list[tuple[int, jax.Array, jax.Array]]] = {}
+    for i, plan in enumerate(bank.members):
+        table = plan.stream_table
+        if not table.names:
+            continue
+        shape = _pi_shape(values_seq[i],
+                          batch_shapes[i] if batch_shapes else None)
+        ps = _stack_table_values(table, values_seq[i], shape)
+        seeds = bs.stream_row_seeds(keys[i],
+                                    jnp.asarray(table.lanes, jnp.uint32))
+        buckets.setdefault(shape, []).append((i, ps, seeds))
+    for entries in buckets.values():
+        ps = jnp.concatenate([e[1] for e in entries])
+        seeds = jnp.concatenate([e[2] for e in entries])
+        words = bs.generate_batch_seeded(seeds, ps, bitstream_length,
+                                         use_pallas=use_pallas)
+        off = 0
+        for i, ps_i, _ in entries:
+            names = bank.members[i].stream_table.names
+            for k, nm in enumerate(names):
+                streams[i][nm] = words[off + k]
+            off += len(names)
+    return streams
+
+
+@partial(jax.jit, static_argnames=("bank", "bitstream_length", "key_mode",
+                                   "use_pallas", "batch_shapes"))
+def _generate_bank_streams_jit(bank: BankPlan, values_seq, keys,
+                               bitstream_length: int, key_mode: str,
+                               use_pallas: bool, batch_shapes):
+    return _gen_bank_streams(bank, values_seq, keys, bitstream_length,
+                             key_mode, use_pallas, batch_shapes)
+
+
+def generate_bank_streams(bank: BankPlan, values_seq, keys,
+                          bitstream_length: int,
+                          key_mode: str = DEFAULT_KEY_MODE,
+                          use_pallas: bool = False, batch_shapes=None):
+    """Generate (only) every member's PI streams — no logic passes.
+
+    The stream-generation phase of ``_execute_bank`` as its own jitted entry
+    point, used by the benchmarks to split bank wall-clock into gen vs pass
+    time.  Accepts the same calling convention as ``execute_many`` (``keys``
+    may be one key, split N ways; ``batch_shapes`` entries may be any
+    sequence).  Returns one ``{pi_name: packed words}`` dict per member.
+    """
+    values_seq = tuple(values_seq)
+    if len(values_seq) != bank.n_members:
+        raise ValueError(f"values: got {len(values_seq)} for "
+                         f"{bank.n_members} members")
+    keys = _normalize_keys(keys, bank.n_members)
+    batch_shapes = _normalize_batch_shapes(batch_shapes, bank.n_members,
+                                           "members")
+    return _generate_bank_streams_jit(bank, values_seq, keys,
+                                      bitstream_length, key_mode, use_pallas,
+                                      batch_shapes)
+
+
 @partial(jax.jit, static_argnames=("bank", "bitstream_length", "bitflip_rate",
-                                   "use_pallas", "decode"))
+                                   "use_pallas", "decode", "key_mode",
+                                   "batch_shapes"))
 def _execute_bank(bank: BankPlan, values_seq, keys, flip_keys,
                   bitstream_length: int, bitflip_rate: float,
-                  use_pallas: bool, decode: bool):
+                  use_pallas: bool, decode: bool,
+                  key_mode: str = DEFAULT_KEY_MODE, batch_shapes=None):
     """Whole-bank execution of N member netlists as one XLA program.
 
     Stream generation and fault keying stay *per member*: member ``i``'s
     streams are drawn from ``keys[i]`` / ``flip_keys[i]`` exactly as a
-    standalone ``execute`` call would draw them, so a merged run is
-    bit-identical to a loop of per-member runs.  Only the logic merges — all
-    combinational members execute through one merged plan (cross-member
-    type-batched levels), all sequential members through one merged scan.
+    standalone ``execute`` call (same ``key_mode``) would draw them, so a
+    merged run is bit-identical to a loop of per-member runs.  The logic
+    merges — all combinational members execute through one merged plan
+    (cross-member type-batched levels), all sequential members through one
+    merged scan — and in batched key mode the stream generation merges too
+    (one fused SNG pass per distinct member batch shape).
     """
     from ..kernels import netlist_exec
 
@@ -282,10 +464,12 @@ def _execute_bank(bank: BankPlan, values_seq, keys, flip_keys,
     comb_gate_fkeys: list[jax.Array] = []
     seq_out_fkeys: dict[int, jax.Array | None] = {}
     native_batch: dict[int, tuple[int, ...]] = {}
+    member_streams = _gen_bank_streams(bank, values_seq, keys,
+                                       bitstream_length, key_mode, use_pallas,
+                                       batch_shapes)
     for i, plan in enumerate(bank.members):
         pre = member_prefix(i)
-        streams = _gen_pi_streams(plan.pis, values_seq[i], keys[i],
-                                  bitstream_length)
+        streams = member_streams[i]
         tail = None
         if bitflip_rate > 0.0:
             fkeys = jax.random.split(flip_keys[i], len(streams) + plan.n_gates)
@@ -341,6 +525,19 @@ def _as_f32(v) -> jax.Array:
     return jnp.asarray(v, jnp.float32)
 
 
+def _normalize_batch_shapes(batch_shapes, n: int, what: str = "netlists"):
+    """Coerce per-member batch shapes to a hashable tuple-of-tuples (jit
+    static arg) and validate the member count; None passes through."""
+    if batch_shapes is None:
+        return None
+    batch_shapes = tuple(tuple(b) if b is not None else None
+                         for b in batch_shapes)
+    if len(batch_shapes) != n:
+        raise ValueError(
+            f"batch_shapes: got {len(batch_shapes)} for {n} {what}")
+    return batch_shapes
+
+
 def _normalize_keys(keys, n: int, what: str = "keys") -> jax.Array:
     """Accept one key (split n ways), a key array, or a sequence of keys.
 
@@ -358,15 +555,15 @@ def _normalize_keys(keys, n: int, what: str = "keys") -> jax.Array:
 
 def _dispatch_many(nets, values_seq, keys, bitstream_length: int,
                    bitflip_rate: float, flip_keys, backend: str | None,
-                   decode: bool) -> list:
-    backend = backend or DEFAULT_BACKEND
-    if backend not in _BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; expected one of {_BACKENDS}")
+                   decode: bool, key_mode: str | None = None,
+                   batch_shapes=None) -> list:
+    backend, key_mode = _check_modes(backend, key_mode)
     n = len(nets)
     if n == 0:
         raise ValueError("execute_many: need at least one netlist")
     if len(values_seq) != n:
         raise ValueError(f"values: got {len(values_seq)} for {n} netlists")
+    batch_shapes = _normalize_batch_shapes(batch_shapes, n)
     keys = _normalize_keys(keys, n)
     if bitflip_rate > 0.0:
         if flip_keys is None:
@@ -378,41 +575,49 @@ def _dispatch_many(nets, values_seq, keys, bitstream_length: int,
         return [_dispatch(net, dict(vals), keys[i], bitstream_length,
                           bitflip_rate,
                           flip_keys[i] if flip_keys is not None else None,
-                          backend, decode)
+                          backend, decode, key_mode=key_mode,
+                          batch_shape=batch_shapes[i] if batch_shapes else None)
                 for i, (net, vals) in enumerate(zip(nets, values_seq))]
     bank = compile_bank_plan(list(nets), fuse_mux=bitflip_rate == 0.0)
     values_seq = tuple({k: _as_f32(v) for k, v in vals.items()}
                        for vals in values_seq)
     outs = _execute_bank(bank, values_seq, keys, flip_keys, bitstream_length,
                          float(bitflip_rate), backend == "compiled_pallas",
-                         decode)
+                         decode, key_mode=key_mode, batch_shapes=batch_shapes)
     return list(outs)
 
 
 def execute_many(nets, values_seq, keys, bitstream_length: int,
                  bitflip_rate: float = 0.0, flip_keys=None,
-                 backend: str | None = None) -> list:
+                 backend: str | None = None, key_mode: str | None = None,
+                 batch_shapes=None) -> list:
     """Execute N (possibly different) netlists as ONE fused bank-level plan.
 
     ``nets[i]`` runs with PI values ``values_seq[i]`` and PRNG key ``keys[i]``
     (``keys`` may also be a single key, which is split N ways).  Returns one
     packed-output dict per member, bit-identical to calling ``execute`` per
-    netlist with the same per-member keys — the merged plan batches same-type
-    gates of each level *across* members (core/plan.py bank merging), so the
-    whole bank runs in a single jit dispatch instead of N.  Member batch
-    shapes may differ.  ``bitflip_rate`` injects per-member faults keyed by
-    ``flip_keys[i]`` (single key allowed, split N ways).
+    netlist with the same per-member keys and ``key_mode`` — the merged plan
+    batches same-type gates of each level *across* members (core/plan.py bank
+    merging), and in batched key mode all members' PI streams generate in one
+    fused SNG pass per distinct batch shape, so the whole bank runs in a
+    single jit dispatch instead of N.  Member batch shapes may differ
+    (``batch_shapes[i]`` declares member i's shape when its values alone
+    cannot, e.g. all-const stream PIs).  ``bitflip_rate`` injects per-member
+    faults keyed by ``flip_keys[i]`` (single key allowed, split N ways).
     """
     return _dispatch_many(nets, values_seq, keys, bitstream_length,
-                          bitflip_rate, flip_keys, backend, decode=False)
+                          bitflip_rate, flip_keys, backend, decode=False,
+                          key_mode=key_mode, batch_shapes=batch_shapes)
 
 
 def execute_value_many(nets, values_seq, keys, bitstream_length: int,
                        bitflip_rate: float = 0.0, flip_keys=None,
-                       backend: str | None = None) -> list:
+                       backend: str | None = None, key_mode: str | None = None,
+                       batch_shapes=None) -> list:
     """``execute_many`` with the StoB decode fused into the same program."""
     return _dispatch_many(nets, values_seq, keys, bitstream_length,
-                          bitflip_rate, flip_keys, backend, decode=True)
+                          bitflip_rate, flip_keys, backend, decode=True,
+                          key_mode=key_mode, batch_shapes=batch_shapes)
 
 
 # ----------------------------- reference backend ----------------------------------
@@ -420,9 +625,17 @@ def execute_value_many(nets, values_seq, keys, bitstream_length: int,
 def _execute_reference(net: Netlist, values: dict[str, jax.Array],
                        key: jax.Array, bitstream_length: int,
                        bitflip_rate: float = 0.0,
-                       flip_key: jax.Array | None = None) -> dict[str, jax.Array]:
-    """Gate-by-gate interpreter: the oracle for the compiled plans."""
-    streams = _gen_pi_streams(net.pis, values, key, bitstream_length)
+                       flip_key: jax.Array | None = None,
+                       key_mode: str = DEFAULT_KEY_MODE,
+                       batch_shape: tuple[int, ...] | None = None) -> dict[str, jax.Array]:
+    """Gate-by-gate interpreter: the oracle for the compiled plans.
+
+    Stream generation honors the same ``key_mode`` as the compiled backends
+    (the discipline lives in ``_gen_pi_streams``, upstream of interpretation),
+    so reference and compiled outputs stay bit-for-bit comparable in either
+    mode."""
+    streams = _gen_pi_streams(net.pis, values, key, bitstream_length,
+                              key_mode=key_mode, batch_shape=batch_shape)
 
     if bitflip_rate > 0.0:
         if flip_key is None:

@@ -83,7 +83,8 @@ class Gate:
         if self.gtype not in GATE_ARITY:
             raise ValueError(f"unsupported gate type {self.gtype}")
         if len(self.inputs) != GATE_ARITY[self.gtype]:
-            raise ValueError(f"{self.gtype} expects {GATE_ARITY[self.gtype]} inputs, got {len(self.inputs)}")
+            raise ValueError(f"{self.gtype} expects {GATE_ARITY[self.gtype]} "
+                             f"inputs, got {len(self.inputs)}")
 
 
 class Netlist:
@@ -100,7 +101,8 @@ class Netlist:
         self.pis: list[PrimaryInput] = []
         self.gates: list[Gate] = []
         self.outputs: list[str] = []
-        self.state_bindings: dict[str, tuple[str, float]] = {}  # state PI -> (driving node, init value)
+        # state PI -> (driving node, init value)
+        self.state_bindings: dict[str, tuple[str, float]] = {}
         self._node_driver: dict[str, int] = {}
         self._gid = 0
         #: Mutation counter: bumped by every structural mutator so downstream

@@ -9,12 +9,29 @@ leveled schedule where every level's same-type gates are batched into ONE
 fused packed-logic pass over stacked uint32 stream words (executed by
 ``kernels/netlist_exec.py``).
 
-Beyond straight leveling, the compiler fuses the 4-gate stochastic scaled
-addition — ``NAND(NAND(a,s), NAND(b, NOT(s)))`` — into a single MUX pass
-``(a & s) | (b & ~s)``, the same fusion ``kernels/packed_logic.py`` performs
-at the Pallas level (the 2T-1MTJ hardware needs 4 cycles; one VPU pass needs
-none of the intermediate cell writes).  Fusion is a boolean identity, so the
-fused plan stays bit-identical to the reference interpreter.
+Beyond straight leveling, the compiler runs three structural cleanups before
+leveling (all boolean identities, so optimized plans stay bit-identical to
+the reference interpreter; disabled together with MUX fusion when per-gate
+fault injection must observe every intermediate stream):
+
+  * **BUFF elision** — copy gates become node aliases (zero passes);
+  * **structural CSE** — same gate type over the same (resolved, order-
+    canonicalized for commutative types) inputs computes the same stream, so
+    duplicates alias the first occurrence;
+  * **pattern fusion** — the 4-gate stochastic scaled addition
+    ``NAND(NAND(a,s), NAND(b, NOT(s)))`` fuses to one MUX pass
+    ``(a & s) | (b & ~s)``, and the 4-NAND XOR form
+    ``NAND(NAND(a,n1), NAND(b,n1))`` with ``n1 = NAND(a,b)`` fuses to one
+    XOR pass (the |a-b| subtractor of Fig. 5(c)) — where the 2T-1MTJ
+    hardware needs 4 cycles, one VPU pass needs none of the intermediate
+    cell writes.
+
+Compilation also lays out the plan's **stream table**: every non-state PI as
+one row of a stacked threshold tensor with a fixed key-lane index
+(correlation-group members share a lane), so the executor's batched key mode
+generates all of a plan's — or a whole bank's — input streams in ONE fused
+SNG pass (core/bitstream.generate_batch / kernels/sng.py) instead of one
+dispatch per PI.
 
 Plans are cached per netlist *structure* (PIs, gates, outputs, state
 bindings), so repeated executions of equal circuits — every benchmark/test
@@ -30,8 +47,16 @@ from .gates import Netlist, PIKind, PrimaryInput
 # Fused 3-input scaled addition: out = (a & s) | (b & ~s).  Not a 2T-1MTJ
 # primitive — it exists only at the plan level (and as packed_logic's "mux").
 FUSED_MUX = "MUX3"
+# Fused 2-input XOR: out = a ^ b, recognized from its 4-NAND netlist form.
+# Like MUX3, a plan-level op only (packed_logic's "xor").
+FUSED_XOR = "XOR"
 
-_OP_ARITY = {"MUX3": 3}
+_OP_ARITY = {"MUX3": 3, "XOR": 2}
+
+# Gate types whose input order is semantically irrelevant — their CSE key is
+# order-canonicalized so NAND(a,b) and NAND(b,a) intern to one pass.
+_COMMUTATIVE = {"AND", "NAND", "OR", "NOR", "XOR",
+                "MAJ3", "NMAJ3", "MAJ5", "NMAJ5"}
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -54,12 +79,70 @@ class CompiledOp:
         return len(self.outputs)
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamTable:
+    """Static layout of a plan's PI streams for one batched SNG pass.
+
+    Row ``i`` describes one non-state PI: its node name, where its value
+    comes from (``value_keys[i]`` into the caller's values dict, else
+    ``const_values[i]``), and its fixed key-lane index ``lanes[i]``.  Lanes
+    are assigned per plan — correlation groups (sorted by group name, members
+    in declaration order) take lanes ``0..n_groups-1`` with every member of a
+    group *sharing* its lane (shared uniforms => XOR decodes exact |a-b|),
+    then the uncorrelated singles take one fresh lane each in declaration
+    order.  The lane assignment mirrors the legacy per-PI key-split order, so
+    the two disciplines differ only in how randomness is derived, not in
+    which PI is "first".
+    """
+
+    names: tuple[str, ...]
+    value_keys: tuple[str | None, ...]
+    const_values: tuple[float | None, ...]
+    lanes: tuple[int, ...]
+    n_groups: int
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.names)
+
+
+def build_stream_table(pis) -> StreamTable:
+    """Lay out the stream table for a PI sequence (see ``StreamTable``)."""
+    groups: dict[str, list[PrimaryInput]] = {}
+    singles: list[PrimaryInput] = []
+    for pi in pis:
+        if pi.kind == PIKind.STATE:
+            continue
+        if pi.corr_group is not None:
+            groups.setdefault(pi.corr_group, []).append(pi)
+        else:
+            singles.append(pi)
+    rows: list[tuple[PrimaryInput, int]] = []
+    for g, (_, gpis) in enumerate(sorted(groups.items())):
+        rows.extend((pi, g) for pi in gpis)
+    rows.extend((pi, len(groups) + k) for k, pi in enumerate(singles))
+    return StreamTable(
+        names=tuple(pi.name for pi, _ in rows),
+        value_keys=tuple(pi.value_key for pi, _ in rows),
+        const_values=tuple(pi.const_value for pi, _ in rows),
+        lanes=tuple(lane for _, lane in rows),
+        n_groups=len(groups),
+    )
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class ExecutionPlan:
     """A netlist lowered to leveled, type-batched fused passes.
 
     ``eq=False``: plans are interned in the structure-keyed cache, so
     identity equality/hash is both correct and cheap as a jit static arg.
+
+    ``aliases`` maps every *observable* node (primary output / state driver)
+    elided by BUFF elision or CSE to the surviving node computing the
+    identical stream; the executor re-exposes them in its node environment.
+    Non-observable elided nodes need no alias — every use was rewritten to
+    the survivor at compile time.  ``stream_table`` is the batched SNG
+    layout of the plan's PI streams (see ``StreamTable``).
     """
 
     name: str
@@ -72,6 +155,11 @@ class ExecutionPlan:
     state_inits: tuple[float, ...]
     fused: bool
     n_fused_mux: int
+    stream_table: StreamTable
+    aliases: tuple[tuple[str, str], ...] = ()     # elided node -> survivor
+    n_fused_xor: int = 0
+    n_buff_elided: int = 0
+    n_cse_elided: int = 0
 
     @property
     def is_sequential(self) -> bool:
@@ -83,16 +171,73 @@ class ExecutionPlan:
         interpreter) — the compile-time speedup headline."""
         return sum(len(level) for level in self.levels)
 
+    @property
+    def n_elided(self) -> int:
+        """Nodes removed from the pass schedule by BUFF elision and CSE."""
+        return self.n_buff_elided + self.n_cse_elided
+
     def stream_pi_names(self) -> tuple[str, ...]:
         """Non-state PIs, in declaration order (the streams the executor
         generates; state PIs are carried by the sequential scan)."""
         return tuple(p.name for p in self.pis if p.kind != PIKind.STATE)
 
 
-# --------------------------------- fusion -----------------------------------------
+# ------------------------- pre-leveling optimization -------------------------------
 
-def _find_mux_fusions(net: Netlist) -> tuple[dict[int, tuple[str, str, str]], set[int]]:
-    """Detect fusable 4-gate MUX groups.
+@dataclasses.dataclass(frozen=True)
+class _WGate:
+    """Working gate record during compilation (inputs already alias-resolved)."""
+
+    gid: int
+    gtype: str
+    inputs: tuple[str, ...]
+    output: str
+
+
+def _elide_and_cse(gates):
+    """BUFF elision + structural CSE over a topological gate list.
+
+    Returns ``(kept, alias, n_buff, n_cse)``.  BUFF gates become aliases to
+    their (resolved) input; a gate whose (type, resolved inputs) — input
+    order canonicalized for commutative types — matches an earlier survivor
+    aliases that survivor's output.  Both are exact stream identities: the
+    interpreter computes the same deterministic function at both sites, so
+    aliasing is bit-identical, not approximate.  Gates are visited in
+    construction (topological) order, so alias chains resolve in one pass.
+    """
+    alias: dict[str, str] = {}
+    seen: dict[tuple, str] = {}
+    kept: list[_WGate] = []
+    n_buff = n_cse = 0
+    for g in gates:
+        ins = tuple(alias.get(i, i) for i in g.inputs)
+        if g.gtype == "BUFF":
+            alias[g.output] = ins[0]
+            n_buff += 1
+            continue
+        key = (g.gtype, tuple(sorted(ins)) if g.gtype in _COMMUTATIVE else ins)
+        prev = seen.get(key)
+        if prev is not None:
+            alias[g.output] = prev
+            n_cse += 1
+            continue
+        seen[key] = g.output
+        kept.append(_WGate(g.gid, g.gtype, ins, g.output))
+    return kept, alias, n_buff, n_cse
+
+
+def _count_uses(gates) -> dict[str, int]:
+    uses: dict[str, int] = defaultdict(int)
+    for g in gates:
+        for i in g.inputs:
+            uses[i] += 1
+    return uses
+
+
+def _find_mux_fusions(
+        gates, protected: set[str],
+) -> tuple[dict[int, tuple[str, str, str]], set[int]]:
+    """Detect fusable 4-gate MUX groups over a working gate list.
 
     Returns ``(roots, dead)``: ``roots`` maps the root NAND's gid to its
     ``(a, b, s)`` operand nodes; ``dead`` holds gids of the three absorbed
@@ -100,19 +245,15 @@ def _find_mux_fusions(net: Netlist) -> tuple[dict[int, tuple[str, str, str]], se
     use and is neither a primary output nor a state driver — otherwise the
     intermediate stream is observable and must stay materialized.
     """
-    driver: dict[str, any] = {g.output: g for g in net.gates}
-    uses: dict[str, int] = defaultdict(int)
-    for g in net.gates:
-        for i in g.inputs:
-            uses[i] += 1
-    protected = set(net.outputs) | {drv for drv, _ in net.state_bindings.values()}
+    driver = {g.output: g for g in gates}
+    uses = _count_uses(gates)
 
     def absorbable(node: str) -> bool:
         return uses[node] == 1 and node not in protected
 
     roots: dict[int, tuple[str, str, str]] = {}
     dead: set[int] = set()
-    for g in net.gates:
+    for g in gates:
         if g.gtype != "NAND" or g.gid in dead:
             continue
         g1 = driver.get(g.inputs[0])
@@ -148,6 +289,53 @@ def _find_mux_fusions(net: Netlist) -> tuple[dict[int, tuple[str, str, str]], se
     return roots, dead
 
 
+def _find_xor_fusions(gates, protected: set[str],
+                      dead: set[int]) -> dict[int, tuple[str, str]]:
+    """Detect the 4-NAND XOR form and fuse it to one XOR pass.
+
+    Pattern (Fig. 5(c)'s |a-b| subtractor): ``n1 = NAND(a, b)``;
+    ``root = NAND(NAND(a, n1), NAND(b, n1))`` computes ``a ^ b``.  The three
+    feeder NANDs are absorbed only when they are single-purpose — ``n1`` used
+    exactly by the two mid gates, each mid gate used only by the root, and
+    none of them observable (primary output / state driver).  Extends
+    ``dead`` in place; returns root gid -> (a, b).
+    """
+    driver = {g.output: g for g in gates}
+    uses = _count_uses(gates)
+    roots: dict[int, tuple[str, str]] = {}
+    for g in gates:
+        if g.gtype != "NAND" or g.gid in dead:
+            continue
+        x = driver.get(g.inputs[0])
+        y = driver.get(g.inputs[1])
+        if x is None or y is None or x.gid == y.gid:
+            continue
+        if x.gtype != "NAND" or y.gtype != "NAND":
+            continue
+        if {x.gid, y.gid} & dead:
+            continue
+        found = None
+        for c in x.inputs:                       # shared mid node candidate
+            if c not in y.inputs:
+                continue
+            n1 = driver.get(c)
+            if n1 is None or n1.gtype != "NAND" or n1.gid in dead:
+                continue
+            a = x.inputs[1] if x.inputs[0] == c else x.inputs[0]
+            b = y.inputs[1] if y.inputs[0] == c else y.inputs[0]
+            if a == b or set(n1.inputs) != {a, b}:
+                continue
+            if (uses[c] == 2 and uses[x.output] == 1 and uses[y.output] == 1
+                    and not {c, x.output, y.output} & protected):
+                found = (a, b, x.gid, y.gid, n1.gid)
+                break
+        if found:
+            a, b, xg, yg, ng = found
+            roots[g.gid] = (a, b)
+            dead.update((xg, yg, ng))
+    return roots
+
+
 # -------------------------------- compilation -------------------------------------
 
 def _signature(net: Netlist) -> tuple:
@@ -162,23 +350,34 @@ def _signature(net: Netlist) -> tuple:
 
 _PLAN_CACHE: dict[tuple, ExecutionPlan] = {}
 _BANK_CACHE: dict[tuple, "BankPlan"] = {}
+# Cumulative optimizer counters across cache-missing compiles (reported by
+# cache_info so perf work can see how many nodes the structural passes
+# removed, and reset by clear_cache).
+_OPT_COUNTS = {"buff_elided": 0, "cse_elided": 0, "mux_fused": 0,
+               "xor_fused": 0}
 
 
 def cache_info() -> dict[str, int]:
-    return {"plans": len(_PLAN_CACHE), "banks": len(_BANK_CACHE)}
+    return {"plans": len(_PLAN_CACHE), "banks": len(_BANK_CACHE),
+            **_OPT_COUNTS}
 
 
 def clear_cache() -> None:
     _PLAN_CACHE.clear()
     _BANK_CACHE.clear()
+    for k in _OPT_COUNTS:
+        _OPT_COUNTS[k] = 0
 
 
 def compile_plan(net: Netlist, fuse_mux: bool = True) -> ExecutionPlan:
     """Compile ``net`` into an ExecutionPlan (structure-cached).
 
-    ``fuse_mux=False`` keeps every gate as its own batched op — required when
-    per-gate fault injection must observe the intermediate streams (Table 4),
-    and by construction bit-identical to the interpreter in all cases.
+    ``fuse_mux=False`` keeps every gate as its own batched op, disabling ALL
+    structural optimization (MUX/XOR fusion, BUFF elision, CSE) — required
+    when per-gate fault injection must observe the intermediate streams
+    (Table 4), and by construction bit-identical to the interpreter in all
+    cases.  The optimized default is bit-identical too (every pass is an
+    exact stream identity); only the per-gate injection points differ.
 
     A fast per-instance memo front-runs the structural cache so the hot
     execute() path doesn't rebuild the signature every call.  The memo is
@@ -207,17 +406,45 @@ def compile_plan(net: Netlist, fuse_mux: bool = True) -> ExecutionPlan:
         return cached
 
     net.validate()
-    roots, dead = _find_mux_fusions(net) if fuse_mux else ({}, set())
+    protected = set(net.outputs) | {drv for drv, _ in net.state_bindings.values()}
+    if fuse_mux:
+        # Structural cleanups first (BUFF elision + CSE rewrite the graph the
+        # pattern matchers see), then 4-gate pattern fusion on the survivors.
+        gates, alias, n_buff, n_cse = _elide_and_cse(net.gates)
+        # Only observable elided nodes (outputs / state drivers) need
+        # re-exposing at execution time — every other use was rewritten to
+        # the survivor.  Restricting the recorded aliases to those keeps the
+        # next step sound: a dangling alias to a node fusion then absorbs
+        # would crash the re-expose loop.
+        alias = {s: d for s, d in alias.items() if s in protected}
+        # An elided observable node aliases its survivor — which makes the
+        # SURVIVOR observable too: resolve protection through the aliases so
+        # pattern fusion cannot absorb a node some alias must re-expose.
+        protected |= set(alias.values())
+        mux_roots, dead = _find_mux_fusions(gates, protected)
+        xor_roots = _find_xor_fusions(gates, protected, dead)
+    else:
+        # Per-gate fault injection must observe every intermediate stream:
+        # no elision, no dedup, no fusion (mirrors the interpreter exactly).
+        gates = [_WGate(g.gid, g.gtype, g.inputs, g.output) for g in net.gates]
+        alias, n_buff, n_cse = {}, 0, 0
+        mux_roots, dead, xor_roots = {}, set(), {}
+    _OPT_COUNTS["buff_elided"] += n_buff
+    _OPT_COUNTS["cse_elided"] += n_cse
+    _OPT_COUNTS["mux_fused"] += len(mux_roots)
+    _OPT_COUNTS["xor_fused"] += len(xor_roots)
 
-    # Longest-path leveling over the fused op graph (PIs at level 0).
+    # Longest-path leveling over the optimized op graph (PIs at level 0).
     level: dict[str, int] = {p.name: 0 for p in net.pis}
     by_level: dict[int, dict[str, list[tuple[int, tuple[str, ...], str]]]] = \
         defaultdict(lambda: defaultdict(list))
-    for g in net.gates:
+    for g in gates:
         if g.gid in dead:
             continue
-        if g.gid in roots:
-            op, ins = FUSED_MUX, roots[g.gid]
+        if g.gid in mux_roots:
+            op, ins = FUSED_MUX, mux_roots[g.gid]
+        elif g.gid in xor_roots:
+            op, ins = FUSED_XOR, xor_roots[g.gid]
         else:
             op, ins = g.gtype, g.inputs
         lvl = 1 + max(level[i] for i in ins)
@@ -248,7 +475,12 @@ def compile_plan(net: Netlist, fuse_mux: bool = True) -> ExecutionPlan:
         state_drivers=tuple(d for _, (d, _) in state_items),
         state_inits=tuple(i for _, (_, i) in state_items),
         fused=fuse_mux,
-        n_fused_mux=len(roots),
+        n_fused_mux=len(mux_roots),
+        stream_table=build_stream_table(net.pis),
+        aliases=tuple(sorted(alias.items())),
+        n_fused_xor=len(xor_roots),
+        n_buff_elided=n_buff,
+        n_cse_elided=n_cse,
     )
     _PLAN_CACHE[key] = plan
     memo[memo_key] = plan
@@ -354,6 +586,11 @@ def merge_plans(plans: "list[ExecutionPlan]", indices: "list[int]",
         pi, name=pre + pi.name,
         corr_group=(pre + pi.corr_group) if pi.corr_group else None)
         for p, pre in zip(plans, prefixes) for pi in p.pis)
+    # NOTE: the merged stream table is laid out over the *merged* PI list, so
+    # its lanes differ from the members' own tables.  Bank execution generates
+    # streams from each member's table with that member's key (preserving
+    # merged == looped bit-identity); the merged table exists for plans
+    # executed standalone.
     return ExecutionPlan(
         name=name,
         pis=pis,
@@ -368,6 +605,12 @@ def merge_plans(plans: "list[ExecutionPlan]", indices: "list[int]",
         state_inits=tuple(i for p in plans for i in p.state_inits),
         fused=any(p.fused for p in plans),
         n_fused_mux=sum(p.n_fused_mux for p in plans),
+        stream_table=build_stream_table(pis),
+        aliases=tuple((pre + a, pre + b) for p, pre in zip(plans, prefixes)
+                      for a, b in p.aliases),
+        n_fused_xor=sum(p.n_fused_xor for p in plans),
+        n_buff_elided=sum(p.n_buff_elided for p in plans),
+        n_cse_elided=sum(p.n_cse_elided for p in plans),
     )
 
 

@@ -12,8 +12,9 @@ from . import common, netlist_exec, ops, ref, ref_wkv
 from .packed_logic import packed_logic
 from .popcount_tree import popcount_hier
 from .sc_matmul import sc_matmul
-from .sng import sng_pack
+from .sng import lane_seeds, sng_pack, sng_words
 from .wkv import wkv
 
 __all__ = ["common", "netlist_exec", "ops", "ref", "ref_wkv", "packed_logic",
-           "popcount_hier", "sc_matmul", "sng_pack", "wkv"]
+           "popcount_hier", "sc_matmul", "lane_seeds", "sng_pack", "sng_words",
+           "wkv"]

@@ -16,6 +16,12 @@ import jax.numpy as jnp
 WORD_BITS = 32
 
 
+def on_tpu() -> bool:
+    """Whether the default backend is a real TPU (Pallas compiles natively);
+    everywhere else the kernels run in interpret mode."""
+    return jax.default_backend() == "tpu"
+
+
 def hash_u32(x: jax.Array) -> jax.Array:
     """Murmur3 finalizer: uint32 -> well-mixed uint32."""
     x = x.astype(jnp.uint32)
@@ -28,9 +34,45 @@ def hash_u32(x: jax.Array) -> jax.Array:
 
 
 def threshold_u32(p: jax.Array) -> jax.Array:
-    """Probability in [0,1] -> uint32 compare threshold (the BtoS LUT analogue)."""
+    """Probability in [0,1] -> uint32 compare threshold (the BtoS LUT analogue).
+
+    Clamped on the integer side: float32 cannot represent 2^32 - 1 (it rounds
+    to 2^32), so a float-side minimum is a no-op and the out-of-range
+    float->uint32 cast it was meant to prevent is undefined across XLA
+    backends.  Anything that rounds to >= 2^32 maps to 0xFFFFFFFF instead
+    (p=1.0 covers all but one value in 2^32 — the same convention as
+    ``core.bitstream._threshold_u32``).
+    """
     scaled = jnp.round(jnp.clip(p, 0.0, 1.0).astype(jnp.float32) * 4294967296.0)
-    return jnp.minimum(scaled, 4294967295.0).astype(jnp.uint32)
+    return jnp.where(scaled >= jnp.float32(4294967296.0), jnp.uint32(0xFFFFFFFF),
+                     scaled.astype(jnp.uint32))
+
+
+def mix_seed(seed: jax.Array, lane: jax.Array) -> jax.Array:
+    """Derive a per-stream-row mixed seed from (seed, key-lane index).
+
+    Rows with equal lane share their uniforms (correlation groups); rows with
+    distinct lanes are statistically independent.  The mix is applied once
+    outside the generation loop, so the hot path hashes only the bit counter.
+    """
+    return hash_u32(hash_u32(seed.astype(jnp.uint32)) ^ lane.astype(jnp.uint32))
+
+
+def gen_packed_bits_seeded(mixed_seed: jax.Array, base_index: jax.Array,
+                           thr: jax.Array) -> jax.Array:
+    """Generate one packed uint32 word of Bernoulli bits per element.
+
+    ``mixed_seed``: pre-mixed per-row seed (see ``mix_seed``), broadcastable
+    against ``base_index``.  ``base_index``: uint32 tensor of *bit-space* base
+    counters (flat element index * 32).  ``thr``: uint32 compare thresholds
+    (``threshold_u32``), broadcastable against ``base_index``.  Bit ``t`` of
+    the output word is 1 iff hash(base+t ^ seed) < thr.
+    """
+    lanes = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    ctr = base_index[..., None] + lanes          # (..., 32)
+    r = hash_u32(ctr ^ mixed_seed[..., None])
+    bits = (r < thr[..., None]).astype(jnp.uint32)
+    return jnp.sum(bits << lanes, axis=-1, dtype=jnp.uint32)
 
 
 def gen_packed_bits(seed: jax.Array, base_index: jax.Array, p: jax.Array) -> jax.Array:
@@ -40,11 +82,8 @@ def gen_packed_bits(seed: jax.Array, base_index: jax.Array, p: jax.Array) -> jax
     index * 32), broadcastable against ``p``.  Bit ``t`` of the output word is
     1 with probability ``p``, independently across (seed, counter) pairs.
     """
-    lanes = jnp.arange(WORD_BITS, dtype=jnp.uint32)
-    ctr = base_index[..., None] + lanes          # (..., 32)
-    r = hash_u32(ctr ^ hash_u32(seed.astype(jnp.uint32)))
-    bits = (r < threshold_u32(p)[..., None]).astype(jnp.uint32)
-    return jnp.sum(bits << lanes, axis=-1, dtype=jnp.uint32)
+    mixed = jnp.broadcast_to(hash_u32(seed.astype(jnp.uint32)), base_index.shape)
+    return gen_packed_bits_seeded(mixed, base_index, threshold_u32(p))
 
 
 def popcount(words: jax.Array) -> jax.Array:

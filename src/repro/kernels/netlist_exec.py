@@ -35,7 +35,7 @@ from .packed_logic import packed_logic
 
 # Plan op -> packed_logic op name (ops the Pallas kernel implements).
 _PALLAS_OPS = {"NOT": "not", "AND": "and", "NAND": "nand", "OR": "or",
-               "NOR": "nor", FUSED_MUX: "mux"}
+               "NOR": "nor", "XOR": "xor", FUSED_MUX: "mux"}
 
 
 def _apply_pass(op: str, ins: list[jax.Array], use_pallas: bool) -> jax.Array:
@@ -78,6 +78,11 @@ def run_combinational(plan: ExecutionPlan, env: dict[str, jax.Array],
                         for gid, o in zip(cop.gids, outs)]
             for name, o in zip(cop.outputs, outs):
                 env[name] = o
+    # Re-expose nodes elided by BUFF elision / CSE: each aliases the surviving
+    # node computing the identical stream, so outputs and state drivers that
+    # were deduplicated away stay readable (zero extra passes).
+    for src, dst in plan.aliases:
+        env[src] = env[dst]
     return env
 
 

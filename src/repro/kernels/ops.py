@@ -10,14 +10,11 @@ from __future__ import annotations
 import jax
 
 from . import ref
+from .common import on_tpu as _on_tpu
 from .packed_logic import packed_logic
 from .popcount_tree import popcount_hier
 from .sc_matmul import sc_matmul as _sc_matmul_pallas
-from .sng import sng_pack as _sng_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from .sng import sng_pack as _sng_pallas, sng_words as _sng_words
 
 
 def sc_matmul(a: jax.Array, w: jax.Array, bitstream_length: int = 256,
@@ -36,6 +33,18 @@ def sng(p: jax.Array, bitstream_length: int = 256, seed: int = 0,
         out = _sng_pallas(flat, bitstream_length, seed, interpret=not _on_tpu())
         return out.reshape(p.shape + (bitstream_length // 32,))
     return ref.sng_pack_ref(p, bitstream_length, seed)
+
+
+def sng_table(row_seeds: jax.Array, thr: jax.Array, bitstream_length: int = 256,
+              use_pallas: bool = True) -> jax.Array:
+    """Batched stream-table SNG: (N,) seeds + (N, B) thresholds -> (N, B, W)."""
+    if bitstream_length % 32 != 0:
+        raise ValueError(f"bitstream length {bitstream_length} must be a "
+                         "multiple of 32")
+    # sng_words routes to the ref oracle itself when use_pallas=False and
+    # auto-selects interpret mode off-TPU otherwise.
+    return _sng_words(row_seeds, thr, bitstream_length // 32,
+                      use_pallas=use_pallas)
 
 
 def logic(op: str, *args: jax.Array, use_pallas: bool = True) -> jax.Array:

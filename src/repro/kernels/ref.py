@@ -10,7 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .common import WORD_BITS, gen_packed_bits, popcount
+from .common import (WORD_BITS, gen_packed_bits, gen_packed_bits_seeded,
+                     hash_u32, mix_seed, popcount, threshold_u32)
 
 
 def sc_eltwise_ref(op: str, *args: jax.Array) -> jax.Array:
@@ -82,12 +83,44 @@ def sc_matmul_ref(a: jax.Array, w: jax.Array, bitstream_length: int,
     return out.astype(jnp.float32) / jnp.float32(bitstream_length)
 
 
+def sng_words_ref(row_seeds: jax.Array, thr: jax.Array, n_words: int) -> jax.Array:
+    """Batched SNG oracle over a stream table: (N, B) thresholds -> (N, B, W).
+
+    ``row_seeds``: (N,) pre-mixed per-row seeds (``common.mix_seed``); rows
+    with equal seed share their uniforms (correlation groups).  ``thr``:
+    (N, B) uint32 compare thresholds.  Bit ``t`` of word ``w`` of element
+    ``b`` is 1 iff hash((b*W + w)*32 + t ^ row_seed) < thr — the counter runs
+    over *bit space* per element, so output is independent of how rows are
+    stacked or batches are tiled.
+
+    Packs by compare-and-accumulate over the 32 lane shifts: only packed-size
+    (N, B, W) tensors are ever materialized, never the (N, B, W, 32) unpacked
+    bit tensor — mirroring the Pallas kernel's in-register accumulation.
+    """
+    b = thr.shape[-1]
+    base = ((jnp.arange(b, dtype=jnp.uint32)[:, None] * jnp.uint32(n_words)
+             + jnp.arange(n_words, dtype=jnp.uint32)[None, :])
+            * jnp.uint32(WORD_BITS))                       # (B, W) bit counters
+    acc = jnp.zeros(thr.shape + (n_words,), jnp.uint32)
+    seeds = row_seeds[:, None, None]
+    for t in range(WORD_BITS):
+        r = hash_u32((base[None] + jnp.uint32(t)) ^ seeds)
+        acc = acc | ((r < thr[..., None]).astype(jnp.uint32) << jnp.uint32(t))
+    return acc
+
+
 def sng_pack_ref(p: jax.Array, bitstream_length: int, seed: int = 0) -> jax.Array:
-    """Stochastic number generation oracle: p (...,) -> packed (..., BL//32)."""
+    """Stochastic number generation oracle: p (...,) -> packed (..., BL//32).
+
+    Single-row degenerate case of the stream-table discipline: every element
+    of ``p`` is one batch element of row 0 (key lane 0), with bit counters
+    ``elem * BL + bit``.
+    """
     n_words = bitstream_length // WORD_BITS
     flat = p.reshape(-1)
     idx = (jnp.arange(flat.shape[0], dtype=jnp.uint32)[:, None]
            * jnp.uint32(bitstream_length)
            + (jnp.arange(n_words, dtype=jnp.uint32) * WORD_BITS)[None, :])
-    words = gen_packed_bits(jnp.uint32(seed), idx, flat[:, None])
+    mixed = jnp.broadcast_to(mix_seed(jnp.uint32(seed), jnp.uint32(0)), idx.shape)
+    words = gen_packed_bits_seeded(mixed, idx, threshold_u32(flat)[:, None])
     return words.reshape(p.shape + (n_words,))

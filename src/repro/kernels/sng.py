@@ -1,9 +1,25 @@
-"""Pallas kernel: stochastic number generation (the BtoS step as a kernel).
+"""Pallas kernel: batched stochastic number generation over a stream table.
 
-Maps a tensor of probabilities to packed Bernoulli bitstreams, entirely in
-VMEM — the TPU analogue of the pulse-programmed MTJ stochastic write
-(Eqs. (1)-(2) / Fig. 8's BtoS memory).  Counters derive from global element
-indices, so output is tiling-independent and equals ref.sng_pack_ref.
+The BtoS step of the paper writes *all* operand streams into subarray rows in
+bulk before any gate pass runs (Sec. 2-3 / Fig. 8) — and for in-memory SC it
+is stream generation, not the logic passes, that dominates end-to-end cost
+(Khatamifard et al.; Razi et al.).  This kernel is the TPU translation of
+that bulk write: ONE fused threshold+pack pass generates every primary-input
+stream of a compiled plan (or a whole bank of plans) from a stacked
+threshold table, instead of one dispatch per stream.
+
+Layout: the *stream table* (``core.plan.StreamTable``) stacks the plan's
+non-state PIs into rows.  Row ``i`` carries a pre-mixed per-row seed
+(``common.mix_seed(seed, lane_i)``); rows with equal key-lane index share
+their uniforms — that is how correlation groups (XOR = |a-b|, Fig. 4(c))
+ride through the same batched pass as the independent streams.
+
+The kernel packs by compare-and-accumulate over the 32 lane shifts: the
+(…, W, 32) unpacked bit tensor is never materialized (32x less live memory
+than the threshold-then-pack formulation).  Counters derive from global
+(element, bit) indices, so output is tiling-independent and bit-identical to
+``ref.sng_words_ref`` — the jnp fallback the executor uses by default
+(``use_pallas`` opts into the kernel).
 """
 from __future__ import annotations
 
@@ -13,33 +29,80 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import WORD_BITS, gen_packed_bits
+from . import ref
+from .common import WORD_BITS, hash_u32, mix_seed, on_tpu, threshold_u32
 
 
-def _kernel(p_ref, o_ref, *, bl: int, n_words: int, bn: int, seed: int):
-    i = pl.program_id(0)
-    p = p_ref[...]                                        # (bn,)
-    gi = i * bn + jnp.arange(bn, dtype=jnp.uint32)        # global element ids
-    base = gi[:, None] * jnp.uint32(bl) + (
-        jnp.arange(n_words, dtype=jnp.uint32) * WORD_BITS)[None, :]
-    o_ref[...] = gen_packed_bits(jnp.uint32(seed), base, p[:, None])
+def lane_seeds(seed: jax.Array, lanes: jax.Array) -> jax.Array:
+    """Per-row mixed seeds for a stream table: (N,) lanes -> (N,) seeds."""
+    return mix_seed(jnp.asarray(seed, jnp.uint32),
+                    jnp.asarray(lanes, jnp.uint32))
+
+
+def _kernel(seed_ref, thr_ref, o_ref, *, n_words: int, be: int):
+    j = pl.program_id(1)
+    s = seed_ref[0]                                       # mixed per-row seed
+    thr = thr_ref[0]                                      # (be,)
+    elem = (j * be + jnp.arange(be, dtype=jnp.uint32))    # global element ids
+    base = (elem[:, None] * jnp.uint32(n_words)
+            + jnp.arange(n_words, dtype=jnp.uint32)[None, :]) * jnp.uint32(
+                WORD_BITS)                                # (be, W) bit counters
+    acc = jnp.zeros((be, n_words), jnp.uint32)
+    for t in range(WORD_BITS):
+        r = hash_u32((base + jnp.uint32(t)) ^ s)
+        acc = acc | ((r < thr[:, None]).astype(jnp.uint32) << jnp.uint32(t))
+    o_ref[...] = acc[None]
+
+
+@functools.partial(jax.jit, static_argnames=("n_words", "use_pallas",
+                                             "block_elems", "interpret"))
+def sng_words(row_seeds: jax.Array, thr: jax.Array, n_words: int,
+              use_pallas: bool = False, block_elems: int = 256,
+              interpret: bool | None = None) -> jax.Array:
+    """Batched SNG over a stream table: (N, B) thresholds -> (N, B, W) words.
+
+    ``row_seeds``: (N,) pre-mixed per-row seeds (``lane_seeds``); rows with
+    equal seed share their uniforms (correlation groups decode exact |a-b|
+    under XOR).  ``thr``: (N, B) uint32 compare thresholds.  The jnp fallback
+    (``use_pallas=False``, the executor default) and the Pallas kernel are
+    bit-identical; ``interpret=None`` auto-selects interpret mode off-TPU.
+    """
+    if thr.shape[-1] * n_words * WORD_BITS > 1 << 32:
+        # Bit counters are uint32 per (row, element, bit): past 2^32 bits per
+        # row they wrap, silently duplicating uniforms between far-apart
+        # elements (streams assumed independent become perfectly correlated).
+        # The legacy threefry discipline has no such cliff, so refuse loudly.
+        raise ValueError(
+            f"batched SNG counter space exhausted: {thr.shape[-1]} elements x "
+            f"{n_words * WORD_BITS} bits > 2^32 bits per stream row; shard "
+            "the batch across keys or use key_mode='legacy'")
+    if not use_pallas:
+        return ref.sng_words_ref(row_seeds, thr, n_words)
+    n, b = thr.shape
+    be = min(block_elems, b)
+    kernel = functools.partial(_kernel, n_words=n_words, be=be)
+    return pl.pallas_call(
+        kernel,
+        grid=(n, pl.cdiv(b, be)),
+        in_specs=[pl.BlockSpec((1,), lambda i, j: (i,)),
+                  pl.BlockSpec((1, be), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, be, n_words), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b, n_words), jnp.uint32),
+        interpret=not on_tpu() if interpret is None else interpret,
+    )(row_seeds.astype(jnp.uint32), thr)
 
 
 @functools.partial(jax.jit, static_argnames=("bitstream_length", "seed",
                                              "block", "interpret"))
 def sng_pack(p: jax.Array, bitstream_length: int = 256, seed: int = 0,
              block: int = 256, interpret: bool = True) -> jax.Array:
-    """p: (N,) float in [0,1] -> (N, BL//32) packed uint32 bitstreams."""
-    n = p.shape[0]
+    """p: (N,) float in [0,1] -> (N, BL//32) packed uint32 bitstreams.
+
+    Single-row degenerate case of ``sng_words`` (one table row, key lane 0,
+    every element of ``p`` a batch element) — equals ``ref.sng_pack_ref``.
+    """
     n_words = bitstream_length // WORD_BITS
-    bn = min(block, n)
-    kernel = functools.partial(_kernel, bl=bitstream_length, n_words=n_words,
-                               bn=bn, seed=seed)
-    return pl.pallas_call(
-        kernel,
-        grid=(pl.cdiv(n, bn),),
-        in_specs=[pl.BlockSpec((bn,), lambda i: (i,))],
-        out_specs=pl.BlockSpec((bn, n_words), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, n_words), jnp.uint32),
-        interpret=interpret,
-    )(p.astype(jnp.float32))
+    seeds = lane_seeds(jnp.uint32(seed), jnp.zeros((1,), jnp.uint32))
+    thr = threshold_u32(p.astype(jnp.float32))[None, :]
+    return sng_words(seeds, thr, n_words, use_pallas=True, block_elems=block,
+                     interpret=interpret)[0]

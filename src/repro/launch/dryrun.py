@@ -27,7 +27,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as PS
 
 from repro.configs import SHAPES, get_config, runnable_cells, token_specs

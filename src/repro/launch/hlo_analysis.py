@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -40,7 +39,8 @@ _SHAPE = re.compile(r"^(\([^)]*\)|[\w]+\[[\d,]*\](?:{[^}]*})?)\s*(.*)$")
 _OPNAME = re.compile(r"^([\w\-]+)\(")
 _SHAPE_TOK = re.compile(r"(\w+)\[([\d,]*)\]")
 _OPERANDS = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
-_CALLS = re.compile(r"(?:calls|body|condition|branch_computations)=\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+_CALLS = re.compile(r"(?:calls|body|condition|branch_computations)"
+                    r"=\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
 _TO_APPLY = re.compile(r"to_apply=%?([\w\.\-]+)")
 _CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _CONST_INT = re.compile(r"constant\((\d+)\)")

@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any
 
 # TPU v5e-class hardware constants (assignment).
 PEAK_FLOPS = 197e12          # bf16 per chip

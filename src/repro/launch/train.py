@@ -17,14 +17,13 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as PS
+from jax.sharding import NamedSharding
 
 from repro.checkpoint import latest_step, restore, save
 from repro.configs import get_config, reduced_config
 from repro.data import SyntheticLM
-from repro.models import RunCtx, init_params, model_params
-from repro.sharding import make_rules, param_pspec_tree
+from repro.models import RunCtx, init_params
+from repro.sharding import make_rules
 from repro.train import make_train_step, train_state_init
 
 

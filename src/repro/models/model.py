@@ -16,7 +16,6 @@ Caches mirror the parameter structure: per unit position, stacked over units.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax

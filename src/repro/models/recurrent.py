@@ -219,7 +219,8 @@ def rwkv_prefill(cfg: ModelConfig, p: dict, x: jax.Array
     def resh(t):  # (B,S,H,hd) -> (nc, B, H, C, hd)
         return t.reshape(b, nc, c, h, hd).transpose(1, 0, 3, 2, 4)
 
-    r_, k_, v_ = resh(r.astype(jnp.float32)), resh(k.astype(jnp.float32)), resh(v.astype(jnp.float32))
+    r_, k_, v_ = (resh(r.astype(jnp.float32)), resh(k.astype(jnp.float32)),
+                  resh(v.astype(jnp.float32)))
     lw = resh(log_w)
     u = p["u"].astype(jnp.float32)
 

@@ -85,7 +85,6 @@ def make_pod_sync(mesh, pspecs, bits: int = 8, pod_axis: str = "pod"):
     ``pspecs``: the parameter PartitionSpec tree (pod axis unmentioned —
     parameters are replicated across pods, sharded FSDP/TP within a pod).
     """
-    import numpy as np
     try:
         from jax import shard_map
     except ImportError:  # jax < 0.6 exposes it under jax.experimental

@@ -9,7 +9,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.models import RunCtx, decode_step, init_cache, prefill
+from repro.models import RunCtx, decode_step, prefill
 from repro.models.common import ModelConfig
 
 

@@ -11,7 +11,6 @@ Distribution notes (DESIGN.md §5):
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -4,7 +4,6 @@ claim: stochastic error stays small and grows slowly with flip rate, binary
 error explodes).
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

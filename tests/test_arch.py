@@ -1,9 +1,8 @@
 """Stoch-IMC [n, m] architecture model tests (Section 4-3 worked examples,
 Table 2/3 qualitative structure, Eq. (11) lifetime).
 """
-import pytest
 
-from repro.core import arch, circuits
+from repro.core import circuits
 from repro.core.arch import StochIMCConfig, evaluate_binary_imc, evaluate_sc_cram, \
     evaluate_stoch_imc, lifetime_improvement
 from repro.core.scheduler import schedule

@@ -8,8 +8,8 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, reduced_config
-from repro.models import (RunCtx, decode_step, forward, init_cache,
-                          init_params, prefill)
+from repro.models import (RunCtx, decode_step, forward, init_params,
+                          prefill)
 from repro.models.frontend import audio_stub_frames, vq_stub_tokens
 
 B, S = 2, 32

@@ -14,7 +14,7 @@ import pytest
 
 from repro.core import apps, arch, circuits, executor
 from repro.core.appnet import APP_NETLISTS
-from repro.core.plan import compile_bank_plan, merge_plans, compile_plan
+from repro.core.plan import compile_bank_plan, compile_plan, merge_plans
 
 KEY = jax.random.key(7)
 FLIP_KEY = jax.random.key(77)

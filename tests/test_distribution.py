@@ -53,7 +53,7 @@ def test_divisibility_fallback_reports_and_replicates():
     class FakeMesh:
         axis_names = ("data", "model")
         shape = {"data": 16, "model": 16}
-    from repro.sharding.rules import ShardingRules, _spec_for
+    from repro.sharding.rules import ShardingRules
     sr = ShardingRules(mesh=FakeMesh(), rules=make_rules(mesh).rules,
                        batch=("data",))
     skel = model_params(cfg)

@@ -1,10 +1,9 @@
 """Validate the while-aware HLO analyzer against known-FLOPs programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.launch.hlo_analysis import HloModule, analyze
+from repro.launch.hlo_analysis import analyze
 
 
 def _hlo(fn, *args):

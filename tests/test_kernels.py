@@ -15,7 +15,7 @@ from repro.kernels.common import gen_packed_bits, hash_u32, threshold_u32
 from repro.kernels.packed_logic import packed_logic
 from repro.kernels.popcount_tree import popcount_hier
 from repro.kernels.sc_matmul import sc_matmul
-from repro.kernels.sng import sng_pack
+from repro.kernels.sng import lane_seeds, sng_pack, sng_words
 
 KEY = jax.random.key(0)
 
@@ -67,6 +67,49 @@ def test_sng_is_tiling_independent():
     a = sng_pack(p, 128, block=256, interpret=True)
     b = sng_pack(p, 128, block=32, interpret=True)
     assert (a == b).all()
+
+
+# --------------------------- batched stream-table sng -----------------------------
+
+@settings(max_examples=10)
+@given(st.integers(1, 24), st.integers(1, 40), st.sampled_from([32, 64, 128]))
+def test_sng_words_pallas_equals_ref_all_shapes(n, b, bl):
+    thr = threshold_u32(jax.random.uniform(jax.random.key(n * 100 + b), (n, b)))
+    seeds = lane_seeds(jnp.uint32(5), jnp.arange(n, dtype=jnp.uint32))
+    k = sng_words(seeds, thr, bl // 32, use_pallas=True, interpret=True)
+    r = ref.sng_words_ref(seeds, thr, bl // 32)
+    assert k.shape == (n, b, bl // 32)
+    assert (k == r).all()
+
+
+def test_sng_words_block_independent_and_equals_ref():
+    thr = threshold_u32(jax.random.uniform(KEY, (3, 100)))
+    seeds = lane_seeds(jnp.uint32(1), jnp.arange(3, dtype=jnp.uint32))
+    a = sng_words(seeds, thr, 4, use_pallas=True, block_elems=256, interpret=True)
+    b = sng_words(seeds, thr, 4, use_pallas=True, block_elems=17, interpret=True)
+    assert (a == b).all()
+    assert (a == ref.sng_words_ref(seeds, thr, 4)).all()
+
+
+def test_sng_words_rows_independent_of_stacking():
+    # A row's stream depends only on (seed, element, bit) — stacking more
+    # rows alongside it must not change its bits (the property bank-level
+    # generation relies on to stay bit-identical to per-member generation).
+    thr = threshold_u32(jax.random.uniform(jax.random.key(3), (4, 16)))
+    seeds = lane_seeds(jnp.uint32(2), jnp.arange(4, dtype=jnp.uint32))
+    full = sng_words(seeds, thr, 8)
+    solo = sng_words(seeds[2:3], thr[2:3], 8)
+    assert (full[2] == solo[0]).all()
+
+
+def test_sng_words_shared_lane_shares_uniforms():
+    # Equal row seeds (one correlation group) => streams are threshold-nested:
+    # wherever the lower-threshold row has a 1, the higher-threshold row must.
+    thr = jnp.stack([threshold_u32(jnp.full((64,), 0.3, jnp.float32)),
+                     threshold_u32(jnp.full((64,), 0.7, jnp.float32))])
+    seeds = lane_seeds(jnp.uint32(4), jnp.zeros((2,), jnp.uint32))
+    w = sng_words(seeds, thr, 8)
+    assert (w[0] & ~w[1]).sum() == 0
 
 
 # ----------------------------- packed logic --------------------------------------
@@ -144,6 +187,10 @@ def test_ops_dispatch_paths_agree():
             == ops.sc_matmul(a, w, 64, use_pallas=False)).all()
     p = jax.random.uniform(jax.random.key(7), (50,))
     assert (ops.sng(p, 64, use_pallas=True) == ops.sng(p, 64, use_pallas=False)).all()
+    thr = threshold_u32(jax.random.uniform(jax.random.key(8), (4, 20)))
+    seeds = lane_seeds(jnp.uint32(3), jnp.arange(4, dtype=jnp.uint32))
+    assert (ops.sng_table(seeds, thr, 64, use_pallas=True)
+            == ops.sng_table(seeds, thr, 64, use_pallas=False)).all()
     words = jax.random.bits(KEY, (16, 8), dtype=jnp.uint32)
     assert (ops.stob_counts(words, use_pallas=True)
             == ops.stob_counts(words, use_pallas=False)).all()

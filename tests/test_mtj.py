@@ -1,5 +1,4 @@
 """MTJ stochastic-switching model tests (paper Eqs. (1)-(2), Fig. 3, Table 1)."""
-import math
 
 import numpy as np
 import pytest

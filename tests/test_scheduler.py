@@ -10,7 +10,7 @@ Key paper anchors:
 import pytest
 
 from repro.core import circuits
-from repro.core.gates import ALL_ROWS, Netlist, PIKind
+from repro.core.gates import Netlist, PIKind
 from repro.core.scheduler import input_init_cycles, schedule
 
 

@@ -1,0 +1,424 @@
+"""Batched stream generation (stream tables) + plan-level CSE/BUFF/XOR passes.
+
+Pins the PR's two contracts:
+
+  * ``key_mode="legacy"`` reproduces the pre-batching outputs bit-exactly
+    (hand-rolled per-PI key splits as the oracle), and ``key_mode="batched"``
+    is statistically equivalent, bit-identical across backends, and
+    bit-identical between merged bank execution and looped execution.
+  * The structural plan passes (BUFF elision, CSE, XOR fusion) reduce pass
+    counts while staying exact stream identities.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import apps, bitstream as bs, circuits, executor
+from repro.core.appnet import APP_NETLISTS
+from repro.core.gates import Netlist, PIKind
+from repro.core.plan import build_stream_table, cache_info, compile_plan
+
+KEY = jax.random.key(11)
+BL = 4096
+TOL = 4.0 / np.sqrt(BL)
+
+
+def val(words):
+    return float(bs.to_value(words, BL))
+
+
+# ----------------------------- generate_batch -------------------------------------
+
+def test_generate_batch_means_within_ci():
+    p = jnp.asarray([0.0, 0.05, 0.3, 0.5, 0.77, 0.95, 1.0], jnp.float32)
+    words = bs.generate_batch(KEY, p[:, None], BL)          # (7, 1, W)
+    got = np.asarray(bs.to_value(words, BL))[:, 0]
+    np.testing.assert_allclose(got, np.asarray(p), atol=TOL)
+    assert got[0] == 0.0
+    assert got[-1] >= 1.0 - 2.0 / BL
+
+
+def test_generate_batch_batched_values():
+    p = jnp.stack([jnp.linspace(0.1, 0.9, 8), jnp.full((8,), 0.4)]).astype(jnp.float32)
+    words = bs.generate_batch(jax.random.key(1), p, BL)     # (2, 8, W)
+    np.testing.assert_allclose(np.asarray(bs.to_value(words, BL)),
+                               np.asarray(p), atol=TOL)
+
+
+def test_generate_batch_corr_lane_decodes_exact_abs_difference():
+    # Rows sharing a key lane share uniforms: XOR decodes |a-b| EXACTLY
+    # (as decoded values, not just in expectation).
+    ps = jnp.asarray([0.8, 0.3], jnp.float32)
+    a, b = bs.generate_batch(jax.random.key(2), ps, BL,
+                             lanes=jnp.zeros((2,), jnp.uint32))
+    assert val(a ^ b) == abs(val(a) - val(b))
+    assert abs(val(a ^ b) - 0.5) < TOL
+
+
+def test_generate_batch_distinct_lanes_are_independent():
+    ps = jnp.asarray([0.5, 0.5], jnp.float32)
+    a, b = bs.generate_batch(jax.random.key(3), ps, BL)
+    # Independent fair streams: XOR value ~ 2*p*(1-p) = 0.5, AND ~ 0.25.
+    assert abs(val(a ^ b) - 0.5) < TOL
+    assert abs(val(a & b) - 0.25) < TOL
+
+
+def test_generate_batch_pallas_is_bit_identical():
+    ps = jnp.asarray([[0.2], [0.9], [0.5]], jnp.float32)
+    a = bs.generate_batch(jax.random.key(4), ps, 512, use_pallas=False)
+    b = bs.generate_batch(jax.random.key(4), ps, 512, use_pallas=True)
+    assert (a == b).all()
+
+
+def test_generate_correlated_deloop_still_exact():
+    # The de-looped (stacked-threshold) generate_correlated keeps the exact
+    # |a-b| XOR identity of the legacy loop.
+    a, b = bs.generate_correlated(jax.random.key(5),
+                                  [jnp.float32(0.9), jnp.float32(0.25)], BL)
+    assert val(a ^ b) == abs(val(a) - val(b))
+
+
+def test_generate_batch_refuses_counter_wrap():
+    # uint32 bit counters cap one call at 2^32 bits per row; wrapping would
+    # silently correlate far-apart batch elements, so the generator raises.
+    from repro.kernels.sng import sng_words
+    seeds = jnp.zeros((1,), jnp.uint32)
+    thr = jnp.zeros((1, (1 << 32) // 1024 + 1), jnp.uint32)
+    with pytest.raises(ValueError, match="counter space"):
+        sng_words(seeds, thr, 1024 // 32)
+
+
+# ----------------------------- stream tables --------------------------------------
+
+def test_stream_table_layout_groups_then_singles():
+    net = circuits.sc_abs_sub()           # corr group g0: A, B
+    t = compile_plan(net).stream_table
+    assert t.names == ("A", "B") and t.lanes == (0, 0) and t.n_groups == 1
+    net = circuits.sc_sqrt()              # 4 singles, declaration order
+    t = compile_plan(net).stream_table
+    assert t.names == ("A1", "A2", "C1", "C2")
+    assert t.lanes == (0, 1, 2, 3)
+    assert t.const_values[2:] == (circuits.SQRT_C, circuits.SQRT_C)
+
+
+def test_stream_table_excludes_state_pis():
+    t = compile_plan(circuits.sc_scaled_div()).stream_table
+    assert t.names == ("A", "B")
+
+
+def test_stream_table_mixed_groups_and_singles_lanes():
+    net = Netlist("mix")
+    net.add_pi("X", value_key="x")
+    net.add_pi("A", value_key="a", corr_group="g")
+    net.add_pi("B", value_key="b", corr_group="g")
+    net.add_gate("NAND", ["A", "B"], "n")
+    net.add_gate("NAND", ["X", "n"], "out")
+    net.set_outputs(["out"])
+    t = build_stream_table(net.pis)
+    # group lanes first (sorted group names), then singles.
+    assert t.names == ("A", "B", "X")
+    assert t.lanes == (0, 0, 1)
+
+
+# -------------------------- key_mode="legacy" pinning -----------------------------
+
+def legacy_streams(net, values, key, bl):
+    """Hand-rolled oracle for the legacy key discipline: one split per
+    sorted correlation group, then one per single PI in declaration order."""
+    shape = jnp.broadcast_shapes(*[jnp.shape(jnp.asarray(v))
+                                   for v in values.values()]) if values else ()
+    groups, singles = {}, []
+    for pi in net.pis:
+        if pi.kind == PIKind.STATE:
+            continue
+        if pi.corr_group is not None:
+            groups.setdefault(pi.corr_group, []).append(pi)
+        else:
+            singles.append(pi)
+    keys = jax.random.split(key, max(len(groups) + len(singles), 1))
+    streams, ki = {}, 0
+    for _, gpis in sorted(groups.items()):
+        vals = [jnp.broadcast_to(jnp.asarray(
+            values[pi.value_key] if pi.value_key else pi.const_value,
+            jnp.float32), shape) for pi in gpis]
+        for pi, o in zip(gpis, bs.generate_correlated(keys[ki], vals, bl)):
+            streams[pi.name] = o
+        ki += 1
+    for pi in singles:
+        v = values[pi.value_key] if pi.value_key is not None else pi.const_value
+        streams[pi.name] = bs.generate(
+            keys[ki], jnp.broadcast_to(jnp.asarray(v, jnp.float32), shape), bl)
+        ki += 1
+    return streams
+
+
+@pytest.mark.parametrize("builder,values", [
+    (circuits.sc_multiply, {"a": 0.3, "b": 0.7}),
+    (circuits.sc_abs_sub, {"a": 0.4, "b": 0.1}),
+    (circuits.sc_sqrt, {"a": 0.5}),
+])
+def test_key_mode_legacy_is_bit_exact(builder, values):
+    # Legacy-mode execution == reference gate math over the hand-rolled
+    # legacy streams: the pre-batching behavior, pinned bit for bit.
+    net = builder()
+    values = {k: jnp.float32(v) for k, v in values.items()}
+    env = legacy_streams(net, values, KEY, 512)
+    for g in net.gates:
+        env[g.output] = bs.GATE_FNS[g.gtype](*[env[i] for i in g.inputs])
+    for backend in ("compiled", "reference"):
+        got = executor.execute(net, values, KEY, 512, backend=backend,
+                               key_mode="legacy")
+        for o in net.outputs:
+            assert (got[o] == env[o]).all(), f"{net.name}:{o} ({backend})"
+
+
+def test_key_mode_legacy_many_matches_loop():
+    nets = [circuits.sc_multiply(), circuits.sc_abs_sub(),
+            circuits.sc_scaled_div()]
+    values = [{"a": jnp.float32(0.3), "b": jnp.float32(0.7)},
+              {"a": jnp.float32(0.9), "b": jnp.float32(0.2)},
+              {"a": jnp.float32(0.4), "b": jnp.float32(0.5)}]
+    keys = jax.random.split(KEY, 3)
+    merged = executor.execute_many(nets, values, keys, 512, key_mode="legacy")
+    for i, (net, vals) in enumerate(zip(nets, values)):
+        ref = executor.execute(net, vals, keys[i], 512, key_mode="legacy")
+        for o in ref:
+            assert (merged[i][o] == ref[o]).all()
+
+
+def test_key_mode_rejected_when_unknown():
+    with pytest.raises(ValueError, match="key_mode"):
+        executor.execute(circuits.sc_multiply(),
+                         {"a": jnp.float32(0.5), "b": jnp.float32(0.5)},
+                         KEY, 256, key_mode="banana")
+
+
+# --------------------------- batched-mode semantics -------------------------------
+
+def test_batched_mode_statistics_and_correlation():
+    out = executor.execute_value(circuits.sc_multiply(),
+                                 {"a": jnp.float32(0.6), "b": jnp.float32(0.5)},
+                                 KEY, BL)
+    assert abs(float(out["out"]) - 0.3) < 5 / np.sqrt(BL)
+    out = executor.execute_value(circuits.sc_abs_sub(),
+                                 {"a": jnp.float32(0.85), "b": jnp.float32(0.2)},
+                                 KEY, BL)
+    assert abs(float(out["out"]) - 0.65) < 5 / np.sqrt(BL)
+    # Independent copies stay independent under batched lanes: E[a1*a2] = a^2.
+    out = executor.execute_value(circuits.sc_sqrt(),
+                                 {"a": jnp.float32(0.5)}, KEY, BL)
+    expect = 2 * circuits.SQRT_C * 0.5 - (circuits.SQRT_C * 0.5) ** 2
+    assert abs(float(out["out"]) - expect) < 5 / np.sqrt(BL)
+
+
+def test_batched_mode_appnet_kde_corr_groups():
+    # KDE leans on correlation groups (per-factor |x-h| XOR pairs) — the
+    # batched table must keep each pair co-laned.
+    hist = np.linspace(0.2, 0.8, 8)
+    out = apps.appnet_stochastic("kde", jax.random.key(9), bl=2048,
+                                 x_t=0.5, hist=hist)
+    exact = apps.kde_exact(np.asarray(0.5), hist)
+    got = float(next(iter(out.values())))
+    assert abs(got - float(exact)) < 0.1
+
+
+def test_batch_shape_generates_batched_const_only_streams():
+    # Regression: a netlist whose stream PIs are all const-valued used to
+    # fall back to scalar shape () even when downstream use is batched.
+    net = Netlist("const_only")
+    net.add_pi("C", kind=PIKind.CONSTANT, const_value=0.5)
+    net.add_pi("D", kind=PIKind.CONSTANT, const_value=0.25)
+    net.add_gate("NAND", ["C", "D"], "out")
+    net.set_outputs(["out"])
+    for mode in ("batched", "legacy"):
+        out = executor.execute(net, {}, KEY, 512, key_mode=mode,
+                               batch_shape=(4,))
+        assert out["out"].shape == (4, 512 // 32)
+        # Without the declaration the legacy fallback shape was scalar.
+        out = executor.execute(net, {}, KEY, 512, key_mode=mode)
+        assert out["out"].shape == (512 // 32,)
+
+
+def test_batch_shape_broadcasts_against_values():
+    net = circuits.sc_multiply()
+    out = executor.execute(net, {"a": jnp.float32(0.5), "b": jnp.float32(0.5)},
+                           KEY, 512, batch_shape=(3,))
+    assert out["out"].shape == (3, 512 // 32)
+
+
+def test_batch_shapes_in_bank_matches_loop():
+    nets = [circuits.sc_multiply(), circuits.sc_multiply()]
+    values = [{"a": jnp.float32(0.3), "b": jnp.float32(0.7)},
+              {"a": jnp.float32(0.6), "b": jnp.float32(0.2)}]
+    keys = jax.random.split(KEY, 2)
+    merged = executor.execute_many(nets, values, keys, 512,
+                                   batch_shapes=[(4,), None])
+    for i, shape in enumerate([(4, 16), (16,)]):
+        assert merged[i]["out"].shape == shape
+        ref = executor.execute(nets[i], values[i], keys[i], 512,
+                               batch_shape=(4,) if i == 0 else None)
+        assert (merged[i]["out"] == ref["out"]).all()
+
+
+# ------------------------- plan-level structural passes ---------------------------
+
+def test_xor_fusion_collapses_abs_sub_to_one_pass():
+    plan = compile_plan(circuits.sc_abs_sub())
+    assert plan.n_passes == 1
+    assert plan.levels[0][0].op == "XOR"
+    assert plan.n_fused_xor == 1
+
+
+def test_xor_fusion_blocked_by_observable_intermediate():
+    net = Netlist("xor_obs")
+    a = net.add_pi("A", value_key="a")
+    b = net.add_pi("B", value_key="b")
+    n1 = net.add_gate("NAND", [a, b], "n1")
+    n2 = net.add_gate("NAND", [a, n1], "n2")
+    n3 = net.add_gate("NAND", [b, n1], "n3")
+    net.add_gate("NAND", [n2, n3], "out")
+    net.set_outputs(["out", "n1"])        # n1 observable -> no fusion
+    plan = compile_plan(net)
+    assert plan.n_fused_xor == 0
+    vals = {"a": jnp.float32(0.7), "b": jnp.float32(0.2)}
+    ref = executor.execute(net, vals, KEY, 512, backend="reference")
+    cmp = executor.execute(net, vals, KEY, 512)
+    for o in ref:
+        assert (ref[o] == cmp[o]).all()
+
+
+def test_fusion_respects_alias_resolved_protection():
+    # Regression: an elided observable node (BUFF of a fusion-absorbable
+    # intermediate as a primary output) makes its SURVIVOR observable; the
+    # pattern matchers must not absorb it, or re-exposing the alias crashes.
+    net = Netlist("xor_tapped")
+    a = net.add_pi("A", value_key="a")
+    b = net.add_pi("B", value_key="b")
+    n1 = net.add_gate("NAND", [a, b], "n1")
+    n2 = net.add_gate("NAND", [a, n1], "n2")
+    n3 = net.add_gate("NAND", [b, n1], "n3")
+    net.add_gate("NAND", [n2, n3], "out")
+    net.add_gate("BUFF", [n1], "tap")
+    net.set_outputs(["out", "tap"])
+    plan = compile_plan(net)
+    assert plan.n_fused_xor == 0          # n1 observable through the tap
+    assert ("tap", "n1") in plan.aliases
+    vals = {"a": jnp.float32(0.6), "b": jnp.float32(0.2)}
+    ref = executor.execute(net, vals, KEY, 512, backend="reference")
+    cmp = executor.execute(net, vals, KEY, 512)
+    assert set(cmp) == {"out", "tap"}
+    for o in ref:
+        assert (ref[o] == cmp[o]).all()
+
+
+def test_unobserved_cse_duplicate_does_not_block_or_break_fusion():
+    # Regression: a dangling CSE duplicate of a MUX feeder left an alias to
+    # a node fusion then absorbed, crashing execution (KeyError).  The alias
+    # is not observable, so it must be dropped and fusion must proceed.
+    net = Netlist("dangling_dup")
+    a = net.add_pi("A", value_key="a")
+    b = net.add_pi("B", value_key="b")
+    s = net.add_pi("S", value_key="s")
+    ns = net.add_gate("NOT", [s], "ns")
+    g1 = net.add_gate("NAND", [a, s], "g1")
+    g2 = net.add_gate("NAND", [b, ns], "g2")
+    net.add_gate("NAND", [g1, g2], "out")
+    net.add_gate("NAND", [s, a], "dup")   # unused commutative duplicate of g1
+    net.set_outputs(["out"])
+    plan = compile_plan(net)
+    assert plan.n_cse_elided == 1
+    assert plan.aliases == ()             # dup unobservable -> no alias kept
+    assert plan.n_fused_mux == 1          # fusion proceeds over the survivor
+    vals = {"a": jnp.float32(0.3), "b": jnp.float32(0.6), "s": jnp.float32(0.5)}
+    ref = executor.execute(net, vals, KEY, 512, backend="reference")
+    cmp = executor.execute(net, vals, KEY, 512)
+    for o in ref:
+        assert (ref[o] == cmp[o]).all()
+
+
+def test_cse_dedupes_identical_gates_and_keeps_outputs_observable():
+    net = Netlist("dup")
+    a = net.add_pi("A", value_key="a")
+    b = net.add_pi("B", value_key="b")
+    net.add_gate("NAND", [a, b], "n1")
+    net.add_gate("NAND", [b, a], "n2")    # commutative duplicate
+    net.add_gate("NOT", ["n1"], "o1")
+    net.add_gate("NOT", ["n2"], "o2")     # becomes duplicate after CSE of n2
+    net.set_outputs(["o1", "o2", "n2"])
+    plan = compile_plan(net)
+    assert plan.n_cse_elided == 2         # n2, then o2 transitively
+    assert plan.n_passes == 2             # one NAND pass + one NOT pass
+    assert ("n2", "n1") in plan.aliases and ("o2", "o1") in plan.aliases
+    vals = {"a": jnp.float32(0.4), "b": jnp.float32(0.6)}
+    ref = executor.execute(net, vals, KEY, 512, backend="reference")
+    cmp = executor.execute(net, vals, KEY, 512)
+    assert set(cmp) == {"o1", "o2", "n2"}
+    for o in ref:
+        assert (ref[o] == cmp[o]).all()
+
+
+def test_buff_elision_drops_copies_and_aliases_outputs():
+    net = Netlist("buffy")
+    a = net.add_pi("A", value_key="a")
+    net.add_gate("BUFF", [a], "c1")
+    net.add_gate("BUFF", ["c1"], "c2")    # chain resolves to A
+    net.add_gate("NOT", ["c2"], "out")
+    net.set_outputs(["out", "c2"])        # elided BUFF is itself an output
+    plan = compile_plan(net)
+    assert plan.n_buff_elided == 2
+    assert plan.n_passes == 1
+    assert ("c2", "A") in plan.aliases
+    vals = {"a": jnp.float32(0.3)}
+    ref = executor.execute(net, vals, KEY, 512, backend="reference")
+    cmp = executor.execute(net, vals, KEY, 512)
+    for o in ref:
+        assert (ref[o] == cmp[o]).all()
+
+
+def test_opt_passes_disabled_for_fault_injection_plans():
+    net = circuits.sc_abs_sub()
+    plan = compile_plan(net, fuse_mux=False)
+    assert plan.n_fused_xor == plan.n_cse_elided == plan.n_buff_elided == 0
+    assert plan.aliases == ()
+    # And injected runs stay bit-identical to the reference interpreter.
+    vals = {"a": jnp.float32(0.4), "b": jnp.float32(0.1)}
+    kw = dict(bitflip_rate=0.1, flip_key=jax.random.key(13))
+    ref = executor.execute(net, vals, KEY, 512, backend="reference", **kw)
+    cmp = executor.execute(net, vals, KEY, 512, **kw)
+    for o in ref:
+        assert (ref[o] == cmp[o]).all()
+
+
+def test_opt_passes_value_identical_on_table_netlists():
+    # The acceptance sweep: every Table-2 / Table-3 stage circuit and appnet
+    # executes bit-identically (reference vs optimized compiled plan), and
+    # XOR-bearing netlists get fewer passes than gates surviving elision.
+    cases = [
+        (circuits.sc_multiply(), {"a": 0.3, "b": 0.7}),
+        (circuits.sc_scaled_add(), {"a": 0.2, "b": 0.9}),
+        (circuits.sc_abs_sub(), {"a": 0.4, "b": 0.1}),
+        (circuits.sc_sqrt(), {"a": 0.5}),
+        (circuits.sc_exp(), {"a": 0.5}),
+        (circuits.sc_scaled_div(), {"a": 0.4, "b": 0.4}),
+        (APP_NETLISTS["lit"](), {f"a{i}": 0.5 for i in range(81)}),
+        (APP_NETLISTS["ol"](), {f"p{r}_{j}": 0.9 for r in range(16)
+                                for j in range(6)}),
+    ]
+    for net, values in cases:
+        values = {k: jnp.float32(v) for k, v in values.items()}
+        ref = executor.execute(net, values, KEY, 256, backend="reference")
+        cmp = executor.execute(net, values, KEY, 256)
+        for o in ref:
+            assert (ref[o] == cmp[o]).all(), f"{net.name}:{o}"
+    lit = compile_plan(APP_NETLISTS["lit"]())
+    assert lit.n_fused_xor >= 1 and lit.n_buff_elided >= 1
+    kde = compile_plan(APP_NETLISTS["kde"]())
+    assert kde.n_fused_xor >= 8 and kde.n_buff_elided >= 8
+
+
+def test_cache_info_reports_elision_counters():
+    info = cache_info()
+    for k in ("plans", "banks", "buff_elided", "cse_elided", "mux_fused",
+              "xor_fused"):
+        assert k in info

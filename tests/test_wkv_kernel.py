@@ -3,7 +3,6 @@ sequential recurrence — the ground truth the chunked algebra must equal."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st
 
 from repro.kernels.ref_wkv import wkv_ref
@@ -69,7 +68,6 @@ def test_kernel_vs_ref_shape_sweep(chunk, h, hd):
 def test_matches_production_rwkv_path():
     """The models/recurrent.py chunked scan computes the same WKV values
     (pre-groupnorm) — cross-validate via identical per-step math."""
-    from repro.models import recurrent as rec
     r, k, v, lw, u = _inputs(jax.random.key(3), 1, 64, 2, 16)
     got = wkv(r, k, v, lw, u, chunk=32, interpret=True)
     want = brute_force(r, k, v, lw, u)
