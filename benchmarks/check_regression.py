@@ -33,6 +33,10 @@ PAIRS = [
     ("BENCH_plan_exec_smoke.json", "BENCH_plan_exec.json", 0.4),
     ("BENCH_bank_plan_smoke.json", "BENCH_bank_plan.json", 0.4),
     ("BENCH_sng_smoke.json", "BENCH_sng.json", 0.25),
+    # The serve record's cold baseline is compile-time-dominated and the
+    # smoke trace is 4X smaller, so only an order-of-magnitude collapse of
+    # the bucketing win should warn.
+    ("BENCH_serve_smoke.json", "BENCH_serve.json", 0.05),
 ]
 
 

@@ -31,8 +31,8 @@ def main(argv=None):
 
     t0 = time.time()
     from . import (bank_plan_bench, fig10_energy, fig11_lifetime,
-                   plan_exec_bench, sc_matmul_bench, sng_bench, table2_arith,
-                   table3_apps, table4_bitflip)
+                   plan_exec_bench, sc_matmul_bench, serve_bench, sng_bench,
+                   table2_arith, table3_apps, table4_bitflip)
 
     print("=" * 72)
     print("Stoch-IMC reproduction benchmarks (paper: 10.1016/j.aeue.2024.155614)")
@@ -48,11 +48,13 @@ def main(argv=None):
     mm = sc_matmul_bench.run(smoke=args.smoke)
     pe = plan_exec_bench.run(smoke=args.smoke)
     sg = sng_bench.run(smoke=args.smoke)
-    # Smoke runs skip the bank bench: CI exercises it as its own step
-    # (`python -m benchmarks.bank_plan_bench --smoke`), which writes
-    # BENCH_bank_plan_smoke.json — running it here too would just repeat
-    # the jit-compile + timing cost to overwrite the same file.
+    # Smoke runs skip the bank and serve benches: CI exercises them as their
+    # own steps (`python -m benchmarks.bank_plan_bench --smoke` /
+    # `python -m benchmarks.serve_bench --smoke`), which write the
+    # BENCH_*_smoke.json records — running them here too would just repeat
+    # the jit-compile + timing cost to overwrite the same files.
     bp = None if args.smoke else bank_plan_bench.run()
+    sv = None if args.smoke else serve_bench.run()
 
     with open(args.bench_out, "w") as f:
         json.dump(pe, f, indent=2)
@@ -62,8 +64,12 @@ def main(argv=None):
     if bp is not None:
         with open("BENCH_bank_plan.json", "w") as f:
             json.dump(bp, f, indent=2)
+    if sv is not None:
+        with open("BENCH_serve.json", "w") as f:
+            json.dump(sv, f, indent=2)
     print(f"\nwrote {args.bench_out} and {sng_out}"
-          + ("" if bp is None else " and BENCH_bank_plan.json"))
+          + ("" if bp is None else " and BENCH_bank_plan.json")
+          + ("" if sv is None else " and BENCH_serve.json"))
 
     s = t3["summary"]
     print("\n" + "=" * 72)
@@ -102,6 +108,11 @@ def main(argv=None):
             ("Batched SNG speedup vs per-PI loop",
              f"{sg['speedup']:.1f}X", ">=3X (target)",
              sg["speedup"] >= 3.0))
+        checks.append(
+            ("Serve engine vs cold-recompile many",
+             f"{sv['speedup_vs_cold']:.1f}X", ">=2X (target)",
+             sv["speedup_vs_cold"] >= 2.0
+             and sv["server"]["bucket_hit_rate"] >= 0.9))
     ok = True
     for name, got, paper, passed in checks:
         mark = "PASS" if passed else "FAIL"

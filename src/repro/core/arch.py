@@ -222,23 +222,39 @@ def evaluate_sc_cram(net: Netlist, sch_1lane: Schedule, cfg: StochIMCConfig,
 
 @dataclasses.dataclass(frozen=True)
 class BankPlanCost:
-    """Cycle accounting for a bank-merged plan vs a per-member dispatch loop."""
+    """Cycle accounting for a bank-merged plan vs a per-member dispatch loop.
+
+    For padded bank templates (``plan.compile_bank_template``), the active-vs-
+    padded split keeps the model honest: ``active_passes`` is what a bank
+    merging exactly the bound members would execute, and the padding overhead
+    fields price the extra passes the padded slots drag along.
+    """
 
     n_members: int
-    merged_passes: int           # fused passes of the merged plan
-    looped_passes: int           # sum of per-member plan passes
+    merged_passes: int           # fused passes of the merged (padded) plan
+    looped_passes: int           # sum of active members' own plan passes
     pipeline_factor: int         # sequential bank passes to cover BL lanes
     accumulation_cycles: int     # n + m hierarchical StoB steps
     merged_cycles: int
     looped_cycles: int
+    active_members: int = -1     # bound slots (excl. padding / identity)
+    active_passes: int = -1      # passes of an exact-fit merged bank
+    padding_overhead_passes: int = 0
+    padding_overhead_cycles: int = 0
 
     @property
     def simd_speedup(self) -> float:
         return self.looped_cycles / max(self.merged_cycles, 1)
 
+    @property
+    def padding_overhead_frac(self) -> float:
+        """Fraction of merged bank cycles spent on padded-slot passes."""
+        return self.padding_overhead_cycles / max(self.merged_cycles, 1)
+
 
 def evaluate_bank_plan(bank, cfg: StochIMCConfig,
-                       q_lanes: int | None = None) -> BankPlanCost:
+                       q_lanes: int | None = None,
+                       active=None) -> BankPlanCost:
     """Map merged-plan pass counts onto the [n, m] bank model (Fig. 8).
 
     ``bank`` is a ``core.plan.BankPlan``.  One fused pass = one bank cycle:
@@ -256,21 +272,44 @@ def evaluate_bank_plan(bank, cfg: StochIMCConfig,
     columns in one n + m hierarchy — this is the memory-level-parallelism gap
     the bank merging closes, and what Table-3 accounting reflects when N
     instances are served per bank.
+
+    ``active`` (per-member bools; default: every non-identity member) marks
+    the slots actually bound to requests in a padded bank template.  The
+    looped baseline loops over *active* members only, and the padding
+    overhead fields report the extra passes the padded bank executes beyond
+    an exact-fit merge of the active members — the honest cost of keeping
+    the template/jit caches warm.
     """
+    from .plan import merged_pass_count
+
     q = q_lanes if q_lanes is not None else cfg.subarray_rows
     lanes_per_pass = q * cfg.subarrays_per_bank * cfg.n_banks
     pipeline = max(1, math.ceil(cfg.bitstream_length / lanes_per_pass))
     acc = cfg.accumulation_steps()
+    if active is None:
+        active_plans = [m for m in bank.members if not m.is_identity]
+    else:
+        if len(active) != bank.n_members:
+            raise ValueError(f"active: got {len(active)} for "
+                             f"{bank.n_members} members")
+        active_plans = [m for m, a in zip(bank.members, active) if a]
+    active_passes = merged_pass_count(active_plans)
     merged = bank.n_passes * pipeline + acc
-    looped = bank.n_passes_looped * pipeline + acc * bank.n_members
+    looped = sum(m.n_passes for m in active_plans) * pipeline \
+        + acc * len(active_plans)
+    pad_passes = bank.n_passes - active_passes
     return BankPlanCost(
         n_members=bank.n_members,
         merged_passes=bank.n_passes,
-        looped_passes=bank.n_passes_looped,
+        looped_passes=sum(m.n_passes for m in active_plans),
         pipeline_factor=pipeline,
         accumulation_cycles=acc,
         merged_cycles=merged,
         looped_cycles=looped,
+        active_members=len(active_plans),
+        active_passes=active_passes,
+        padding_overhead_passes=pad_passes,
+        padding_overhead_cycles=pad_passes * pipeline,
     )
 
 

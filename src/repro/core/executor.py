@@ -360,7 +360,7 @@ def _restrict(x: jax.Array, batch: tuple[int, ...]) -> jax.Array:
 
 def _gen_bank_streams(bank: BankPlan, values_seq, keys, bitstream_length: int,
                       key_mode: str, use_pallas: bool,
-                      batch_shapes) -> list[dict[str, jax.Array]]:
+                      batch_shapes, active=None) -> list[dict[str, jax.Array]]:
     """Per-member PI streams for a whole bank (list indexed by member).
 
     Batched key mode is the paper's bulk BtoS pass bank-wide: every member's
@@ -369,11 +369,29 @@ def _gen_bank_streams(bank: BankPlan, values_seq, keys, bitstream_length: int,
     PI per member.  Each row's randomness is keyed by (member key, fixed
     key-lane index), independent of the stacking, so a merged run stays
     bit-identical to a loop of per-member ``execute`` calls in the same mode.
+
+    ``active`` (None = all) masks padded template slots: inactive members
+    contribute NO rows to the fused SNG pass — their PI streams are zero
+    words (value-0.0 constants, nearly free), just enough to keep the merged
+    logic passes well-formed.  Active members' streams are untouched by the
+    masking, so padded execution stays bit-identical per bound slot.
     """
     n = bank.n_members
     streams: list[dict[str, jax.Array]] = [{} for _ in range(n)]
+    w = bs.n_words(bitstream_length)
+
+    def masked(i: int) -> bool:
+        return active is not None and not active[i]
+
+    def zero_fill(i: int) -> dict[str, jax.Array]:
+        return {nm: jnp.zeros((w,), jnp.uint32)
+                for nm in bank.members[i].stream_table.names}
+
     if key_mode != "batched":
         for i, plan in enumerate(bank.members):
+            if masked(i):
+                streams[i] = zero_fill(i)
+                continue
             streams[i] = _gen_pi_streams(
                 plan.pis, values_seq[i], keys[i], bitstream_length,
                 key_mode=key_mode,
@@ -385,6 +403,9 @@ def _gen_bank_streams(bank: BankPlan, values_seq, keys, bitstream_length: int,
     for i, plan in enumerate(bank.members):
         table = plan.stream_table
         if not table.names:
+            continue
+        if masked(i):
+            streams[i] = zero_fill(i)
             continue
         shape = _pi_shape(values_seq[i],
                           batch_shapes[i] if batch_shapes else None)
@@ -407,25 +428,27 @@ def _gen_bank_streams(bank: BankPlan, values_seq, keys, bitstream_length: int,
 
 
 @partial(jax.jit, static_argnames=("bank", "bitstream_length", "key_mode",
-                                   "use_pallas", "batch_shapes"))
+                                   "use_pallas", "batch_shapes", "active"))
 def _generate_bank_streams_jit(bank: BankPlan, values_seq, keys,
                                bitstream_length: int, key_mode: str,
-                               use_pallas: bool, batch_shapes):
+                               use_pallas: bool, batch_shapes, active=None):
     return _gen_bank_streams(bank, values_seq, keys, bitstream_length,
-                             key_mode, use_pallas, batch_shapes)
+                             key_mode, use_pallas, batch_shapes, active=active)
 
 
 def generate_bank_streams(bank: BankPlan, values_seq, keys,
                           bitstream_length: int,
                           key_mode: str = DEFAULT_KEY_MODE,
-                          use_pallas: bool = False, batch_shapes=None):
+                          use_pallas: bool = False, batch_shapes=None,
+                          active=None):
     """Generate (only) every member's PI streams — no logic passes.
 
     The stream-generation phase of ``_execute_bank`` as its own jitted entry
     point, used by the benchmarks to split bank wall-clock into gen vs pass
     time.  Accepts the same calling convention as ``execute_many`` (``keys``
     may be one key, split N ways; ``batch_shapes`` entries may be any
-    sequence).  Returns one ``{pi_name: packed words}`` dict per member.
+    sequence; ``active`` masks padded template slots down to zero-word
+    fills).  Returns one ``{pi_name: packed words}`` dict per member.
     """
     values_seq = tuple(values_seq)
     if len(values_seq) != bank.n_members:
@@ -434,18 +457,20 @@ def generate_bank_streams(bank: BankPlan, values_seq, keys,
     keys = _normalize_keys(keys, bank.n_members)
     batch_shapes = _normalize_batch_shapes(batch_shapes, bank.n_members,
                                            "members")
+    active = _normalize_active(active, bank.n_members)
     return _generate_bank_streams_jit(bank, values_seq, keys,
                                       bitstream_length, key_mode, use_pallas,
-                                      batch_shapes)
+                                      batch_shapes, active)
 
 
 @partial(jax.jit, static_argnames=("bank", "bitstream_length", "bitflip_rate",
                                    "use_pallas", "decode", "key_mode",
-                                   "batch_shapes"))
+                                   "batch_shapes", "active"))
 def _execute_bank(bank: BankPlan, values_seq, keys, flip_keys,
                   bitstream_length: int, bitflip_rate: float,
                   use_pallas: bool, decode: bool,
-                  key_mode: str = DEFAULT_KEY_MODE, batch_shapes=None):
+                  key_mode: str = DEFAULT_KEY_MODE, batch_shapes=None,
+                  active=None):
     """Whole-bank execution of N member netlists as one XLA program.
 
     Stream generation and fault keying stay *per member*: member ``i``'s
@@ -456,6 +481,13 @@ def _execute_bank(bank: BankPlan, values_seq, keys, flip_keys,
     (cross-member type-batched levels), all sequential members through one
     merged scan — and in batched key mode the stream generation merges too
     (one fused SNG pass per distinct member batch shape).
+
+    ``active`` (static; None = all) is the padded-template slot mask: an
+    inactive slot generates no real streams (zero-word fills), skips fault
+    injection on its streams, and returns ``None`` instead of outputs.  Its
+    *gate fault-key block* is still allocated when injecting — the merged
+    plan's flat gid offsets cover every member — so active slots see exactly
+    the keys a standalone run would.
     """
     from ..kernels import netlist_exec
 
@@ -466,16 +498,18 @@ def _execute_bank(bank: BankPlan, values_seq, keys, flip_keys,
     native_batch: dict[int, tuple[int, ...]] = {}
     member_streams = _gen_bank_streams(bank, values_seq, keys,
                                        bitstream_length, key_mode, use_pallas,
-                                       batch_shapes)
+                                       batch_shapes, active=active)
     for i, plan in enumerate(bank.members):
         pre = member_prefix(i)
         streams = member_streams[i]
+        masked = active is not None and not active[i]
         tail = None
-        if bitflip_rate > 0.0:
+        if bitflip_rate > 0.0 and len(streams) + plan.n_gates > 0:
             fkeys = jax.random.split(flip_keys[i], len(streams) + plan.n_gates)
-            for j, nm in enumerate(sorted(streams)):
-                streams[nm] = sc_ops.flip_bits(fkeys[j], streams[nm],
-                                               bitflip_rate)
+            if not masked:
+                for j, nm in enumerate(sorted(streams)):
+                    streams[nm] = sc_ops.flip_bits(fkeys[j], streams[nm],
+                                                   bitflip_rate)
             tail = fkeys[len(streams):]
         native_batch[i] = (next(iter(streams.values())).shape[:-1]
                            if streams else ())
@@ -496,6 +530,8 @@ def _execute_bank(bank: BankPlan, values_seq, keys, flip_keys,
                                        bitflip_rate=bitflip_rate,
                                        use_pallas=use_pallas)
         for i in bank.comb_members:
+            if active is not None and not active[i]:
+                continue
             pre = member_prefix(i)
             outs[i] = {o: comb_env[pre + o] for o in bank.members[i].outputs}
     if bank.seq is not None:
@@ -503,6 +539,8 @@ def _execute_bank(bank: BankPlan, values_seq, keys, flip_keys,
             bank.seq, seq_words, use_pallas=use_pallas,
             n_words=bs.n_words(bitstream_length))
         for i in bank.seq_members:
+            if active is not None and not active[i]:
+                continue
             pre = member_prefix(i)
             m = {o: _restrict(packed[pre + o], native_batch[i])
                  for o in bank.members[i].outputs}
@@ -512,7 +550,8 @@ def _execute_bank(bank: BankPlan, values_seq, keys, flip_keys,
                     m[o] = sc_ops.flip_bits(tail[j], m[o], bitflip_rate)
             outs[i] = m
     if decode:
-        outs = [{o: bs.to_value(w, bitstream_length) for o, w in m.items()}
+        outs = [m if m is None else
+                {o: bs.to_value(w, bitstream_length) for o, w in m.items()}
                 for m in outs]
     return tuple(outs)
 
@@ -536,6 +575,20 @@ def _normalize_batch_shapes(batch_shapes, n: int, what: str = "netlists"):
         raise ValueError(
             f"batch_shapes: got {len(batch_shapes)} for {n} {what}")
     return batch_shapes
+
+
+def _normalize_active(active, n: int):
+    """Coerce a slot-active mask to a hashable bool tuple (jit static arg).
+
+    ``None`` and all-True both normalize to ``None`` — a fully-bound bank
+    must share its jit trace with the mask-free ``execute_many`` path.
+    """
+    if active is None:
+        return None
+    active = tuple(bool(a) for a in active)
+    if len(active) != n:
+        raise ValueError(f"active: got {len(active)} for {n} slots")
+    return None if all(active) else active
 
 
 def _normalize_keys(keys, n: int, what: str = "keys") -> jax.Array:
@@ -618,6 +671,52 @@ def execute_value_many(nets, values_seq, keys, bitstream_length: int,
     return _dispatch_many(nets, values_seq, keys, bitstream_length,
                           bitflip_rate, flip_keys, backend, decode=True,
                           key_mode=key_mode, batch_shapes=batch_shapes)
+
+
+def execute_bank(bank: BankPlan, values_seq, keys, bitstream_length: int,
+                 *, active=None, bitflip_rate: float = 0.0, flip_keys=None,
+                 backend: str | None = None, key_mode: str | None = None,
+                 batch_shapes=None, decode: bool = False) -> list:
+    """Execute a prebuilt (possibly padded) BankPlan slot-wise.
+
+    The serving-engine entry point (``repro.serve.sc_engine``): ``bank`` is
+    typically a canonical template from ``plan.compile_bank_template`` whose
+    slots outnumber the bound requests.  ``values_seq[i]`` / ``keys[i]`` /
+    ``batch_shapes[i]`` / ``flip_keys[i]`` feed slot ``i``; ``active[i] =
+    False`` masks slot ``i`` out — no streams are generated for it (zero-word
+    fills keep the merged passes well-formed), and its entry in the returned
+    list is ``None``.  Unbound slots' ``values_seq`` entries should be empty
+    dicts; their key rows are placeholders (any same-dtype key).
+
+    Every *bound* slot's outputs are bit-identical to a standalone
+    ``execute`` of that member with the same key, ``key_mode`` and flip key —
+    padding never perturbs active streams.  ``decode=True`` fuses the StoB
+    decode into the program (the ``execute_value_many`` analogue).  Bank
+    plans only execute on the compiled backends.
+    """
+    backend, key_mode = _check_modes(backend, key_mode)
+    if backend == "reference":
+        raise ValueError("execute_bank runs compiled BankPlans; use "
+                         "execute()/execute_many() for the reference backend")
+    n = bank.n_members
+    values_seq = tuple({k: _as_f32(v) for k, v in vals.items()}
+                       for vals in values_seq)
+    if len(values_seq) != n:
+        raise ValueError(f"values: got {len(values_seq)} for {n} slots")
+    keys = _normalize_keys(keys, n)
+    batch_shapes = _normalize_batch_shapes(batch_shapes, n, "slots")
+    active = _normalize_active(active, n)
+    if bitflip_rate > 0.0:
+        if flip_keys is None:
+            raise ValueError("bitflip_rate > 0 requires flip_keys")
+        flip_keys = _normalize_keys(flip_keys, n, "flip_keys")
+    else:
+        flip_keys = None
+    outs = _execute_bank(bank, values_seq, keys, flip_keys, bitstream_length,
+                         float(bitflip_rate), backend == "compiled_pallas",
+                         decode, key_mode=key_mode, batch_shapes=batch_shapes,
+                         active=active)
+    return list(outs)
 
 
 # ----------------------------- reference backend ----------------------------------

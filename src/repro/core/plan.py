@@ -40,7 +40,8 @@ pattern — hit both the plan cache and the downstream jit cache.
 from __future__ import annotations
 
 import dataclasses
-from collections import defaultdict
+import itertools
+from collections import OrderedDict, defaultdict
 
 from .gates import Netlist, PIKind, PrimaryInput
 
@@ -67,12 +68,18 @@ class CompiledOp:
     batched gate; ``outputs[i]`` its output node; ``gids[i]`` the originating
     gate id (used to key per-gate fault-injection streams).  For ``MUX3``,
     ``gids[i]`` is the id of the root NAND of the fused 4-gate group.
+
+    ``neg[j]`` complements input position ``j`` of every batched gate before
+    the base op is applied — how absorbed lone NOT gates survive inside their
+    consuming pass (``()`` means no complemented inputs).  Gates only batch
+    with same-(op, neg) peers, so the mask is pass-wide.
     """
 
     op: str
     gids: tuple[int, ...]
     inputs: tuple[tuple[str, ...], ...]   # arity x n_batched
     outputs: tuple[str, ...]
+    neg: tuple[bool, ...] = ()            # per-input complement mask
 
     @property
     def n_batched(self) -> int:
@@ -143,6 +150,10 @@ class ExecutionPlan:
     Non-observable elided nodes need no alias — every use was rewritten to
     the survivor at compile time.  ``stream_table`` is the batched SNG
     layout of the plan's PI streams (see ``StreamTable``).
+
+    ``serial`` is a process-wide monotone compile stamp: it gives plans a
+    deterministic canonical order (bank templates sort members by it) without
+    hashing structures on the serving hot path.
     """
 
     name: str
@@ -160,10 +171,19 @@ class ExecutionPlan:
     n_fused_xor: int = 0
     n_buff_elided: int = 0
     n_cse_elided: int = 0
+    n_fused_and: int = 0
+    n_not_absorbed: int = 0
+    serial: int = -1
 
     @property
     def is_sequential(self) -> bool:
         return bool(self.state_pis)
+
+    @property
+    def is_identity(self) -> bool:
+        """True for the no-op padding member (no PIs, gates, or outputs)."""
+        return (not self.pis and not self.n_gates and not self.outputs
+                and not self.state_pis)
 
     @property
     def n_passes(self) -> int:
@@ -336,6 +356,92 @@ def _find_xor_fusions(gates, protected: set[str],
     return roots
 
 
+@dataclasses.dataclass(frozen=True)
+class _WOp:
+    """Post-pattern-fusion working op (gate type or MUX3/XOR, + neg mask)."""
+
+    gid: int
+    op: str
+    inputs: tuple[str, ...]
+    neg: tuple[bool, ...]
+    output: str
+
+
+def _fold_ands(ops: "list[_WOp]", protected: set[str]) -> int:
+    """Fold ``NOT(NAND(a, b))`` pairs into one fused AND pass.
+
+    The 2T-1MTJ method has no AND primitive — stochastic multiplication is a
+    NAND feeding a NOT (two memory cycles) — but the plan level does: the
+    boolean identity ``NOT(NAND(a, b)) == AND(a, b)`` collapses the pair to
+    one pass whenever the intermediate NAND output is single-use and
+    unobservable.  The surviving op keeps the NOT's gid and output node (and
+    the NAND's neg mask, vacuously all-False at this stage).  Mutates ``ops``
+    in place; returns the number of folded pairs.
+    """
+    driver = {w.output: i for i, w in enumerate(ops)}
+    uses = _count_uses(ops)
+    dead: set[int] = set()
+    n = 0
+    for i, w in enumerate(ops):
+        if w.op != "NOT" or w.neg[0]:
+            continue
+        j = driver.get(w.inputs[0])
+        if j is None or j in dead:
+            continue
+        s = ops[j]
+        if s.op != "NAND" or uses[s.output] != 1 or s.output in protected:
+            continue
+        ops[i] = _WOp(w.gid, "AND", s.inputs, s.neg, w.output)
+        dead.add(j)
+        n += 1
+    if dead:
+        ops[:] = [w for i, w in enumerate(ops) if i not in dead]
+    return n
+
+
+def _absorb_nots(ops: "list[_WOp]", protected: set[str]) -> int:
+    """Fuse lone NOT gates into their consuming pass via the neg mask.
+
+    A NOT whose output has exactly one use and is unobservable disappears:
+    its consumer reads the NOT's *input* with the complement folded into the
+    pass (``CompiledOp.neg``) — an exact stream identity, one fewer pass.
+    Ops are visited in topological order, so NOT chains collapse step by step
+    (``NOT(NOT(x))`` absorbs to a plain ``x`` read).  Mutates ``ops`` in
+    place; returns the number of absorbed NOTs.
+    """
+    uses = _count_uses(ops)
+    consumers: dict[str, list[tuple[int, int]]] = defaultdict(list)
+    for i, w in enumerate(ops):
+        for p, nm in enumerate(w.inputs):
+            consumers[nm].append((i, p))
+    dead: set[int] = set()
+    n = 0
+    for i, w in enumerate(ops):
+        if w.op != "NOT" or i in dead:
+            continue
+        if w.output in protected or uses[w.output] != 1:
+            continue
+        (ci, pos), = consumers[w.output]
+        if ci in dead:
+            continue
+        c = ops[ci]
+        src = w.inputs[0]
+        ins = list(c.inputs)
+        ins[pos] = src
+        neg = list(c.neg)
+        # NOT with its own neg set is a double negation: absorbing it passes
+        # the source through uncomplemented.
+        neg[pos] = neg[pos] != (not w.neg[0])
+        ops[ci] = _WOp(c.gid, c.op, tuple(ins), tuple(neg), c.output)
+        consumers[src].append((ci, pos))
+        uses[src] += 1
+        dead.add(i)
+        n += 1
+    if dead:
+        ops[:] = [w for i, w in enumerate(ops) if i not in dead]
+    return n
+
+
 # -------------------------------- compilation -------------------------------------
 
 def _signature(net: Netlist) -> tuple:
@@ -348,18 +454,64 @@ def _signature(net: Netlist) -> tuple:
     )
 
 
-_PLAN_CACHE: dict[tuple, ExecutionPlan] = {}
-_BANK_CACHE: dict[tuple, "BankPlan"] = {}
+# Both structural caches are LRU-bounded: serving traffic compiles a new
+# plan/bank per *bucket shape*, and an unbounded dict would grow with every
+# distinct member set ever seen.  Eviction only drops interning — an evicted
+# structure recompiles to a fresh (bit-identical) plan on next use — so the
+# caps trade recompiles for memory, never correctness.
+_PLAN_CACHE: "OrderedDict[tuple, ExecutionPlan]" = OrderedDict()
+_BANK_CACHE: "OrderedDict[tuple, BankPlan]" = OrderedDict()
+_CACHE_CAPS = {"plans": 1024, "banks": 256}
+_EVICTIONS = {"plan_evictions": 0, "bank_evictions": 0}
 # Cumulative optimizer counters across cache-missing compiles (reported by
 # cache_info so perf work can see how many nodes the structural passes
 # removed, and reset by clear_cache).
 _OPT_COUNTS = {"buff_elided": 0, "cse_elided": 0, "mux_fused": 0,
-               "xor_fused": 0}
+               "xor_fused": 0, "and_fused": 0, "not_absorbed": 0}
+# Monotone compile stamp for ExecutionPlan.serial.
+_SERIAL = itertools.count()
+
+
+def _cache_get(cache: OrderedDict, key):
+    hit = cache.get(key)
+    if hit is not None:
+        cache.move_to_end(key)
+    return hit
+
+
+def _cache_put(cache: OrderedDict, key, value, cap_key: str,
+               evict_key: str) -> None:
+    cache[key] = value
+    cache.move_to_end(key)
+    while len(cache) > _CACHE_CAPS[cap_key]:
+        cache.popitem(last=False)
+        _EVICTIONS[evict_key] += 1
+
+
+def set_cache_caps(plans: int | None = None,
+                   banks: int | None = None) -> dict[str, int]:
+    """Set the LRU caps (entries) of the plan/bank caches; returns the caps.
+
+    Shrinking a cap evicts least-recently-used entries immediately (counted
+    in ``cache_info()['plan_evictions'/'bank_evictions']``).
+    """
+    if plans is not None:
+        _CACHE_CAPS["plans"] = int(plans)
+        while len(_PLAN_CACHE) > _CACHE_CAPS["plans"]:
+            _PLAN_CACHE.popitem(last=False)
+            _EVICTIONS["plan_evictions"] += 1
+    if banks is not None:
+        _CACHE_CAPS["banks"] = int(banks)
+        while len(_BANK_CACHE) > _CACHE_CAPS["banks"]:
+            _BANK_CACHE.popitem(last=False)
+            _EVICTIONS["bank_evictions"] += 1
+    return dict(_CACHE_CAPS)
 
 
 def cache_info() -> dict[str, int]:
     return {"plans": len(_PLAN_CACHE), "banks": len(_BANK_CACHE),
-            **_OPT_COUNTS}
+            "plan_cap": _CACHE_CAPS["plans"], "bank_cap": _CACHE_CAPS["banks"],
+            **_EVICTIONS, **_OPT_COUNTS}
 
 
 def clear_cache() -> None:
@@ -367,6 +519,8 @@ def clear_cache() -> None:
     _BANK_CACHE.clear()
     for k in _OPT_COUNTS:
         _OPT_COUNTS[k] = 0
+    for k in _EVICTIONS:
+        _EVICTIONS[k] = 0
 
 
 def compile_plan(net: Netlist, fuse_mux: bool = True) -> ExecutionPlan:
@@ -400,7 +554,7 @@ def compile_plan(net: Netlist, fuse_mux: bool = True) -> ExecutionPlan:
         del memo[k]
 
     key = (_signature(net), fuse_mux)
-    cached = _PLAN_CACHE.get(key)
+    cached = _cache_get(_PLAN_CACHE, key)
     if cached is not None:
         memo[memo_key] = cached
         return cached
@@ -429,15 +583,12 @@ def compile_plan(net: Netlist, fuse_mux: bool = True) -> ExecutionPlan:
         gates = [_WGate(g.gid, g.gtype, g.inputs, g.output) for g in net.gates]
         alias, n_buff, n_cse = {}, 0, 0
         mux_roots, dead, xor_roots = {}, set(), {}
-    _OPT_COUNTS["buff_elided"] += n_buff
-    _OPT_COUNTS["cse_elided"] += n_cse
-    _OPT_COUNTS["mux_fused"] += len(mux_roots)
-    _OPT_COUNTS["xor_fused"] += len(xor_roots)
 
-    # Longest-path leveling over the optimized op graph (PIs at level 0).
-    level: dict[str, int] = {p.name: 0 for p in net.pis}
-    by_level: dict[int, dict[str, list[tuple[int, tuple[str, ...], str]]]] = \
-        defaultdict(lambda: defaultdict(list))
+    # Materialize the post-pattern-fusion op list, then run the NOT-directed
+    # cleanups on it: AND folding (NOT(NAND) pairs) and lone-NOT absorption
+    # into consuming passes.  Both run after the 4-gate matchers so the
+    # NOT-bearing MUX/XOR forms are recognized first.
+    ops: list[_WOp] = []
     for g in gates:
         if g.gid in dead:
             continue
@@ -447,22 +598,44 @@ def compile_plan(net: Netlist, fuse_mux: bool = True) -> ExecutionPlan:
             op, ins = FUSED_XOR, xor_roots[g.gid]
         else:
             op, ins = g.gtype, g.inputs
-        lvl = 1 + max(level[i] for i in ins)
-        level[g.output] = lvl
-        by_level[lvl][op].append((g.gid, ins, g.output))
+        ops.append(_WOp(g.gid, op, tuple(ins), (False,) * len(ins), g.output))
+    if fuse_mux:
+        n_and = _fold_ands(ops, protected)
+        n_not = _absorb_nots(ops, protected)
+    else:
+        n_and = n_not = 0
+    _OPT_COUNTS["buff_elided"] += n_buff
+    _OPT_COUNTS["cse_elided"] += n_cse
+    _OPT_COUNTS["mux_fused"] += len(mux_roots)
+    _OPT_COUNTS["xor_fused"] += len(xor_roots)
+    _OPT_COUNTS["and_fused"] += n_and
+    _OPT_COUNTS["not_absorbed"] += n_not
+
+    # Longest-path leveling over the optimized op graph (PIs at level 0).
+    # Ops batch within a level by (op, neg) — a complemented-input variant is
+    # its own pass.
+    level: dict[str, int] = {p.name: 0 for p in net.pis}
+    by_level: dict[int, dict[tuple, list[tuple[int, tuple[str, ...], str]]]] = \
+        defaultdict(lambda: defaultdict(list))
+    for w in ops:
+        lvl = 1 + max(level[i] for i in w.inputs)
+        level[w.output] = lvl
+        neg = w.neg if any(w.neg) else ()
+        by_level[lvl][(w.op, neg)].append((w.gid, w.inputs, w.output))
 
     levels = []
     for lvl in sorted(by_level):
-        ops = []
-        for op, entries in by_level[lvl].items():
+        lvl_ops = []
+        for (op, neg), entries in by_level[lvl].items():
             arity = len(entries[0][1])
-            ops.append(CompiledOp(
+            lvl_ops.append(CompiledOp(
                 op=op,
                 gids=tuple(e[0] for e in entries),
                 inputs=tuple(tuple(e[1][j] for e in entries) for j in range(arity)),
                 outputs=tuple(e[2] for e in entries),
+                neg=neg,
             ))
-        levels.append(tuple(ops))
+        levels.append(tuple(lvl_ops))
 
     state_items = sorted(net.state_bindings.items())
     plan = ExecutionPlan(
@@ -481,8 +654,11 @@ def compile_plan(net: Netlist, fuse_mux: bool = True) -> ExecutionPlan:
         n_fused_xor=len(xor_roots),
         n_buff_elided=n_buff,
         n_cse_elided=n_cse,
+        n_fused_and=n_and,
+        n_not_absorbed=n_not,
+        serial=next(_SERIAL),
     )
-    _PLAN_CACHE[key] = plan
+    _cache_put(_PLAN_CACHE, key, plan, "plans", "plan_evictions")
     memo[memo_key] = plan
     return plan
 
@@ -520,10 +696,19 @@ class BankPlan:
     seq: ExecutionPlan | None
     comb_members: tuple[int, ...]
     seq_members: tuple[int, ...]
+    #: Process-wide monotone build stamp (like ExecutionPlan.serial): a
+    #: stable identity token that — unlike id() — can never alias a
+    #: garbage-collected bank after cache eviction.
+    serial: int = -1
 
     @property
     def n_members(self) -> int:
         return len(self.members)
+
+    @property
+    def n_identity_members(self) -> int:
+        """Slots filled by the no-op identity padding plan."""
+        return sum(1 for m in self.members if m.is_identity)
 
     @property
     def n_passes(self) -> int:
@@ -546,9 +731,11 @@ def merge_plans(plans: "list[ExecutionPlan]", indices: "list[int]",
     Members are independent graphs, so each gate keeps its per-member level;
     merging level ``L`` across members and type-batching within it is a valid
     re-leveling of the union graph.  Gate ids are offset by the running gate
-    count so they index a flat per-merge-order fault-key array.
+    count so they index a flat per-merge-order fault-key array.  Identity
+    (padding) members contribute no nodes and are exempt from the kind check,
+    so a padded bank template can carry them in either group.
     """
-    if len({p.is_sequential for p in plans}) > 1:
+    if len({p.is_sequential for p in plans if not p.is_identity}) > 1:
         raise ValueError("merge_plans: cannot mix sequential and "
                          "combinational members in one merged plan")
     prefixes = [member_prefix(i) for i in indices]
@@ -561,14 +748,14 @@ def merge_plans(plans: "list[ExecutionPlan]", indices: "list[int]",
     n_levels = max(len(p.levels) for p in plans)
     levels = []
     for lvl in range(n_levels):
-        by_op: dict[str, list[tuple]] = {}
+        by_op: dict[tuple, list[tuple]] = {}
         for p, pre, goff in zip(plans, prefixes, offsets):
             if lvl >= len(p.levels):
                 continue
             for cop in p.levels[lvl]:
-                by_op.setdefault(cop.op, []).append((cop, pre, goff))
+                by_op.setdefault((cop.op, cop.neg), []).append((cop, pre, goff))
         ops = []
-        for op, entries in by_op.items():
+        for (op, neg), entries in by_op.items():
             arity = len(entries[0][0].inputs)
             ops.append(CompiledOp(
                 op=op,
@@ -579,6 +766,7 @@ def merge_plans(plans: "list[ExecutionPlan]", indices: "list[int]",
                              for j in range(arity)),
                 outputs=tuple(pre + o for cop, pre, _ in entries
                               for o in cop.outputs),
+                neg=neg,
             ))
         levels.append(tuple(ops))
 
@@ -603,7 +791,9 @@ def merge_plans(plans: "list[ExecutionPlan]", indices: "list[int]",
         state_drivers=tuple(pre + d for p, pre in zip(plans, prefixes)
                             for d in p.state_drivers),
         state_inits=tuple(i for p in plans for i in p.state_inits),
-        fused=any(p.fused for p in plans),
+        # Identity padding members are vacuously "fused"; only real members
+        # decide whether the merged plan admits per-gate fault injection.
+        fused=any(p.fused for p in plans if not p.is_identity),
         n_fused_mux=sum(p.n_fused_mux for p in plans),
         stream_table=build_stream_table(pis),
         aliases=tuple((pre + a, pre + b) for p, pre in zip(plans, prefixes)
@@ -611,7 +801,30 @@ def merge_plans(plans: "list[ExecutionPlan]", indices: "list[int]",
         n_fused_xor=sum(p.n_fused_xor for p in plans),
         n_buff_elided=sum(p.n_buff_elided for p in plans),
         n_cse_elided=sum(p.n_cse_elided for p in plans),
+        n_fused_and=sum(p.n_fused_and for p in plans),
+        n_not_absorbed=sum(p.n_not_absorbed for p in plans),
+        serial=next(_SERIAL),
     )
+
+
+def _build_bank(members: "tuple[ExecutionPlan, ...]", key: tuple,
+                name: str | None) -> BankPlan:
+    """Merge a member-plan tuple into a (cached) BankPlan under ``key``."""
+    cached = _cache_get(_BANK_CACHE, key)
+    if cached is not None:
+        return cached
+    comb_idx = tuple(i for i, m in enumerate(members) if not m.is_sequential)
+    seq_idx = tuple(i for i, m in enumerate(members) if m.is_sequential)
+    bank_name = name or f"bank{len(members)}"
+    comb = merge_plans([members[i] for i in comb_idx], list(comb_idx),
+                       f"{bank_name}/comb") if comb_idx else None
+    seq = merge_plans([members[i] for i in seq_idx], list(seq_idx),
+                      f"{bank_name}/seq") if seq_idx else None
+    bank = BankPlan(name=bank_name, members=members, comb=comb, seq=seq,
+                    comb_members=comb_idx, seq_members=seq_idx,
+                    serial=next(_SERIAL))
+    _cache_put(_BANK_CACHE, key, bank, "banks", "bank_evictions")
+    return bank
 
 
 def compile_bank_plan(nets: "list[Netlist]", fuse_mux: bool = True,
@@ -629,19 +842,110 @@ def compile_bank_plan(nets: "list[Netlist]", fuse_mux: bool = True,
         raise ValueError("compile_bank_plan: need at least one netlist")
     members = tuple(compile_plan(n, fuse_mux=fuse_mux or n.is_sequential)
                     for n in nets)
-    key = (members, fuse_mux)
-    cached = _BANK_CACHE.get(key)
-    if cached is not None:
-        return cached
+    return _build_bank(members, (members, fuse_mux), name)
 
-    comb_idx = tuple(i for i, m in enumerate(members) if not m.is_sequential)
-    seq_idx = tuple(i for i, m in enumerate(members) if m.is_sequential)
-    bank_name = name or f"bank{len(members)}"
-    comb = merge_plans([members[i] for i in comb_idx], list(comb_idx),
-                       f"{bank_name}/comb") if comb_idx else None
-    seq = merge_plans([members[i] for i in seq_idx], list(seq_idx),
-                      f"{bank_name}/seq") if seq_idx else None
-    bank = BankPlan(name=bank_name, members=members, comb=comb, seq=seq,
-                    comb_members=comb_idx, seq_members=seq_idx)
-    _BANK_CACHE[key] = bank
-    return bank
+
+# --------------------------- canonical bank templates ------------------------------
+#
+# Serving traffic cannot afford a fresh BankPlan (and jit trace) per request
+# set: the member multiset changes every arrival.  A *bank template* is the
+# canonical padded form of a request multiset — distinct member structures in
+# deterministic (compile-serial) order, each structure's slot count rounded up
+# to a power of two, optionally topped up with no-op identity members to a
+# fixed total — so every request set that fits a bucket reuses ONE BankPlan
+# and ONE jit program, with unbound slots masked out at execution time
+# (executor.execute_bank's ``active`` mask).
+
+IDENTITY_NAME = "__pad__"
+_IDENTITY_PLAN: "list[ExecutionPlan]" = []
+
+
+def identity_plan() -> ExecutionPlan:
+    """The no-op padding member: no PIs, no gates, no outputs.
+
+    Merging it into a bank contributes zero passes and zero streams; it
+    exists so a template's slot count can be padded to a fixed size.  A
+    process-wide singleton (held outside the LRU cache, so eviction can never
+    split its identity and fork bank-template cache keys).
+    """
+    if not _IDENTITY_PLAN:
+        _IDENTITY_PLAN.append(compile_plan(Netlist(IDENTITY_NAME)))
+    return _IDENTITY_PLAN[0]
+
+
+def bucket_count(n: int, min_count: int = 1) -> int:
+    """Smallest power of two >= max(n, min_count) — the slot-count bucket."""
+    n = max(n, min_count, 1)
+    return 1 << (n - 1).bit_length()
+
+
+def template_members(plans: "list[ExecutionPlan]", n_slots: int | None = None,
+                     pad_counts: bool = True,
+                     pad_total: bool = False) -> "tuple[ExecutionPlan, ...]":
+    """Canonical padded slot layout for a request multiset.
+
+    Distinct structures are laid out in compile-serial order, each repeated
+    to its (power-of-two-padded, when ``pad_counts``) count; identity padding
+    members fill the tail up to ``n_slots`` (or, with ``pad_total`` and no
+    explicit ``n_slots``, up to the next power of two of the padded member
+    count).  Two request sets whose padded multisets agree produce the
+    *identical* tuple — the bank-template bucket key.
+    """
+    counts: "dict[ExecutionPlan, int]" = {}
+    for p in plans:
+        counts[p] = counts.get(p, 0) + 1          # plans intern: id == structure
+    members: "list[ExecutionPlan]" = []
+    for p in sorted(counts, key=lambda q: q.serial):
+        c = counts[p]
+        members.extend([p] * (bucket_count(c) if pad_counts else c))
+    if n_slots is None and pad_total:
+        n_slots = bucket_count(len(members))
+    if n_slots is not None:
+        if len(members) > n_slots:
+            raise ValueError(f"template needs {len(members)} slots, "
+                             f"n_slots={n_slots}")
+        members.extend([identity_plan()] * (n_slots - len(members)))
+    return tuple(members)
+
+
+def compile_bank_template(plans: "list[ExecutionPlan]",
+                          n_slots: int | None = None, pad_counts: bool = True,
+                          pad_total: bool = False,
+                          name: str | None = None) -> BankPlan:
+    """Compile the canonical padded bank for a request multiset (cached).
+
+    The returned BankPlan's member list is the ``template_members`` layout;
+    bind requests to the slots holding their plan and execute with
+    ``executor.execute_bank(..., active=mask)``.  Padded execution is
+    bit-identical per bound slot to standalone ``execute`` — unbound slots
+    only ever add masked no-op work.
+    """
+    if not plans:
+        raise ValueError("compile_bank_template: need at least one plan")
+    members = template_members(plans, n_slots=n_slots, pad_counts=pad_counts,
+                               pad_total=pad_total)
+    return _build_bank(members, (members, True),
+                       name or f"tmpl{len(members)}")
+
+
+def merged_pass_count(plans: "list[ExecutionPlan]") -> int:
+    """Fused passes a bank merging exactly ``plans`` would execute.
+
+    Mirrors ``merge_plans``'s batching rule — per level, one pass per
+    distinct (op, neg) across members, combinational and sequential groups
+    leveled independently — without building the merged plan.  Used by
+    ``arch.evaluate_bank_plan`` to price padded-slot overhead: the padded
+    bank's pass count minus the active members' merged pass count is the
+    work padding added.
+    """
+    total = 0
+    for seq in (False, True):
+        by_level: "dict[int, set]" = defaultdict(set)
+        for p in plans:
+            if p.is_sequential != seq:
+                continue
+            for lvl, lev in enumerate(p.levels):
+                for cop in lev:
+                    by_level[lvl].add((cop.op, cop.neg))
+        total += sum(len(s) for s in by_level.values())
+    return total

@@ -38,8 +38,16 @@ _PALLAS_OPS = {"NOT": "not", "AND": "and", "NAND": "nand", "OR": "or",
                "NOR": "nor", "XOR": "xor", FUSED_MUX: "mux"}
 
 
-def _apply_pass(op: str, ins: list[jax.Array], use_pallas: bool) -> jax.Array:
-    """One fused pass over stacked packed words (any leading batch shape)."""
+def _apply_pass(op: str, ins: list[jax.Array], use_pallas: bool,
+                neg: tuple[bool, ...] = ()) -> jax.Array:
+    """One fused pass over stacked packed words (any leading batch shape).
+
+    ``neg[j]`` complements input ``j`` first — the absorbed-lone-NOT form of
+    ``core/plan.py``'s NOT fusion (an exact identity: complementing inside
+    the pass equals materializing the NOT's output stream).
+    """
+    if any(neg):
+        ins = [~x if nb else x for x, nb in zip(ins, neg)]
     if op == "BUFF":
         return ins[0]
     if use_pallas and op in _PALLAS_OPS and ins[0].ndim >= 2:
@@ -70,7 +78,7 @@ def run_combinational(plan: ExecutionPlan, env: dict[str, jax.Array],
             k = cop.n_batched
             if k == 1:
                 ins = [env[names[0]] for names in cop.inputs]
-                outs = [_apply_pass(cop.op, ins, use_pallas)]
+                outs = [_apply_pass(cop.op, ins, use_pallas, cop.neg)]
             else:
                 outs = _batched_pass(cop, env, use_pallas)
             if inject:
@@ -109,10 +117,11 @@ def _batched_pass(cop, env: dict[str, jax.Array],
     for idxs in groups.values():
         if len(idxs) == 1:
             i = idxs[0]
-            outs[i] = _apply_pass(cop.op, [row[i] for row in rows], use_pallas)
+            outs[i] = _apply_pass(cop.op, [row[i] for row in rows], use_pallas,
+                                  cop.neg)
             continue
         ins = [jnp.stack([row[i] for i in idxs]) for row in rows]
-        stacked = _apply_pass(cop.op, ins, use_pallas)
+        stacked = _apply_pass(cop.op, ins, use_pallas, cop.neg)
         for j, i in enumerate(idxs):
             outs[i] = stacked[j]
     return outs

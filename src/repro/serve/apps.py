@@ -1,0 +1,63 @@
+"""Request construction for serving the paper's applications (Section 5-3).
+
+Builders for ``BankServer`` requests over the composed per-bit application
+netlists (LIT / OL / HDP / KDE) and over raw Table-2 circuits.  Application
+netlists are built ONCE per process and reused across requests: appnet node
+names are uniquified per build, so a fresh build per request would defeat
+the plan memo and the bank-template bucketing (every request would look like
+a new structure).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from ..core import apps as core_apps
+from ..core.gates import Netlist
+from .sc_engine import SCRequest
+
+_APP_NETS: dict[str, Netlist] = {}
+
+
+def app_netlist(app: str) -> Netlist:
+    """Process-wide cached build of an application netlist.
+
+    Reusing one build per app keeps structure identity stable: every request
+    for the same app interns to the same compiled plan, which is what makes
+    bank-template buckets (and the jit cache behind them) hit.
+    """
+    if app not in _APP_NETS:
+        from ..core.appnet import APP_NETLISTS
+        _APP_NETS[app] = APP_NETLISTS[app]()
+    return _APP_NETS[app]
+
+
+def app_request(app: str, key, bl: int = 256, *,
+                batch_shape: "tuple[int, ...] | None" = None,
+                bitflip_rate: float = 0.0, flip_key=None,
+                **inputs: Any) -> SCRequest:
+    """Build a BankServer request for one application evaluation.
+
+    ``inputs`` are the app-level keyword inputs of ``apps.appnet_inputs``
+    (``lit``: ``a`` (..., 81); ``ol``: ``p`` (..., 16, 6); ``hdp``: ``v``
+    dict; ``kde``: ``x_t``, ``hist``).  ``key`` is the request's PRNG key —
+    the served result is bit-identical to ``appnet_stochastic`` with the
+    same key and netlist.
+    """
+    return SCRequest(net=app_netlist(app),
+                     values=core_apps.appnet_inputs(app, **inputs),
+                     key=key, bitstream_length=bl, batch_shape=batch_shape,
+                     bitflip_rate=bitflip_rate, flip_key=flip_key)
+
+
+def circuit_request(net: Netlist, values: dict, key, bl: int = 256, *,
+                    batch_shape: "tuple[int, ...] | None" = None,
+                    bitflip_rate: float = 0.0, flip_key=None) -> SCRequest:
+    """Build a BankServer request for a raw circuit netlist.
+
+    Reuse the same ``net`` object across requests of equal structure (e.g.
+    one ``circuits.sc_multiply()`` instance for all multiply traffic) so the
+    template buckets stay warm.
+    """
+    return SCRequest(net=net, values=values, key=key, bitstream_length=bl,
+                     batch_shape=batch_shape, bitflip_rate=bitflip_rate,
+                     flip_key=flip_key)

@@ -1,0 +1,399 @@
+"""Dynamic bank serving: admit SC requests, execute bucketed padded banks.
+
+The bank compiler (core/plan.py) and executor (execute_many) serve a *fixed,
+ahead-of-time* member list: every distinct request multiset costs a fresh
+BankPlan merge and a fresh jit trace.  Real traffic — the ROADMAP's "heavy
+heterogeneous traffic" north star, and the regime the memory-level-
+parallelism literature targets — changes its member set every arrival, so a
+naive execute_many server recompiles constantly and the accelerator starves.
+
+``BankServer`` closes that gap with three mechanisms:
+
+  * **admission queue** — ``submit()`` enqueues a request and returns a
+    ``Ticket``; batches launch when ``max_slots`` requests of one execution
+    group (same bitstream length / bitflip rate) are waiting, when the oldest
+    waiting request exceeds the batching window, or on explicit ``flush()``
+    / ``Ticket.result()`` (the engine is synchronous: time-based flushes are
+    evaluated at submit/result boundaries, not by a background thread).
+  * **bucketed, padded bank templates** — each batch maps to the canonical
+    template of its member multiset (``plan.compile_bank_template``):
+    structures in deterministic order, per-structure slot counts padded to
+    powers of two, identity members topping up the total.  Requests bind to
+    slots (stable order: plan serial, then value shapes) and unbound slots
+    are masked out (``executor.execute_bank(active=...)``), so any request
+    set that fits a bucket reuses ONE BankPlan and ONE jit program.
+  * **per-request key threading** — every request carries its own PRNG key
+    (and flip key under fault injection), and the executor draws slot
+    streams exactly as standalone ``execute`` would: results are
+    **bit-identical** per request to an unbatched run with the same key and
+    ``key_mode``, regardless of which bucket or slot served it (pinned by
+    tests/test_serve.py).
+
+``stats()`` reports the serving health signals: bucket hit rate (how warm
+the template/jit caches run), padding waste (masked slots per executed
+slot), p50/p99 request latency, and throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict, defaultdict, deque
+from typing import Any
+
+import jax
+import numpy as np
+
+from ..core import executor
+from ..core.gates import Netlist
+from ..core.plan import compile_bank_template, compile_plan
+
+
+@dataclasses.dataclass
+class SCRequest:
+    """One admitted stochastic-computation request.
+
+    ``net`` is the circuit (structure-equal netlists intern to one compiled
+    plan — reuse built netlist objects across requests to keep the plan memo
+    warm, e.g. via ``repro.serve.apps``); ``values`` its PI values; ``key``
+    the request's own PRNG key (the bit-identity anchor).  ``batch_shape``
+    declares the stream batch shape when values alone cannot (all-const
+    PIs).  ``bitflip_rate``/``flip_key`` inject per-request faults.
+    """
+
+    net: Netlist
+    values: dict[str, Any]
+    key: Any
+    bitstream_length: int = 256
+    batch_shape: "tuple[int, ...] | None" = None
+    bitflip_rate: float = 0.0
+    flip_key: Any = None
+
+
+class Ticket:
+    """Completion handle for a submitted request."""
+
+    __slots__ = ("_server", "_result", "_done", "submitted_at", "latency_s")
+
+    def __init__(self, server: "BankServer"):
+        self._server = server
+        self._result = None
+        self._done = False
+        self.submitted_at = time.perf_counter()
+        self.latency_s: float | None = None
+
+    def done(self) -> bool:
+        return self._done
+
+    def result(self):
+        """The request's output dict; flushes the server if still pending."""
+        if not self._done:
+            self._server.flush()
+        if not self._done:                      # pragma: no cover - safety
+            raise RuntimeError("ticket unresolved after flush")
+        return self._result
+
+    def _fulfil(self, result, t_done: float) -> None:
+        self._result = result
+        self._done = True
+        self.latency_s = t_done - self.submitted_at
+
+
+@dataclasses.dataclass
+class _Pending:
+    req: SCRequest
+    ticket: Ticket
+
+
+def _key_data_host(k) -> "np.ndarray":
+    # The public unwrap (jax.random.key_data) dispatches an XLA op per key —
+    # at serving rates that is the single largest per-batch host cost.  The
+    # raw buffer is directly reachable on current jax; fall back to the
+    # public path if the internal layout ever changes.
+    base = getattr(k, "_base_array", None)
+    if base is not None:
+        return np.asarray(base)
+    return np.asarray(jax.random.key_data(k))
+
+
+def _stack_keys(keys: list):
+    """Stack per-slot PRNG keys into one (n,) key array, host-side.
+
+    ``jnp.stack`` over typed keys dispatches one expand_dims per slot plus a
+    concatenate; staging the raw key data through numpy collapses that to
+    ONE device put, bit-identical to the stacked keys (same key data, same
+    impl).  Repeated slot keys (the unbound-slot placeholder) unwrap once.
+    """
+    try:
+        memo: dict[int, np.ndarray] = {}
+        rows = []
+        for k in keys:
+            d = memo.get(id(k))
+            if d is None:
+                d = memo[id(k)] = _key_data_host(k)
+            rows.append(d)
+        return jax.random.wrap_key_data(jax.numpy.asarray(np.stack(rows)),
+                                        impl=jax.random.key_impl(keys[0]))
+    except (TypeError, AttributeError):
+        return jax.numpy.stack(keys)
+
+
+def _percentile(sorted_xs: "list[float]", q: float) -> float:
+    if not sorted_xs:
+        return 0.0
+    idx = min(len(sorted_xs) - 1, max(0, round(q * (len(sorted_xs) - 1))))
+    return sorted_xs[idx]
+
+
+#: Sliding window for latency percentiles (bounds a long-running server's
+#: memory; counters stay exact).
+LATENCY_WINDOW = 4096
+#: LRU caps on the server's own memo/signature state — like the plan/bank
+#: caches, serving many bucket shapes must not grow them without bound.
+_TEMPLATE_MEMO_CAP = 256
+_SIGNATURE_CAP = 4096
+
+
+@dataclasses.dataclass
+class BankServerStats:
+    """Cumulative serving counters (reset with ``BankServer.reset_stats``).
+
+    Latencies are kept in a sliding window of the most recent
+    ``LATENCY_WINDOW`` requests — p50/p99/mean describe recent traffic, the
+    integer counters the server's whole life.
+    """
+
+    n_requests: int = 0
+    n_batches: int = 0
+    bucket_hits: int = 0          # batches whose full exec signature was warm
+    bucket_misses: int = 0
+    slots_total: int = 0          # executed template slots (incl. padding)
+    active_slots: int = 0         # slots bound to requests
+    identity_slots: int = 0       # no-op identity padding slots
+    exec_s: float = 0.0           # wall time inside batch execution
+    latencies_s: "deque[float]" = dataclasses.field(
+        default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
+
+    def as_dict(self) -> dict:
+        lat = sorted(self.latencies_s)
+        total_batches = max(self.n_batches, 1)
+        return {
+            "n_requests": self.n_requests,
+            "n_batches": self.n_batches,
+            "bucket_hits": self.bucket_hits,
+            "bucket_misses": self.bucket_misses,
+            "bucket_hit_rate": self.bucket_hits / total_batches,
+            "padding_waste": (self.slots_total - self.active_slots)
+            / max(self.slots_total, 1),
+            "identity_slots": self.identity_slots,
+            "p50_ms": _percentile(lat, 0.50) * 1e3,
+            "p99_ms": _percentile(lat, 0.99) * 1e3,
+            "mean_ms": (sum(lat) / len(lat) * 1e3) if lat else 0.0,
+            "throughput_rps": self.n_requests / max(self.exec_s, 1e-9),
+            "exec_s": self.exec_s,
+        }
+
+
+class BankServer:
+    """Traffic-driven serving engine over bucketed, padded BankPlans.
+
+    Parameters
+    ----------
+    max_slots:
+        Admission threshold and per-batch request cap: a batch launches as
+        soon as ``max_slots`` requests of one execution group are queued.
+    window_s:
+        Batching window — on submit, if the oldest queued request has waited
+        at least this long, the queue flushes.  ``None`` (default) disables
+        the time trigger: batches launch on ``max_slots``, ``flush()``, or
+        ``Ticket.result()`` only.  The engine is synchronous, so the window
+        is evaluated at submit/result/flush calls, not by a background
+        thread (0.0 therefore means "never let a request wait behind a
+        second submit").
+    pad_counts:
+        Pad each structure's slot count to a power of two (bucket key space
+        shrinks from per-count to per-log-count).
+    pad_total:
+        Pad the template's total slot count to a power of two with identity
+        members.
+    key_mode / backend / decode:
+        Threaded to ``executor.execute_bank``; ``decode=True`` (default)
+        returns decoded output values per request, else packed streams.
+
+    Results are bit-identical per request to standalone
+    ``executor.execute[_value]`` with the same key — see module docstring.
+    """
+
+    def __init__(self, *, max_slots: int = 8,
+                 window_s: "float | None" = None,
+                 pad_counts: bool = True, pad_total: bool = True,
+                 key_mode: str | None = None, backend: str | None = None,
+                 decode: bool = True):
+        if max_slots < 1:
+            raise ValueError("max_slots must be >= 1")
+        self.max_slots = max_slots
+        self.window_s = window_s
+        self.pad_counts = pad_counts
+        self.pad_total = pad_total
+        self.key_mode = key_mode
+        self.backend = backend
+        self.decode = decode
+        self._queue: "list[_Pending]" = []
+        # Both maps are LRU-bounded: heterogeneous traffic mints new plan
+        # tuples / exec signatures indefinitely, and the memo's strong
+        # template references must not defeat plan.py's bank-cache cap.
+        self._seen_signatures: OrderedDict = OrderedDict()
+        # Canonical plan tuple -> compiled template: front-runs the plan-level
+        # bank cache (which must hash member tuples) with an id-keyed lookup.
+        self._template_memo: OrderedDict = OrderedDict()
+        self._stats = BankServerStats()
+
+    # ------------------------------ admission ------------------------------------
+
+    def submit(self, req: SCRequest) -> Ticket:
+        """Admit one request; may trigger a flush per the batching policy."""
+        if req.bitflip_rate > 0.0 and req.flip_key is None:
+            raise ValueError("bitflip_rate > 0 requires flip_key")
+        ticket = Ticket(self)
+        self._queue.append(_Pending(req, ticket))
+        group = self._group_key(req)
+        n_group = sum(1 for p in self._queue
+                      if self._group_key(p.req) == group)
+        if n_group >= self.max_slots:
+            # Only the group that filled launches — other groups keep
+            # accumulating toward their own max_slots/window triggers.
+            self._flush_group(group)
+        elif self.window_s is not None and self._queue:
+            if time.perf_counter() - self._queue[0].ticket.submitted_at \
+                    >= self.window_s:
+                self.flush()
+        return ticket
+
+    def serve(self, requests: "list[SCRequest]") -> list:
+        """Submit a burst and return its results in request order."""
+        tickets = [self.submit(r) for r in requests]
+        self.flush()
+        return [t.result() for t in tickets]
+
+    def flush(self) -> int:
+        """Drain the admission queue; returns the number of batches run."""
+        n_batches = 0
+        while self._queue:
+            self._flush_group(self._group_key(self._queue[0].req))
+            n_batches += 1
+        return n_batches
+
+    def _flush_group(self, group: tuple) -> None:
+        """Execute one batch of up to ``max_slots`` requests of ``group``."""
+        take = [p for p in self._queue
+                if self._group_key(p.req) == group][:self.max_slots]
+        taken = set(map(id, take))
+        self._queue = [p for p in self._queue if id(p) not in taken]
+        self._execute_batch(take)
+
+    # ------------------------------ execution ------------------------------------
+
+    @staticmethod
+    def _group_key(req: SCRequest) -> tuple:
+        # Static execution parameters that cannot share one bank dispatch.
+        return (req.bitstream_length, float(req.bitflip_rate))
+
+    @staticmethod
+    def _shape_sig(req: SCRequest) -> tuple:
+        vs = tuple(sorted((k, tuple(jax.numpy.shape(v)))
+                          for k, v in req.values.items()))
+        # Encode "no declared batch shape" as a comparable value: signatures
+        # are sort keys, and None does not order against tuples.
+        if req.batch_shape is None:
+            return ((False, ()), vs)
+        return ((True, tuple(req.batch_shape)), vs)
+
+    def _execute_batch(self, pendings: "list[_Pending]") -> None:
+        t0 = time.perf_counter()
+        bl, rate = self._group_key(pendings[0].req)
+        fuse = rate == 0.0
+        plans = [compile_plan(p.req.net,
+                              fuse_mux=fuse or p.req.net.is_sequential)
+                 for p in pendings]
+        # Canonical request order (plan serial, then value shapes): identical
+        # traffic mixes bind identically, so the jit signature repeats even
+        # when arrival order shuffles.
+        sigs = [self._shape_sig(p.req) for p in pendings]
+        order = sorted(range(len(pendings)),
+                       key=lambda i: (plans[i].serial, sigs[i]))
+        ordered_plans = tuple(plans[i] for i in order)
+        template = self._template_memo.get(ordered_plans)
+        if template is None:
+            template = compile_bank_template(list(ordered_plans),
+                                             pad_counts=self.pad_counts,
+                                             pad_total=self.pad_total)
+            self._template_memo[ordered_plans] = template
+            while len(self._template_memo) > _TEMPLATE_MEMO_CAP:
+                self._template_memo.popitem(last=False)
+        else:
+            self._template_memo.move_to_end(ordered_plans)
+
+        free: "dict[int, deque]" = defaultdict(deque)
+        for s, m in enumerate(template.members):
+            free[id(m)].append(s)
+        n = template.n_members
+        dummy_key = pendings[0].req.key
+        fk0 = pendings[0].req.flip_key
+        values_seq: list = [{} for _ in range(n)]
+        key_rows: list = [dummy_key] * n
+        flip_rows: list = [fk0 if fk0 is not None else dummy_key] * n
+        batch_shapes: list = [None] * n
+        active = [False] * n
+        slot_of: "dict[int, int]" = {}                  # request idx -> slot
+        for ri in order:
+            req = pendings[ri].req
+            s = free[id(plans[ri])].popleft()
+            slot_of[ri] = s
+            values_seq[s] = req.values
+            key_rows[s] = req.key
+            batch_shapes[s] = req.batch_shape
+            active[s] = True
+            if rate > 0.0:
+                flip_rows[s] = req.flip_key
+
+        # template.serial (a monotone build stamp) — never id(), which can
+        # alias a garbage-collected template after cache eviction and
+        # misreport cold batches as bucket hits.
+        signature = (template.serial, bl, rate, tuple(active),
+                     tuple(sigs[i] for i in order))
+        hit = signature in self._seen_signatures
+        self._seen_signatures[signature] = None
+        self._seen_signatures.move_to_end(signature)
+        while len(self._seen_signatures) > _SIGNATURE_CAP:
+            self._seen_signatures.popitem(last=False)
+
+        outs = executor.execute_bank(
+            template, values_seq, _stack_keys(key_rows), bl, active=active,
+            bitflip_rate=rate,
+            flip_keys=_stack_keys(flip_rows) if rate > 0.0 else None,
+            backend=self.backend, key_mode=self.key_mode,
+            batch_shapes=batch_shapes, decode=self.decode)
+        jax.block_until_ready([outs[s] for s in slot_of.values()])
+        t_done = time.perf_counter()
+
+        for ri, s in slot_of.items():
+            pendings[ri].ticket._fulfil(outs[s], t_done)
+        st = self._stats
+        st.n_requests += len(pendings)
+        st.n_batches += 1
+        st.bucket_hits += int(hit)
+        st.bucket_misses += int(not hit)
+        st.slots_total += n
+        st.active_slots += len(pendings)
+        st.identity_slots += template.n_identity_members
+        st.exec_s += t_done - t0
+        st.latencies_s.extend(p.ticket.latency_s for p in pendings)
+
+    # -------------------------------- stats --------------------------------------
+
+    def stats(self) -> dict:
+        return self._stats.as_dict()
+
+    def reset_stats(self) -> None:
+        """Zero the counters; keeps the bucket/jit caches warm (for
+        measuring steady-state serving after a warmup pass)."""
+        self._stats = BankServerStats()

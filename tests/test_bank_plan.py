@@ -164,10 +164,11 @@ def test_bank_plan_merges_passes_across_members():
     nets = [circuits.sc_multiply() for _ in range(8)]
     bank = compile_bank_plan(nets)
     # 8 structurally-equal members intern to one member plan and collapse to
-    # that plan's passes: one batched NAND pass + one batched NOT pass.
+    # that plan's passes: the NAND+NOT pair folds to ONE batched AND pass.
     assert len(set(bank.members)) == 1
-    assert bank.n_passes == bank.members[0].n_passes == 2
-    assert bank.n_passes_looped == 16
+    assert bank.n_passes == bank.members[0].n_passes == 1
+    assert bank.n_passes_looped == 8
+    assert bank.comb.levels[0][0].op == "AND"
     assert bank.comb.levels[0][0].n_batched == 8
 
 
