@@ -6,7 +6,7 @@ BL=1024 two ways:
   * **looped** — one ``executor.execute_value`` dispatch per member, the
     pre-bank-merging serving model (each member is itself a compiled fused
     plan, so this baseline is already the PR-1 fast path);
-  * **merged** — ONE ``executor.execute_value_many`` call: all members merge
+  * **merged** — ONE ``executor.run([ExecRequest, ...])`` call: all members merge
     into a single bank plan (``core/plan.compile_bank_plan``) whose levels
     type-batch gates across members, executed as a single jit dispatch
     (sequential members share one merged scan).
@@ -89,7 +89,10 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
     nets, values, names = bank_members()
     keys = jax.random.split(jax.random.key(0), len(nets))
 
-    merged_fn = lambda: executor.execute_value_many(nets, values, keys, bl)
+    merged_opts = executor.ExecOptions(bitstream_length=bl, decode=True)
+    merged_fn = lambda: executor.run(
+        [executor.ExecRequest(n, v, keys[i], merged_opts)
+         for i, (n, v) in enumerate(zip(nets, values))])
     looped_fn = lambda: [executor.execute_value(n, v, keys[i], bl)
                          for i, (n, v) in enumerate(zip(nets, values))]
     merged_ms = _time(merged_fn, iters)

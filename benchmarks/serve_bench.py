@@ -12,7 +12,7 @@ member sets, arriving in bursts — through three serving models:
   * **per_request** — one warm ``executor.execute_value`` dispatch per
     request (netlists reused, plan/jit caches hot): the pre-bank-merging
     serving model.
-  * **cold_many** — what a naive ``execute_value_many`` server does under
+  * **cold_many** — what a naive merged-batch (``executor.run([...])``) server does under
     changing traffic: every burst builds fresh netlists and starts from
     cleared plan/bank caches, so each member set recompiles its merged bank
     and retraces its jit — the cost the bucketing exists to amortize.
@@ -140,10 +140,11 @@ def _replay_cold_many(bursts, bl: int) -> float:
         # Fresh netlists + cleared caches: the naive server's steady state
         # under changing member sets (every burst recompiles its bank).
         plan.clear_cache()
-        nets = [builders[s]() for s, _, _ in burst]
-        values = [vals for _, vals, _ in burst]
-        keys = [key for _, _, key in burst]
-        outs = executor.execute_value_many(nets, values, keys, bl)
+        outs = executor.run(
+            [executor.ExecRequest(builders[s](), vals, key,
+                                  executor.ExecOptions(bitstream_length=bl,
+                                                       decode=True))
+             for s, vals, key in burst])
         jax.block_until_ready(outs)
     return time.perf_counter() - t0
 

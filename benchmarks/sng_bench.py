@@ -45,7 +45,12 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
     batch = 64 if smoke else 256          # full run: the 64x64 grid, 16 px/tile
     net = APP_NETLISTS["ol"]()
     rng = np.random.default_rng(0)
-    values = apps.appnet_inputs("ol", p=rng.uniform(0.5, 1.0, (batch, 16, 6)))
+    # appnet_inputs returns host-f32 leaves (cheap splat, serving-friendly);
+    # this loop re-dispatches the SAME values, so pin them on device once —
+    # otherwise every timed call pays 96 host->device transfers that dwarf
+    # the generation phase being measured.
+    values = {k: jax.numpy.asarray(v) for k, v in
+              apps.appnet_inputs("ol", p=rng.uniform(0.5, 1.0, (batch, 16, 6))).items()}
     key = jax.random.key(0)
     n_pis = compile_plan(net).stream_table.n_rows   # stream PIs only
 

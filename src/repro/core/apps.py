@@ -364,26 +364,35 @@ def kde_cost_stages() -> list[CostStage]:
 # ================== composed per-bit netlist execution ===========================
 
 def appnet_inputs(app: str, *, a=None, p=None, v=None, x_t=None,
-                  hist=None) -> dict[str, jax.Array]:
+                  hist=None) -> dict:
     """Map app-level inputs to the PI value keys of ``appnet.APP_NETLISTS``.
 
     Shapes (trailing dims consumed, leading dims broadcast as batch):
       lit: ``a`` (..., 81) window pixels      ol: ``p`` (..., 16, 6) pixel probs
       hdp: ``v`` dict over HDP_KEYS           kde: ``x_t`` (...), ``hist`` (..., N)
+
+    Values stay *host* float32 (numpy): per-PI splats of an 81-pixel window
+    would otherwise dispatch one device op per element, and host scalars are
+    what the executor's bank path packs into a single per-slot vector at the
+    jit boundary.  An input already on device is kept there and splats via
+    device slices.
     """
+    def _host(x):
+        return x if isinstance(x, jax.Array) else np.asarray(x, np.float32)
+
     if app == "lit":
-        a = jnp.asarray(a, jnp.float32)
+        a = _host(a)
         return {f"a{i}": a[..., i] for i in range(a.shape[-1])}
     if app == "ol":
-        p = jnp.asarray(p, jnp.float32)
+        p = _host(p)
         return {f"p{r}_{j}": p[..., r, j]
                 for r in range(p.shape[-2]) for j in range(p.shape[-1])}
     if app == "hdp":
-        return {k: jnp.asarray(v[k], jnp.float32) for k in HDP_KEYS}
+        return {k: _host(v[k]) for k in HDP_KEYS}
     if app == "kde":
-        hist = jnp.asarray(hist, jnp.float32)
+        hist = _host(hist)
         vals = {f"h{i}": hist[..., i] for i in range(hist.shape[-1])}
-        vals["x_t"] = jnp.asarray(x_t, jnp.float32)
+        vals["x_t"] = _host(x_t)
         return vals
     raise KeyError(app)
 
@@ -434,9 +443,18 @@ def appnet_stochastic_many(requests, key, bl: int = 256,
     if nets is None:
         nets = [APP_NETLISTS[app]() for app, _ in requests]
     values = [appnet_inputs(app, **inp) for app, inp in requests]
-    return executor.execute_value_many(nets, values, key, bl,
-                                       bitflip_rate=bitflip_rate,
-                                       flip_keys=flip_keys, backend=backend)
+    n = len(nets)
+    keys = executor._normalize_keys(key, n)
+    if bitflip_rate > 0.0:
+        flip_keys = executor._normalize_keys(flip_keys, n, "flip_keys")
+    shared = executor.ExecOptions(backend=backend, bitstream_length=bl,
+                                  bitflip_rate=bitflip_rate, decode=True)
+    return executor.run(
+        [executor.ExecRequest(net, vals, keys[i],
+                              dataclasses.replace(
+                                  shared, flip_key=flip_keys[i])
+                              if bitflip_rate > 0.0 else shared)
+         for i, (net, vals) in enumerate(zip(nets, values))])
 
 
 def cost_stage_netlists(app: str, max_instances: int | None = None) -> list:

@@ -313,6 +313,78 @@ def evaluate_bank_plan(bank, cfg: StochIMCConfig,
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class MultiBankCost:
+    """Aggregate cycle model for several banks executing concurrently.
+
+    Models the multi-bank serving regime (serve/sc_engine.BankServer with
+    several devices): each bank runs one merged plan independently, so the
+    makespan is the *slowest* bank while a single-bank server pays the *sum*.
+    ``bank_speedup`` is that serial/parallel ratio — the bank-level
+    parallelism axis of the paper's 135.7X claim, orthogonal to the
+    within-bank SIMD speedup each ``BankPlanCost`` already reports.
+    """
+
+    per_bank: "tuple[BankPlanCost, ...]"
+    parallel_cycles: int         # makespan: max over banks
+    serial_cycles: int           # single-bank server: sum over banks
+    total_members: int
+    total_active: int
+
+    @property
+    def n_banks(self) -> int:
+        return len(self.per_bank)
+
+    @property
+    def bank_speedup(self) -> float:
+        """Serial-over-parallel ratio across banks (<= n_banks; equality iff
+        perfectly balanced)."""
+        return self.serial_cycles / max(self.parallel_cycles, 1)
+
+    @property
+    def balance(self) -> float:
+        """Load balance in (0, 1]: mean bank cycles over makespan."""
+        if not self.per_bank:
+            return 1.0
+        return (self.serial_cycles / len(self.per_bank)) \
+            / max(self.parallel_cycles, 1)
+
+    def requests_per_kilocycle(self) -> float:
+        """Aggregate steady-state throughput: bound members retired per 1000
+        bank cycles of makespan."""
+        return 1000.0 * self.total_active / max(self.parallel_cycles, 1)
+
+
+def evaluate_multibank(banks, cfg: StochIMCConfig,
+                       actives=None,
+                       q_lanes: int | None = None) -> MultiBankCost:
+    """Aggregate ``evaluate_bank_plan`` over concurrently-executing banks.
+
+    ``banks`` is a sequence of ``core.plan.BankPlan`` (one per physical bank
+    / device); ``actives`` optionally gives each bank's bound-slot mask, as
+    in ``evaluate_bank_plan``.  The model assumes the banks are independent
+    (disjoint subarrays, no shared accumulator), which is exactly the
+    BankServer placement contract: one batch per device at a time.
+    """
+    banks = list(banks)
+    if not banks:
+        raise ValueError("evaluate_multibank: need at least one bank")
+    if actives is None:
+        actives = [None] * len(banks)
+    if len(actives) != len(banks):
+        raise ValueError(f"actives: got {len(actives)} for "
+                         f"{len(banks)} banks")
+    costs = tuple(evaluate_bank_plan(b, cfg, q_lanes=q_lanes, active=a)
+                  for b, a in zip(banks, actives))
+    return MultiBankCost(
+        per_bank=costs,
+        parallel_cycles=max(c.merged_cycles for c in costs),
+        serial_cycles=sum(c.merged_cycles for c in costs),
+        total_members=sum(c.n_members for c in costs),
+        total_active=sum(c.active_members for c in costs),
+    )
+
+
 def lifetime_improvement(a: AppCost, baseline: AppCost) -> float:
     """Eq. (11) ratio: (E_max * C / B) relative to baseline, with C = utilized
     cells and B = write traffic (write accesses dominate endurance)."""

@@ -27,13 +27,26 @@ discipline (both backends honor it identically): ``"batched"`` (default)
 generates every PI stream of a plan — or a whole bank — in ONE fused
 threshold+pack pass over the plan's stream table; ``"legacy"`` reproduces
 the pre-batching per-PI threefry splits bit-exactly.
+
+The canonical entry point is ``run()`` over ``ExecRequest``s: one request
+(netlist or prebuilt plan + PI values + PRNG key + frozen ``ExecOptions``)
+executes standalone, a sequence merges into one bank-level program, and
+``run(requests, template=bank)`` binds slot-aligned requests onto a padded
+bank template (the serving path — ``device=`` places the batch on a specific
+JAX device, ``donate=`` consumes the engine-owned key rows).  The historic
+``execute*`` functions remain as thin shims that build ``ExecRequest``s and
+delegate to ``run()``; outputs are bit-identical (pinned by tests).
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from functools import partial
+from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import bitstream as bs
 from . import sc_ops
@@ -50,6 +63,70 @@ _BACKENDS = ("compiled", "compiled_pallas", "reference")
 DEFAULT_KEY_MODE = "batched"
 
 _KEY_MODES = ("batched", "legacy")
+
+
+# ------------------------------ request API ---------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExecOptions:
+    """Frozen execution options shared by every entry point.
+
+    ``backend`` / ``key_mode`` default (``None``) to the module defaults at
+    run time; ``flip_key`` is required when ``bitflip_rate > 0``;
+    ``batch_shape`` declares the stream batch shape when values alone cannot
+    (all-const stream PIs).  ``decode`` fuses the StoB decode into the
+    program (the ``execute_value`` behavior); ``binary`` runs the netlist on
+    packed binary test-vector words instead of stochastic streams (the
+    ``execute_binary`` behavior — ``values`` are then the operand bits and
+    the stream fields are ignored).
+    """
+
+    backend: str | None = None
+    key_mode: str | None = None
+    bitstream_length: int = 256
+    bitflip_rate: float = 0.0
+    flip_key: Any = None
+    batch_shape: "tuple[int, ...] | None" = None
+    decode: bool = False
+    binary: bool = False
+
+
+@dataclasses.dataclass
+class ExecRequest:
+    """One canonical execution request: circuit + values + key + options.
+
+    ``net`` is a ``Netlist`` or a prebuilt ``ExecutionPlan`` (compiled
+    backends only); ``values`` its PI values (operand bit words under
+    ``options.binary``); ``key`` the request's PRNG key — the bit-identity
+    anchor: a request produces the same output bits whether it runs
+    standalone, inside a merged bank, or bound to a padded template slot on
+    any device.  ``serve.SCRequest`` subclasses this with the serving
+    layer's flat constructor.
+    """
+
+    net: Any
+    values: dict[str, Any]
+    key: Any = None
+    options: ExecOptions = dataclasses.field(default_factory=ExecOptions)
+
+    # Flat views of the per-request option fields, so request consumers
+    # (serving engine, tests) need not reach through ``options`` for the
+    # fields every request carries.
+    @property
+    def bitstream_length(self) -> int:
+        return self.options.bitstream_length
+
+    @property
+    def batch_shape(self) -> "tuple[int, ...] | None":
+        return self.options.batch_shape
+
+    @property
+    def bitflip_rate(self) -> float:
+        return self.options.bitflip_rate
+
+    @property
+    def flip_key(self):
+        return self.options.flip_key
 
 
 def _pi_shape(values: dict[str, jax.Array],
@@ -297,10 +374,13 @@ def execute(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
     bit-exactly the pre-batching behavior); both backends honor it
     identically.  ``batch_shape`` declares the stream batch shape when it is
     not derivable from ``values`` (e.g. all stream PIs const-valued).
+
+    Thin shim over ``run()``: builds one ``ExecRequest`` — bit-identical.
     """
-    return _dispatch(net, values, key, bitstream_length, bitflip_rate,
-                     flip_key, backend, decode=False, key_mode=key_mode,
-                     batch_shape=batch_shape)
+    return run(ExecRequest(net, values, key, ExecOptions(
+        backend=backend, key_mode=key_mode,
+        bitstream_length=bitstream_length, bitflip_rate=bitflip_rate,
+        flip_key=flip_key, batch_shape=batch_shape)))
 
 
 def execute_value(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
@@ -311,21 +391,15 @@ def execute_value(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
     """Execute and decode each output stream to its unipolar value.
 
     On the compiled backends the decode is fused into the execution program
-    (single dispatch per call)."""
-    return _dispatch(net, values, key, bitstream_length, bitflip_rate,
-                     flip_key, backend, decode=True, key_mode=key_mode,
-                     batch_shape=batch_shape)
+    (single dispatch per call).  Thin shim over ``run()``."""
+    return run(ExecRequest(net, values, key, ExecOptions(
+        backend=backend, key_mode=key_mode,
+        bitstream_length=bitstream_length, bitflip_rate=bitflip_rate,
+        flip_key=flip_key, batch_shape=batch_shape, decode=True)))
 
 
-def execute_binary(net: Netlist, operand_bits: dict[str, jax.Array],
-                   backend: str | None = None) -> dict[str, jax.Array]:
-    """Execute a binary netlist on packed test-vector words.
-
-    ``operand_bits`` maps PI names to uint32 words whose lane ``t`` is the
-    PI's value in test vector ``t``.  Constant PIs (const_value set) are
-    filled automatically.  Inverted-polarity storage (the Fig. 7(a) trick) is
-    applied by the *caller* via the netlist's value conventions.
-    """
+def _dispatch_binary(net: Netlist, operand_bits: dict[str, jax.Array],
+                     backend: str | None) -> dict[str, jax.Array]:
     backend = backend or DEFAULT_BACKEND
     if backend not in _BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected one of {_BACKENDS}")
@@ -337,6 +411,21 @@ def execute_binary(net: Netlist, operand_bits: dict[str, jax.Array],
     plan = compile_plan(net, fuse_mux=True)
     return _execute_binary_compiled(plan, dict(operand_bits),
                                     backend == "compiled_pallas")
+
+
+def execute_binary(net: Netlist, operand_bits: dict[str, jax.Array],
+                   backend: str | None = None) -> dict[str, jax.Array]:
+    """Execute a binary netlist on packed test-vector words.
+
+    ``operand_bits`` maps PI names to uint32 words whose lane ``t`` is the
+    PI's value in test vector ``t``.  Constant PIs (const_value set) are
+    filled automatically.  Inverted-polarity storage (the Fig. 7(a) trick) is
+    applied by the *caller* via the netlist's value conventions.
+
+    Thin shim over ``run()`` (``options.binary``) — bit-identical.
+    """
+    return run(ExecRequest(net, dict(operand_bits), options=ExecOptions(
+        backend=backend, binary=True)))
 
 
 # ----------------------------- bank-level execution -------------------------------
@@ -463,14 +552,11 @@ def generate_bank_streams(bank: BankPlan, values_seq, keys,
                                       batch_shapes, active)
 
 
-@partial(jax.jit, static_argnames=("bank", "bitstream_length", "bitflip_rate",
-                                   "use_pallas", "decode", "key_mode",
-                                   "batch_shapes", "active"))
-def _execute_bank(bank: BankPlan, values_seq, keys, flip_keys,
-                  bitstream_length: int, bitflip_rate: float,
-                  use_pallas: bool, decode: bool,
-                  key_mode: str = DEFAULT_KEY_MODE, batch_shapes=None,
-                  active=None):
+def _execute_bank_impl(bank: BankPlan, values_seq, keys, flip_keys,
+                       bitstream_length: int, bitflip_rate: float,
+                       use_pallas: bool, decode: bool,
+                       key_mode: str = DEFAULT_KEY_MODE, batch_shapes=None,
+                       active=None, scalar_names=None):
     """Whole-bank execution of N member netlists as one XLA program.
 
     Stream generation and fault keying stay *per member*: member ``i``'s
@@ -490,6 +576,17 @@ def _execute_bank(bank: BankPlan, values_seq, keys, flip_keys,
     the keys a standalone run would.
     """
     from ..kernels import netlist_exec
+
+    if scalar_names is not None:
+        # Packed-slot layout (see execute_bank): slot i's host-scalar PI
+        # values arrive as one f32 vector; rebuild the per-name dict at
+        # trace time.  The unpack slices are free after fusion, and the jit
+        # boundary sees one leaf per slot instead of one per PI.
+        packed_seq, rest_seq = values_seq
+        values_seq = tuple(
+            {**{nm: packed_seq[i][j]
+                for j, nm in enumerate(scalar_names[i])}, **rest_seq[i]}
+            for i in range(len(scalar_names)))
 
     comb_env: dict[str, jax.Array] = {}
     seq_words: dict[str, jax.Array] = {}
@@ -556,12 +653,70 @@ def _execute_bank(bank: BankPlan, values_seq, keys, flip_keys,
     return tuple(outs)
 
 
+_BANK_STATIC = ("bank", "bitstream_length", "bitflip_rate", "use_pallas",
+                "decode", "key_mode", "batch_shapes", "active",
+                "scalar_names")
+_execute_bank = partial(jax.jit, static_argnames=_BANK_STATIC)(
+    _execute_bank_impl)
+#: Donating variant (its own jit cache): XLA reuses the stacked key rows'
+#: buffers (argnums 2/3).  Only safe when the caller owns those arrays and
+#: never reads them after the call — the serve engine's per-batch stacks.
+#: Slot *values* are never donated: they may alias caller-held request
+#: arrays.
+_execute_bank_donating = partial(jax.jit, static_argnames=_BANK_STATIC,
+                                 donate_argnums=(2, 3))(_execute_bank_impl)
+
+
+#: type -> "is a jax.Array subclass" memo: ``isinstance(v, jax.Array)`` goes
+#: through ABC registration machinery, which shows up at bank-dispatch rates
+#: (thousands of value leaves per batch).
+_IS_JAX_ARRAY: dict = {}
+
+
 def _as_f32(v) -> jax.Array:
     """asarray(v, float32), skipping the (surprisingly costly) conversion
     machinery on the serving hot path when the caller already holds f32."""
-    if isinstance(v, jax.Array) and v.dtype == jnp.float32:
+    t = type(v)
+    is_jax = _IS_JAX_ARRAY.get(t)
+    if is_jax is None:
+        is_jax = _IS_JAX_ARRAY.setdefault(t, isinstance(v, jax.Array))
+    if is_jax and v.dtype == jnp.float32:
         return v
     return jnp.asarray(v, jnp.float32)
+
+
+def _is_host_scalar(v) -> bool:
+    t = type(v)
+    is_jax = _IS_JAX_ARRAY.get(t)
+    if is_jax is None:
+        is_jax = _IS_JAX_ARRAY.setdefault(t, isinstance(v, jax.Array))
+    return not is_jax and np.ndim(v) == 0
+
+
+def _pack_values_seq(values_seq):
+    """Slot-packed jit layout for bank dispatch: ``(packed, rest), names``.
+
+    Each slot's *host scalar* PI values (python/numpy scalars — the serving
+    admission format) collapse into one f32 vector, so the jit boundary
+    flattens/transfers one leaf per slot instead of one per PI (a LIT slot
+    alone carries 81).  ``names[i]`` records slot i's packed PI names in
+    sorted order (a static jit argument); `_execute_bank_impl` rebuilds the
+    dicts at trace time.  jax-array leaves are NOT packed — pulling them
+    back to host would force a device sync — and flow through ``rest``
+    unchanged, as do non-scalar (batched) values.
+    """
+    packed, rest, names = [], [], []
+    for vals in values_seq:
+        s = sorted(k for k, v in vals.items() if _is_host_scalar(v))
+        names.append(tuple(s))
+        packed.append(np.asarray([vals[k] for k in s], np.float32))
+        if len(s) == len(vals):
+            rest.append({})
+        else:
+            sset = set(s)
+            rest.append({k: _as_f32(v) for k, v in vals.items()
+                         if k not in sset})
+    return (tuple(packed), tuple(rest)), tuple(names)
 
 
 def _normalize_batch_shapes(batch_shapes, n: int, what: str = "netlists"):
@@ -632,19 +787,84 @@ def _dispatch_many(nets, values_seq, keys, bitstream_length: int,
                           batch_shape=batch_shapes[i] if batch_shapes else None)
                 for i, (net, vals) in enumerate(zip(nets, values_seq))]
     bank = compile_bank_plan(list(nets), fuse_mux=bitflip_rate == 0.0)
-    values_seq = tuple({k: _as_f32(v) for k, v in vals.items()}
-                       for vals in values_seq)
+    values_seq, scalar_names = _pack_values_seq(values_seq)
     outs = _execute_bank(bank, values_seq, keys, flip_keys, bitstream_length,
                          float(bitflip_rate), backend == "compiled_pallas",
-                         decode, key_mode=key_mode, batch_shapes=batch_shapes)
+                         decode, key_mode=key_mode, batch_shapes=batch_shapes,
+                         scalar_names=scalar_names)
     return list(outs)
 
 
-def execute_many(nets, values_seq, keys, bitstream_length: int,
-                 bitflip_rate: float = 0.0, flip_keys=None,
-                 backend: str | None = None, key_mode: str | None = None,
-                 batch_shapes=None) -> list:
+#: Legacy positional tail of execute_many/execute_value_many after
+#: (nets, values_seq); the *args/**kwargs shim reassembles it so the
+#: deprecated plural-kwarg spellings (keys=/batch_shapes=) can be detected.
+_MANY_TAIL = ("keys", "bitstream_length", "bitflip_rate", "flip_keys",
+              "backend", "key_mode", "batch_shapes")
+
+
+def _many_tail(fn_name: str, args: tuple, kwargs: dict) -> tuple:
+    for bad in ("keys", "batch_shapes"):
+        if bad in kwargs:
+            warnings.warn(
+                f"{fn_name}({bad}=...) is deprecated: build per-member "
+                f"ExecRequests (each carrying its own key / "
+                f"options.batch_shape) and call executor.run([...])",
+                DeprecationWarning, stacklevel=3)
+    if len(args) > len(_MANY_TAIL):
+        raise TypeError(f"{fn_name}: too many positional arguments")
+    params = dict(zip(_MANY_TAIL, args))
+    dup = sorted(set(params) & set(kwargs))
+    if dup:
+        raise TypeError(f"{fn_name}: got multiple values for {dup}")
+    params.update(kwargs)
+    unknown = sorted(set(params) - set(_MANY_TAIL))
+    if unknown:
+        raise TypeError(f"{fn_name}: unexpected keyword arguments {unknown}")
+    missing = sorted({"keys", "bitstream_length"} - set(params))
+    if missing:
+        raise TypeError(f"{fn_name}: missing required arguments {missing}")
+    return (params["keys"], params["bitstream_length"],
+            params.get("bitflip_rate", 0.0), params.get("flip_keys"),
+            params.get("backend"), params.get("key_mode"),
+            params.get("batch_shapes"))
+
+
+def _many_shim(fn_name: str, nets, values_seq, args, kwargs,
+               decode: bool) -> list:
+    """Shared execute_many/execute_value_many shim: build per-member
+    ``ExecRequest``s and delegate to ``run()`` — bit-identical to the legacy
+    plural-kwarg path (stacking per-member key rows reproduces the original
+    key array exactly)."""
+    (keys, bitstream_length, bitflip_rate, flip_keys, backend, key_mode,
+     batch_shapes) = _many_tail(fn_name, args, kwargs)
+    n = len(nets)
+    if n == 0:
+        raise ValueError("execute_many: need at least one netlist")
+    if len(values_seq) != n:
+        raise ValueError(f"values: got {len(values_seq)} for {n} netlists")
+    keys = _normalize_keys(keys, n)
+    batch_shapes = _normalize_batch_shapes(batch_shapes, n)
+    if bitflip_rate > 0.0:
+        if flip_keys is None:
+            raise ValueError("bitflip_rate > 0 requires flip_keys")
+        flip_keys = _normalize_keys(flip_keys, n, "flip_keys")
+    reqs = [ExecRequest(net, vals, keys[i], ExecOptions(
+                backend=backend, key_mode=key_mode,
+                bitstream_length=bitstream_length,
+                bitflip_rate=bitflip_rate,
+                flip_key=flip_keys[i] if bitflip_rate > 0.0 else None,
+                batch_shape=batch_shapes[i] if batch_shapes else None,
+                decode=decode))
+            for i, (net, vals) in enumerate(zip(nets, values_seq))]
+    return run(reqs)
+
+
+def execute_many(nets, values_seq, /, *args, **kwargs) -> list:
     """Execute N (possibly different) netlists as ONE fused bank-level plan.
+
+    Legacy signature: ``execute_many(nets, values_seq, keys,
+    bitstream_length, bitflip_rate=0.0, flip_keys=None, backend=None,
+    key_mode=None, batch_shapes=None)``.
 
     ``nets[i]`` runs with PI values ``values_seq[i]`` and PRNG key ``keys[i]``
     (``keys`` may also be a single key, which is split N ways).  Returns one
@@ -657,26 +877,29 @@ def execute_many(nets, values_seq, keys, bitstream_length: int,
     (``batch_shapes[i]`` declares member i's shape when its values alone
     cannot, e.g. all-const stream PIs).  ``bitflip_rate`` injects per-member
     faults keyed by ``flip_keys[i]`` (single key allowed, split N ways).
+
+    .. deprecated:: the plural-kwarg spellings ``keys=`` / ``batch_shapes=``
+       — build per-member ``ExecRequest``s and call ``run([...])`` instead;
+       this shim stays bit-identical but warns.
     """
-    return _dispatch_many(nets, values_seq, keys, bitstream_length,
-                          bitflip_rate, flip_keys, backend, decode=False,
-                          key_mode=key_mode, batch_shapes=batch_shapes)
+    return _many_shim("execute_many", nets, values_seq, args, kwargs,
+                      decode=False)
 
 
-def execute_value_many(nets, values_seq, keys, bitstream_length: int,
-                       bitflip_rate: float = 0.0, flip_keys=None,
-                       backend: str | None = None, key_mode: str | None = None,
-                       batch_shapes=None) -> list:
-    """``execute_many`` with the StoB decode fused into the same program."""
-    return _dispatch_many(nets, values_seq, keys, bitstream_length,
-                          bitflip_rate, flip_keys, backend, decode=True,
-                          key_mode=key_mode, batch_shapes=batch_shapes)
+def execute_value_many(nets, values_seq, /, *args, **kwargs) -> list:
+    """``execute_many`` with the StoB decode fused into the same program.
+
+    Same legacy signature and deprecation notes as ``execute_many``.
+    """
+    return _many_shim("execute_value_many", nets, values_seq, args, kwargs,
+                      decode=True)
 
 
 def execute_bank(bank: BankPlan, values_seq, keys, bitstream_length: int,
                  *, active=None, bitflip_rate: float = 0.0, flip_keys=None,
                  backend: str | None = None, key_mode: str | None = None,
-                 batch_shapes=None, decode: bool = False) -> list:
+                 batch_shapes=None, decode: bool = False,
+                 device=None, donate: bool = False) -> list:
     """Execute a prebuilt (possibly padded) BankPlan slot-wise.
 
     The serving-engine entry point (``repro.serve.sc_engine``): ``bank`` is
@@ -693,16 +916,28 @@ def execute_bank(bank: BankPlan, values_seq, keys, bitstream_length: int,
     padding never perturbs active streams.  ``decode=True`` fuses the StoB
     decode into the program (the ``execute_value_many`` analogue).  Bank
     plans only execute on the compiled backends.
+
+    ``device`` (a ``jax.Device``) commits the stacked key rows there before
+    dispatch; jit places the whole bank execution with its committed
+    argument, so the program runs on that device and the outputs live there
+    — the multi-bank server's sharded placement.  Only the key arrays are
+    committed (one buffer each): committing the per-slot values pytree
+    leaf-by-leaf costs more host time than the dispatch itself, while
+    uncommitted values follow the keys in one transfer.  Values already
+    committed to a *different* device raise jax's colocation error — pass
+    host/uncommitted values when sharding.  ``donate=True`` lets XLA consume
+    the stacked key-row buffers (never the slot values, which may alias
+    caller arrays); only pass it when the key rows are call-owned scratch,
+    like the serve engine's per-batch stacks.
     """
     backend, key_mode = _check_modes(backend, key_mode)
     if backend == "reference":
         raise ValueError("execute_bank runs compiled BankPlans; use "
                          "execute()/execute_many() for the reference backend")
     n = bank.n_members
-    values_seq = tuple({k: _as_f32(v) for k, v in vals.items()}
-                       for vals in values_seq)
     if len(values_seq) != n:
         raise ValueError(f"values: got {len(values_seq)} for {n} slots")
+    values_seq, scalar_names = _pack_values_seq(values_seq)
     keys = _normalize_keys(keys, n)
     batch_shapes = _normalize_batch_shapes(batch_shapes, n, "slots")
     active = _normalize_active(active, n)
@@ -712,11 +947,219 @@ def execute_bank(bank: BankPlan, values_seq, keys, bitstream_length: int,
         flip_keys = _normalize_keys(flip_keys, n, "flip_keys")
     else:
         flip_keys = None
-    outs = _execute_bank(bank, values_seq, keys, flip_keys, bitstream_length,
-                         float(bitflip_rate), backend == "compiled_pallas",
-                         decode, key_mode=key_mode, batch_shapes=batch_shapes,
-                         active=active)
+    if device is not None:
+        keys = jax.device_put(keys, device)
+        if flip_keys is not None:
+            flip_keys = jax.device_put(flip_keys, device)
+    args = (bank, values_seq, keys, flip_keys, bitstream_length,
+            float(bitflip_rate), backend == "compiled_pallas", decode)
+    kw = dict(key_mode=key_mode, batch_shapes=batch_shapes, active=active,
+              scalar_names=scalar_names)
+    if donate:
+        # Donation is best-effort: when no output can alias a key-row buffer
+        # (the common case — outputs are packed words, not keys) XLA ignores
+        # it and jax warns; that advisory is noise on a hot serving path.
+        with warnings.catch_warnings():
+            warnings.filterwarnings("ignore",
+                                    message="Some donated buffers were not")
+            outs = _execute_bank_donating(*args, **kw)
+    else:
+        outs = _execute_bank(*args, **kw)
     return list(outs)
+
+
+# ------------------------------ run() entry point ---------------------------------
+
+def _key_data_host(k) -> np.ndarray:
+    # The public unwrap (jax.random.key_data) dispatches an XLA op per key —
+    # at serving rates that is the single largest per-batch host cost.  The
+    # raw buffer is directly reachable on current jax; fall back to the
+    # public path if the internal layout ever changes.
+    base = getattr(k, "_base_array", None)
+    if base is not None:
+        return np.asarray(base)
+    return np.asarray(jax.random.key_data(k))
+
+
+def _stack_keys(keys: list):
+    """Stack per-slot PRNG keys into one (n,) key array, host-side.
+
+    ``jnp.stack`` over typed keys dispatches one expand_dims per slot plus a
+    concatenate; staging the raw key data through numpy collapses that to
+    ONE device put, bit-identical to the stacked keys (same key data, same
+    impl).  Repeated slot keys (the unbound-slot placeholder) unwrap once.
+    """
+    try:
+        memo: dict[int, np.ndarray] = {}
+        rows = []
+        for k in keys:
+            d = memo.get(id(k))
+            if d is None:
+                d = memo[id(k)] = _key_data_host(k)
+            rows.append(d)
+        return jax.random.wrap_key_data(jnp.asarray(np.stack(rows)),
+                                        impl=jax.random.key_impl(keys[0]))
+    except (TypeError, AttributeError):
+        return jnp.stack(keys)
+
+
+_SHARED_OPTION_FIELDS = ("backend", "key_mode", "bitstream_length",
+                         "bitflip_rate", "decode", "binary")
+
+
+def _common_options(reqs: "list[ExecRequest]") -> ExecOptions:
+    """The options every request of a merged batch must agree on (per-slot
+    fields — key, flip_key, batch_shape, values — stay per request)."""
+    o0 = reqs[0].options
+    for r in reqs[1:]:
+        for f in _SHARED_OPTION_FIELDS:
+            if getattr(r.options, f) != getattr(o0, f):
+                raise ValueError(
+                    f"run: requests disagree on options.{f}: "
+                    f"{getattr(o0, f)!r} vs {getattr(r.options, f)!r} "
+                    f"(group requests by shared options, or pass options=)")
+    return o0
+
+
+def _run_one(req: ExecRequest, device=None,
+             options: ExecOptions | None = None):
+    o = options or req.options
+    if o.binary:
+        return _dispatch_binary(req.net, req.values, o.backend)
+    values, key, flip_key = req.values, req.key, o.flip_key
+    if device is not None:
+        # Commit only the key(s): jit places the program with its committed
+        # argument, and uncommitted values follow in one transfer (committing
+        # a values pytree leaf-by-leaf costs more than the dispatch).
+        key = jax.device_put(key, device)
+        if flip_key is not None:
+            flip_key = jax.device_put(flip_key, device)
+    if isinstance(req.net, ExecutionPlan):
+        backend, key_mode = _check_modes(o.backend, o.key_mode)
+        if backend == "reference":
+            raise ValueError("the reference backend interprets netlists; "
+                             "pass the Netlist, not its ExecutionPlan")
+        if o.bitflip_rate > 0.0 and flip_key is None:
+            raise ValueError("bitflip_rate > 0 requires flip_key")
+        batch_shape = (tuple(o.batch_shape)
+                       if o.batch_shape is not None else None)
+        values = {k: _as_f32(v) for k, v in values.items()}
+        return _execute_compiled(req.net, values, key, flip_key,
+                                 o.bitstream_length, float(o.bitflip_rate),
+                                 backend == "compiled_pallas", decode=o.decode,
+                                 key_mode=key_mode, batch_shape=batch_shape)
+    return _dispatch(req.net, values, key, o.bitstream_length,
+                     o.bitflip_rate, flip_key, o.backend, decode=o.decode,
+                     key_mode=o.key_mode, batch_shape=o.batch_shape)
+
+
+def _run_many(reqs: "list[ExecRequest]", device=None,
+              options: ExecOptions | None = None) -> list:
+    if not reqs:
+        raise ValueError("run: need at least one request")
+    shared = options or _common_options(reqs)
+    if shared.binary:
+        raise ValueError("run: binary requests execute one at a time")
+    for r in reqs:
+        if not isinstance(r.net, Netlist):
+            raise TypeError("run([...]) merges netlists into one bank; pass "
+                            "template= to execute a prebuilt BankPlan")
+    rate = float(shared.bitflip_rate)
+    flip_keys = None
+    if rate > 0.0:
+        flip_keys = [r.options.flip_key for r in reqs]
+        if any(fk is None for fk in flip_keys):
+            raise ValueError("bitflip_rate > 0 requires a flip_key on every "
+                             "request")
+    batch_shapes = [r.options.batch_shape for r in reqs]
+    if all(b is None for b in batch_shapes):
+        batch_shapes = None
+    values_seq = [r.values for r in reqs]
+    keys = [r.key for r in reqs]
+    if device is not None:
+        # Commit only the keys (see _run_one): the program follows them.
+        keys = jax.device_put(keys, device)
+        if flip_keys is not None:
+            flip_keys = jax.device_put(flip_keys, device)
+    return _dispatch_many([r.net for r in reqs], values_seq, keys,
+                          shared.bitstream_length, rate, flip_keys,
+                          shared.backend, shared.decode,
+                          key_mode=shared.key_mode,
+                          batch_shapes=batch_shapes)
+
+
+def _run_template(reqs, bank: BankPlan, active=None, device=None,
+                  donate: bool = False,
+                  options: ExecOptions | None = None) -> list:
+    """Slot-aligned template execution: ``reqs[i]`` feeds template slot ``i``
+    (``None`` = unbound slot, masked out)."""
+    n = bank.n_members
+    if len(reqs) != n:
+        raise ValueError(f"run: got {len(reqs)} slot requests for {n} slots")
+    bound = [(i, r) for i, r in enumerate(reqs) if r is not None]
+    if not bound:
+        raise ValueError("run: template batch needs at least one bound slot")
+    shared = options or _common_options([r for _, r in bound])
+    if shared.binary:
+        raise ValueError("run: binary requests execute one at a time")
+    rate = float(shared.bitflip_rate)
+    if active is None:
+        active = [r is not None for r in reqs]
+    # Placeholder rows for unbound slots: any same-impl key works (masked
+    # slots draw no streams); reusing the first bound key row unwraps once.
+    key0 = bound[0][1].key
+    fk0 = bound[0][1].options.flip_key
+    values_seq: list = [{} for _ in range(n)]
+    key_rows: list = [key0] * n
+    flip_rows: list = [fk0 if fk0 is not None else key0] * n
+    batch_shapes: list = [None] * n
+    for i, r in bound:
+        values_seq[i] = r.values
+        key_rows[i] = r.key
+        batch_shapes[i] = r.options.batch_shape
+        if rate > 0.0:
+            if r.options.flip_key is None:
+                raise ValueError("bitflip_rate > 0 requires a flip_key on "
+                                 "every request")
+            flip_rows[i] = r.options.flip_key
+    return execute_bank(
+        bank, values_seq, _stack_keys(key_rows), shared.bitstream_length,
+        active=active, bitflip_rate=rate,
+        flip_keys=_stack_keys(flip_rows) if rate > 0.0 else None,
+        backend=shared.backend, key_mode=shared.key_mode,
+        batch_shapes=batch_shapes, decode=shared.decode,
+        device=device, donate=donate)
+
+
+def run(request_or_requests, *, template: BankPlan | None = None,
+        active=None, device=None, donate: bool = False,
+        options: ExecOptions | None = None):
+    """Canonical execution entry point over ``ExecRequest``s.
+
+    * ``run(req)`` — execute one request (netlist or prebuilt plan);
+      returns its output dict (decoded when ``options.decode``).
+    * ``run([req, ...])`` — merge the requests' netlists into ONE fused
+      bank-level program (the ``execute_many`` path); returns one output
+      dict per request, bit-identical to running each alone.
+    * ``run(slot_reqs, template=bank)`` — bind slot-aligned requests
+      (``None`` = unbound) onto a padded bank template and execute with the
+      unbound slots masked; returns one entry per slot (``None`` where
+      unbound).  This is the serving engine's path.
+
+    Batch paths require the requests to agree on the shared option fields
+    (backend / key_mode / bitstream_length / bitflip_rate / decode); pass
+    ``options=`` to supply them explicitly instead (per-slot key, flip_key,
+    batch_shape and values always come from each request).  ``device``
+    commits the batch inputs to one JAX device before dispatch;
+    ``donate`` forwards to ``execute_bank`` (template path only).
+    """
+    if isinstance(request_or_requests, ExecRequest):
+        return _run_one(request_or_requests, device=device, options=options)
+    reqs = list(request_or_requests)
+    if template is not None:
+        return _run_template(reqs, template, active=active, device=device,
+                             donate=donate, options=options)
+    return _run_many(reqs, device=device, options=options)
 
 
 # ----------------------------- reference backend ----------------------------------

@@ -911,7 +911,7 @@ def template_members(plans: "list[ExecutionPlan]", n_slots: int | None = None,
 def compile_bank_template(plans: "list[ExecutionPlan]",
                           n_slots: int | None = None, pad_counts: bool = True,
                           pad_total: bool = False,
-                          name: str | None = None) -> BankPlan:
+                          name: str | None = None, scope=None) -> BankPlan:
     """Compile the canonical padded bank for a request multiset (cached).
 
     The returned BankPlan's member list is the ``template_members`` layout;
@@ -919,12 +919,37 @@ def compile_bank_template(plans: "list[ExecutionPlan]",
     ``executor.execute_bank(..., active=mask)``.  Padded execution is
     bit-identical per bound slot to standalone ``execute`` — unbound slots
     only ever add masked no-op work.
+
+    ``scope`` (any hashable, default ``None``) partitions the cache: the
+    multi-bank server passes the target *device*, so each device serves from
+    its own template instance — one device's LRU churn cannot evict the
+    templates (and the jit executables their serials anchor) another device
+    is still serving from, and bucket-warmth bookkeeping keyed on
+    ``BankPlan.serial`` is automatically per device.
     """
     if not plans:
         raise ValueError("compile_bank_template: need at least one plan")
     members = template_members(plans, n_slots=n_slots, pad_counts=pad_counts,
                                pad_total=pad_total)
-    return _build_bank(members, (members, True),
+    return _build_bank(members, (members, True, scope),
+                       name or f"tmpl{len(members)}")
+
+
+def compile_bank_members(members: "tuple[ExecutionPlan, ...]",
+                         name: str | None = None, scope=None) -> BankPlan:
+    """Compile a bank for an *explicit* slot layout (cached).
+
+    ``members`` is a ready-made slot tuple — typically a ``template_members``
+    layout the serving dispatcher computed once and then binds requests
+    against, compiling the actual bank lazily per target device (``scope``,
+    see ``compile_bank_template``).  No padding is applied: the caller owns
+    the layout, and re-deriving it here could re-pad identity tails into a
+    different (non-canonical) tuple.
+    """
+    if not members:
+        raise ValueError("compile_bank_members: need at least one member")
+    members = tuple(members)
+    return _build_bank(members, (members, True, scope),
                        name or f"tmpl{len(members)}")
 
 

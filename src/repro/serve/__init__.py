@@ -6,11 +6,13 @@ points (``make_prefill`` / ``make_decode_step`` / ``greedy_generate``) load
 lazily: they pull in the whole ``repro.models`` stack, which the SC serving
 path does not need.
 """
+from ..core.executor import ExecOptions, ExecRequest
 from .apps import app_netlist, app_request, circuit_request
 from .sc_engine import BankServer, BankServerStats, SCRequest, Ticket
 
 __all__ = [
-    "BankServer", "BankServerStats", "SCRequest", "Ticket",
+    "BankServer", "BankServerStats", "ExecOptions", "ExecRequest",
+    "SCRequest", "Ticket",
     "app_netlist", "app_request", "circuit_request",
     "make_decode_step", "make_prefill", "greedy_generate",
 ]

@@ -1,7 +1,10 @@
 """Request construction for serving the paper's applications (Section 5-3).
 
 Builders for ``BankServer`` requests over the composed per-bit application
-netlists (LIT / OL / HDP / KDE) and over raw Table-2 circuits.  Application
+netlists (LIT / OL / HDP / KDE) and over raw Table-2 circuits.  Both return
+``SCRequest`` — the canonical ``executor.ExecRequest`` with per-request
+execution parameters folded into ``ExecOptions`` — so a built request can be
+submitted to a server OR handed directly to ``executor.run``.  Application
 netlists are built ONCE per process and reused across requests: appnet node
 names are uniquified per build, so a fresh build per request would defeat
 the plan memo and the bank-template bucketing (every request would look like

@@ -1,37 +1,46 @@
-"""Dynamic bank serving: admit SC requests, execute bucketed padded banks.
+"""Multi-bank async serving: device-sharded, pipelined bank dispatch.
 
-The bank compiler (core/plan.py) and executor (execute_many) serve a *fixed,
-ahead-of-time* member list: every distinct request multiset costs a fresh
-BankPlan merge and a fresh jit trace.  Real traffic — the ROADMAP's "heavy
-heterogeneous traffic" north star, and the regime the memory-level-
-parallelism literature targets — changes its member set every arrival, so a
-naive execute_many server recompiles constantly and the accelerator starves.
-
-``BankServer`` closes that gap with three mechanisms:
+The bank compiler (core/plan.py) and executor serve a *fixed, ahead-of-time*
+member list: every distinct request multiset costs a fresh BankPlan merge and
+a fresh jit trace.  Real traffic — the ROADMAP's "heavy heterogeneous
+traffic" north star, and the regime the memory-level-parallelism literature
+targets — changes its member set every arrival, so a naive execute_many
+server recompiles constantly and the accelerator starves.  The paper's
+headline speedup additionally rests on *bank-level* parallelism: independent
+subarrays computing concurrently.  ``BankServer`` models both axes:
 
   * **admission queue** — ``submit()`` enqueues a request and returns a
-    ``Ticket``; batches launch when ``max_slots`` requests of one execution
+    ``Ticket``; batches form when ``max_slots`` requests of one execution
     group (same bitstream length / bitflip rate) are waiting, when the oldest
     waiting request exceeds the batching window, or on explicit ``flush()``
-    / ``Ticket.result()`` (the engine is synchronous: time-based flushes are
+    / ``Ticket.result()`` (the engine is synchronous: time-based triggers are
     evaluated at submit/result boundaries, not by a background thread).
   * **bucketed, padded bank templates** — each batch maps to the canonical
-    template of its member multiset (``plan.compile_bank_template``):
-    structures in deterministic order, per-structure slot counts padded to
-    powers of two, identity members topping up the total.  Requests bind to
-    slots (stable order: plan serial, then value shapes) and unbound slots
-    are masked out (``executor.execute_bank(active=...)``), so any request
-    set that fits a bucket reuses ONE BankPlan and ONE jit program.
+    template of its member multiset (structures in deterministic order,
+    per-structure slot counts padded to powers of two, identity members
+    topping up the total).  Requests bind to slots (stable order: plan
+    serial, then value shapes) and unbound slots are masked out, so any
+    request set that fits a bucket reuses ONE BankPlan and ONE jit program.
+  * **continuous batching** — a formed batch is *staged* before dispatch;
+    requests arriving while it waits bind into its free (padding) slots
+    instead of seeding a second batch (``stats()["joined_requests"]``).
+  * **device sharding + async dispatch** — staged batches launch onto the
+    least-loaded / round-robin / bank-affine JAX device (one bank per
+    device, ``executor.run(..., device=...)``) and the server does NOT block
+    on results: JAX async dispatch keeps up to ``max_inflight`` batches per
+    device in flight while admission continues.  Tickets resolve to async
+    arrays at dispatch; ``Ticket.result()`` waits (with optional timeout)
+    and surfaces any execution failure on every ticket of the batch.
   * **per-request key threading** — every request carries its own PRNG key
-    (and flip key under fault injection), and the executor draws slot
-    streams exactly as standalone ``execute`` would: results are
-    **bit-identical** per request to an unbatched run with the same key and
-    ``key_mode``, regardless of which bucket or slot served it (pinned by
-    tests/test_serve.py).
+    (and flip key under fault injection) and the executor draws slot streams
+    exactly as standalone ``execute`` would: results are **bit-identical**
+    per request to an unbatched run with the same key and ``key_mode``,
+    regardless of device, bucket, or slot (pinned by tests/test_serve.py and
+    tests/test_serve_multibank.py).
 
-``stats()`` reports the serving health signals: bucket hit rate (how warm
-the template/jit caches run), padding waste (masked slots per executed
-slot), p50/p99 request latency, and throughput.
+``stats()`` reports serving health: bucket hit rate (how warm the
+template/jit caches run), padding waste, join count, p50/p99 request
+latency, throughput, and per-device batch/request counts.
 """
 from __future__ import annotations
 
@@ -44,39 +53,83 @@ import jax
 import numpy as np
 
 from ..core import executor
+from ..core.executor import ExecOptions, ExecRequest
 from ..core.gates import Netlist
-from ..core.plan import compile_bank_template, compile_plan
+from ..core.plan import compile_bank_members, compile_plan, template_members
 
 
-@dataclasses.dataclass
-class SCRequest:
+def _layout_sig_of(req: ExecRequest) -> tuple:
+    """Batching-layout signature: PI names + shapes + declared batch shape.
+
+    Requests with equal signatures occupy interchangeable bank slots, so
+    the server sorts on this to canonicalize batch layouts (template-cache
+    hits) and to match continuous-batching joins."""
+    vs = tuple(sorted((k, tuple(v.shape) if hasattr(v, "shape")
+                       else tuple(jax.numpy.shape(v)))
+                      for k, v in req.values.items()))
+    # Encode "no declared batch shape" as a comparable value: signatures
+    # are sort keys, and None does not order against tuples.
+    if req.batch_shape is None:
+        return ((False, ()), vs)
+    return ((True, tuple(req.batch_shape)), vs)
+
+
+class SCRequest(ExecRequest):
     """One admitted stochastic-computation request.
 
-    ``net`` is the circuit (structure-equal netlists intern to one compiled
-    plan — reuse built netlist objects across requests to keep the plan memo
-    warm, e.g. via ``repro.serve.apps``); ``values`` its PI values; ``key``
-    the request's own PRNG key (the bit-identity anchor).  ``batch_shape``
-    declares the stream batch shape when values alone cannot (all-const
-    PIs).  ``bitflip_rate``/``flip_key`` inject per-request faults.
+    A thin subclass of :class:`repro.core.executor.ExecRequest` keeping the
+    historical flat constructor: per-request execution parameters are folded
+    into ``ExecOptions`` under the hood.  ``net`` is the circuit
+    (structure-equal netlists intern to one compiled plan — reuse built
+    netlist objects across requests to keep the plan memo warm, e.g. via
+    ``repro.serve.apps``); ``values`` its PI values; ``key`` the request's
+    own PRNG key (the bit-identity anchor).  ``batch_shape`` declares the
+    stream batch shape when values alone cannot (all-const PIs).
+    ``bitflip_rate``/``flip_key`` inject per-request faults.
+
+    Values are canonicalized to *host* float32 at admission: a request is
+    dispatched exactly once but its leaves are touched on every hot-path
+    pass (signature, bind, bank call), so paying the dtype conversion here
+    — once, at construction — keeps the dispatch loop cheap.  Host scalars
+    are what ``execute_bank`` packs into one vector per slot at the jit
+    boundary; jax-array values pass through untouched (forcing them to
+    host would block on the device).
     """
 
-    net: Netlist
-    values: dict[str, Any]
-    key: Any
-    bitstream_length: int = 256
-    batch_shape: "tuple[int, ...] | None" = None
-    bitflip_rate: float = 0.0
-    flip_key: Any = None
+    def __init__(self, net: Netlist, values: dict[str, Any], key: Any,
+                 bitstream_length: int = 256,
+                 batch_shape: "tuple[int, ...] | None" = None,
+                 bitflip_rate: float = 0.0, flip_key: Any = None,
+                 options: "ExecOptions | None" = None):
+        if options is None:
+            options = ExecOptions(
+                bitstream_length=bitstream_length,
+                batch_shape=(tuple(batch_shape)
+                             if batch_shape is not None else None),
+                bitflip_rate=float(bitflip_rate), flip_key=flip_key)
+        values = {k: v if isinstance(v, jax.Array)
+                  else np.asarray(v, np.float32)
+                  for k, v in values.items()}
+        super().__init__(net=net, values=values, key=key, options=options)
+        self._layout_sig = _layout_sig_of(self)
 
 
 class Ticket:
-    """Completion handle for a submitted request."""
+    """Completion handle for a submitted request.
 
-    __slots__ = ("_server", "_result", "_done", "submitted_at", "latency_s")
+    ``done()`` turns True once the request's batch has been *dispatched*
+    (results are then async jax arrays, possibly still computing) or failed.
+    ``result()`` forces the wait and raises the batch's exception, if any.
+    """
+
+    __slots__ = ("_server", "_result", "_error", "_batch", "_done",
+                 "submitted_at", "latency_s")
 
     def __init__(self, server: "BankServer"):
         self._server = server
         self._result = None
+        self._error: "BaseException | None" = None
+        self._batch: "_Batch | None" = None
         self._done = False
         self.submitted_at = time.perf_counter()
         self.latency_s: float | None = None
@@ -84,57 +137,78 @@ class Ticket:
     def done(self) -> bool:
         return self._done
 
-    def result(self):
-        """The request's output dict; flushes the server if still pending."""
+    def result(self, timeout: "float | None" = None):
+        """The request's output dict; flushes the server if still pending.
+
+        ``timeout`` (seconds) bounds the wait on an already-dispatched
+        batch: raises ``TimeoutError`` if its device work has not finished
+        in time (the ticket stays valid — call ``result()`` again).  If the
+        batch failed, the execution exception re-raises on *every* ticket
+        of that batch.
+        """
         if not self._done:
             self._server.flush()
         if not self._done:                      # pragma: no cover - safety
             raise RuntimeError("ticket unresolved after flush")
+        if self._error is None and self._batch is not None:
+            self._server._wait_batch(self._batch, timeout)
+        if self._error is not None:
+            raise self._error
         return self._result
 
-    def _fulfil(self, result, t_done: float) -> None:
+    def _fulfil(self, result, batch: "_Batch") -> None:
         self._result = result
+        self._batch = batch
         self._done = True
-        self.latency_s = t_done - self.submitted_at
+
+    def _fail(self, exc: BaseException) -> None:
+        self._error = exc
+        self._done = True
 
 
 @dataclasses.dataclass
 class _Pending:
     req: SCRequest
     ticket: Ticket
+    sig: tuple = ()     # shape signature, computed once at admission
 
 
-def _key_data_host(k) -> "np.ndarray":
-    # The public unwrap (jax.random.key_data) dispatches an XLA op per key —
-    # at serving rates that is the single largest per-batch host cost.  The
-    # raw buffer is directly reachable on current jax; fall back to the
-    # public path if the internal layout ever changes.
-    base = getattr(k, "_base_array", None)
-    if base is not None:
-        return np.asarray(base)
-    return np.asarray(jax.random.key_data(k))
+class _Batch:
+    """One formed bank batch: a template member layout plus bound requests.
 
+    Lives through three states: *staged* (formed, accepting joins into free
+    padding slots), *in flight* (dispatched to a device, results async), and
+    *finalized* (results ready or failed, tickets resolved)."""
 
-def _stack_keys(keys: list):
-    """Stack per-slot PRNG keys into one (n,) key array, host-side.
+    __slots__ = ("group", "members", "pendings", "slots", "free",
+                 "device", "outs", "dispatched_at", "finalized")
 
-    ``jnp.stack`` over typed keys dispatches one expand_dims per slot plus a
-    concatenate; staging the raw key data through numpy collapses that to
-    ONE device put, bit-identical to the stacked keys (same key data, same
-    impl).  Repeated slot keys (the unbound-slot placeholder) unwrap once.
-    """
-    try:
-        memo: dict[int, np.ndarray] = {}
-        rows = []
-        for k in keys:
-            d = memo.get(id(k))
-            if d is None:
-                d = memo[id(k)] = _key_data_host(k)
-            rows.append(d)
-        return jax.random.wrap_key_data(jax.numpy.asarray(np.stack(rows)),
-                                        impl=jax.random.key_impl(keys[0]))
-    except (TypeError, AttributeError):
-        return jax.numpy.stack(keys)
+    def __init__(self, group: tuple, members: tuple):
+        self.group = group
+        self.members = members                  # slot -> member ExecutionPlan
+        self.pendings: "list[_Pending]" = []
+        self.slots: "list[int]" = []            # parallel to pendings
+        self.free: "dict[int, deque]" = defaultdict(deque)
+        for s, m in enumerate(members):
+            self.free[id(m)].append(s)
+        self.device = None
+        self.outs: "list | None" = None         # per-pending async out dicts
+        self.dispatched_at: "float | None" = None
+        self.finalized = False
+
+    def bind(self, pending: _Pending, plan) -> bool:
+        """Bind ``pending`` (compiled to ``plan``) to a free compatible slot."""
+        dq = self.free.get(id(plan))
+        if not dq:
+            return False
+        self.slots.append(dq.popleft())
+        self.pendings.append(pending)
+        return True
+
+    def ready(self) -> bool:
+        """Non-blocking: have all this batch's device results landed?"""
+        return all(a.is_ready() for out in self.outs
+                   for a in jax.tree_util.tree_leaves(out))
 
 
 def _percentile(sorted_xs: "list[float]", q: float) -> float:
@@ -159,17 +233,19 @@ class BankServerStats:
 
     Latencies are kept in a sliding window of the most recent
     ``LATENCY_WINDOW`` requests — p50/p99/mean describe recent traffic, the
-    integer counters the server's whole life.
+    integer counters the server's whole life.  ``exec_s`` is busy wall time:
+    the union of intervals during which at least one batch was in flight.
     """
 
     n_requests: int = 0
     n_batches: int = 0
     bucket_hits: int = 0          # batches whose full exec signature was warm
     bucket_misses: int = 0
+    joined_requests: int = 0      # requests continuous-batched into a staged bank
     slots_total: int = 0          # executed template slots (incl. padding)
     active_slots: int = 0         # slots bound to requests
     identity_slots: int = 0       # no-op identity padding slots
-    exec_s: float = 0.0           # wall time inside batch execution
+    exec_s: float = 0.0           # busy wall time (>=1 batch in flight)
     latencies_s: "deque[float]" = dataclasses.field(
         default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
 
@@ -182,6 +258,7 @@ class BankServerStats:
             "bucket_hits": self.bucket_hits,
             "bucket_misses": self.bucket_misses,
             "bucket_hit_rate": self.bucket_hits / total_batches,
+            "joined_requests": self.joined_requests,
             "padding_waste": (self.slots_total - self.active_slots)
             / max(self.slots_total, 1),
             "identity_slots": self.identity_slots,
@@ -193,31 +270,47 @@ class BankServerStats:
         }
 
 
+_PLACEMENTS = ("affinity", "round_robin", "least_loaded")
+
+
 class BankServer:
     """Traffic-driven serving engine over bucketed, padded BankPlans.
 
     Parameters
     ----------
     max_slots:
-        Admission threshold and per-batch request cap: a batch launches as
-        soon as ``max_slots`` requests of one execution group are queued.
+        Admission threshold: a batch forms as soon as ``max_slots`` requests
+        of one execution group are queued.  Joins may bind further requests
+        into the batch's padding slots while it is staged.
     window_s:
         Batching window — on submit, if the oldest queued request has waited
-        at least this long, the queue flushes.  ``None`` (default) disables
-        the time trigger: batches launch on ``max_slots``, ``flush()``, or
-        ``Ticket.result()`` only.  The engine is synchronous, so the window
-        is evaluated at submit/result/flush calls, not by a background
-        thread (0.0 therefore means "never let a request wait behind a
-        second submit").
-    pad_counts:
-        Pad each structure's slot count to a power of two (bucket key space
-        shrinks from per-count to per-log-count).
-    pad_total:
-        Pad the template's total slot count to a power of two with identity
-        members.
+        at least this long, the whole queue forms into batches.  ``None``
+        (default) disables the time trigger.  The engine is synchronous, so
+        the window is evaluated at submit/result/flush calls, not by a
+        background thread (0.0 therefore means "never let a request wait
+        behind a second submit").
+    pad_counts / pad_total:
+        Template padding policy (power-of-two slot counts / total).
     key_mode / backend / decode:
-        Threaded to ``executor.execute_bank``; ``decode=True`` (default)
-        returns decoded output values per request, else packed streams.
+        Threaded to the executor; ``decode=True`` (default) returns decoded
+        output values per request, else packed streams.
+    devices:
+        JAX devices to shard batches across (default: all of
+        ``jax.devices()``).  Run CPU tests with
+        ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` to get
+        several host devices.
+    max_inflight:
+        Per-device cap on concurrently in-flight batches (JAX async
+        dispatch).  ``0`` degenerates to the synchronous flush-and-wait
+        engine of PR-4: every batch blocks before the next dispatch.
+    placement:
+        ``"affinity"`` (default) prefers devices already warm for the
+        batch's member layout, spilling to the least-loaded cold device when
+        the warm ones are busy; ``"round_robin"`` cycles; ``"least_loaded"``
+        picks the smallest in-flight queue.
+    donate:
+        Donate the per-batch key buffers to XLA (best-effort; see
+        ``executor.execute_bank``).
 
     Results are bit-identical per request to standalone
     ``executor.execute[_value]`` with the same key — see module docstring.
@@ -227,9 +320,15 @@ class BankServer:
                  window_s: "float | None" = None,
                  pad_counts: bool = True, pad_total: bool = True,
                  key_mode: str | None = None, backend: str | None = None,
-                 decode: bool = True):
+                 decode: bool = True,
+                 devices: "list | None" = None, max_inflight: int = 2,
+                 placement: str = "affinity", donate: bool = False):
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
+        if max_inflight < 0:
+            raise ValueError("max_inflight must be >= 0")
+        if placement not in _PLACEMENTS:
+            raise ValueError(f"placement must be one of {_PLACEMENTS}")
         self.max_slots = max_slots
         self.window_s = window_s
         self.pad_counts = pad_counts
@@ -237,35 +336,52 @@ class BankServer:
         self.key_mode = key_mode
         self.backend = backend
         self.decode = decode
+        self.devices = tuple(devices) if devices is not None \
+            else tuple(jax.devices())
+        if not self.devices:
+            raise ValueError("need at least one device")
+        self.max_inflight = max_inflight
+        self.placement = placement
+        self.donate = donate
+        # jax's own default placement: when a batch lands here anyway,
+        # skipping the explicit commit avoids the committed-argument
+        # bookkeeping jit pays per input leaf (measurably slower than the
+        # uncommitted fast path, for an identical outcome).
+        self._default_device = jax.devices()[0]
         self._queue: "list[_Pending]" = []
-        # Both maps are LRU-bounded: heterogeneous traffic mints new plan
-        # tuples / exec signatures indefinitely, and the memo's strong
-        # template references must not defeat plan.py's bank-cache cap.
+        self._staged: "list[_Batch]" = []
+        self._inflight: "dict[Any, deque[_Batch]]" = \
+            {d: deque() for d in self.devices}
+        self._rr = 0
+        self._held = False
+        self._busy_since: "float | None" = None
+        # All three maps are LRU-bounded: heterogeneous traffic mints new
+        # plan tuples / exec signatures indefinitely, and strong references
+        # here must not defeat plan.py's bank-cache cap.
         self._seen_signatures: OrderedDict = OrderedDict()
-        # Canonical plan tuple -> compiled template: front-runs the plan-level
-        # bank cache (which must hash member tuples) with an id-keyed lookup.
-        self._template_memo: OrderedDict = OrderedDict()
+        # Canonical plan tuple -> padded member layout (plain tuple, cheap):
+        # the compiled per-device bank comes from plan.compile_bank_members'
+        # own cache at dispatch time.
+        self._layout_memo: OrderedDict = OrderedDict()
+        # Member layout -> set of devices that have executed it (jit warm).
+        self._warm: OrderedDict = OrderedDict()
         self._stats = BankServerStats()
+        self._dev_stats = {d: {"n_batches": 0, "n_requests": 0}
+                           for d in self.devices}
 
     # ------------------------------ admission ------------------------------------
 
     def submit(self, req: SCRequest) -> Ticket:
-        """Admit one request; may trigger a flush per the batching policy."""
+        """Admit one request; returns immediately with a :class:`Ticket`.
+
+        Batch formation/dispatch runs opportunistically inside the call
+        (there is no background thread), but dispatched work proceeds
+        asynchronously on its device."""
         if req.bitflip_rate > 0.0 and req.flip_key is None:
             raise ValueError("bitflip_rate > 0 requires flip_key")
         ticket = Ticket(self)
-        self._queue.append(_Pending(req, ticket))
-        group = self._group_key(req)
-        n_group = sum(1 for p in self._queue
-                      if self._group_key(p.req) == group)
-        if n_group >= self.max_slots:
-            # Only the group that filled launches — other groups keep
-            # accumulating toward their own max_slots/window triggers.
-            self._flush_group(group)
-        elif self.window_s is not None and self._queue:
-            if time.perf_counter() - self._queue[0].ticket.submitted_at \
-                    >= self.window_s:
-                self.flush()
+        self._queue.append(_Pending(req, ticket, self._shape_sig(req)))
+        self._pump()
         return ticket
 
     def serve(self, requests: "list[SCRequest]") -> list:
@@ -274,23 +390,56 @@ class BankServer:
         self.flush()
         return [t.result() for t in tickets]
 
+    def hold(self) -> None:
+        """Pause dispatch: batches still form and stage (and keep accepting
+        continuous-batching joins) but do not launch until ``release()`` or
+        an explicit ``flush()``."""
+        self._held = True
+
+    def release(self) -> None:
+        """Resume dispatch after :meth:`hold`."""
+        self._held = False
+        self._pump()
+
     def flush(self) -> int:
-        """Drain the admission queue; returns the number of batches run."""
-        n_batches = 0
-        while self._queue:
-            self._flush_group(self._group_key(self._queue[0].req))
-            n_batches += 1
-        return n_batches
+        """Form and dispatch everything queued; returns batches dispatched.
 
-    def _flush_group(self, group: tuple) -> None:
-        """Execute one batch of up to ``max_slots`` requests of ``group``."""
-        take = [p for p in self._queue
-                if self._group_key(p.req) == group][:self.max_slots]
-        taken = set(map(id, take))
-        self._queue = [p for p in self._queue if id(p) not in taken]
-        self._execute_batch(take)
+        Does NOT block on results — tickets resolve to async arrays and
+        ``Ticket.result()`` performs the wait.  Dispatches even while
+        ``hold()`` is in effect."""
+        n0 = self._stats.n_batches
+        self._reap()
+        self._join_staged()
+        self._form_all()
+        while self._staged:
+            batch = self._staged.pop(0)
+            device = self._pick_device(batch)
+            while device is None:
+                # Every device is at max_inflight: retire the oldest
+                # in-flight batch to free a slot, then place.
+                oldest = min((dq[0] for dq in self._inflight.values() if dq),
+                             key=lambda b: b.dispatched_at)
+                self._finalize(oldest)
+                device = self._pick_device(batch)
+            self._launch(batch, device)
+        return self._stats.n_batches - n0
 
-    # ------------------------------ execution ------------------------------------
+    # ------------------------------ scheduling -----------------------------------
+
+    def _pump(self) -> None:
+        """One scheduler step: reap ready work, join queued requests into
+        staged batches, form newly-triggered batches, dispatch while device
+        capacity allows.  Called at submit/release boundaries."""
+        self._reap()
+        self._join_staged()
+        if self.window_s is not None and self._queue and \
+                time.perf_counter() - self._queue[0].ticket.submitted_at \
+                >= self.window_s:
+            self._form_all()
+        else:
+            self._form_triggered()
+        if not self._held:
+            self._dispatch_staged()
 
     @staticmethod
     def _group_key(req: SCRequest) -> tuple:
@@ -299,101 +448,269 @@ class BankServer:
 
     @staticmethod
     def _shape_sig(req: SCRequest) -> tuple:
-        vs = tuple(sorted((k, tuple(jax.numpy.shape(v)))
-                          for k, v in req.values.items()))
-        # Encode "no declared batch shape" as a comparable value: signatures
-        # are sort keys, and None does not order against tuples.
-        if req.batch_shape is None:
-            return ((False, ()), vs)
-        return ((True, tuple(req.batch_shape)), vs)
+        # Computed once per request (eagerly by SCRequest, lazily here for
+        # plain ExecRequests) — the per-leaf walk is measurable at high
+        # admission rates.
+        sig = getattr(req, "_layout_sig", None)
+        if sig is None:
+            sig = _layout_sig_of(req)
+            try:
+                req._layout_sig = sig
+            except AttributeError:
+                pass
+        return sig
 
-    def _execute_batch(self, pendings: "list[_Pending]") -> None:
-        t0 = time.perf_counter()
-        bl, rate = self._group_key(pendings[0].req)
-        fuse = rate == 0.0
-        plans = [compile_plan(p.req.net,
-                              fuse_mux=fuse or p.req.net.is_sequential)
-                 for p in pendings]
+    def _plan_of(self, req: SCRequest, rate: float):
+        return compile_plan(req.net,
+                            fuse_mux=rate == 0.0 or req.net.is_sequential)
+
+    def _form_triggered(self) -> None:
+        # A group that accumulates max_slots waiting requests launches alone —
+        # other groups keep building toward their own triggers.
+        while True:
+            counts: "dict[tuple, int]" = defaultdict(int)
+            trigger = None
+            for p in self._queue:
+                g = self._group_key(p.req)
+                counts[g] += 1
+                if counts[g] >= self.max_slots:
+                    trigger = g
+                    break
+            if trigger is None:
+                return
+            self._form_group(trigger)
+
+    def _form_all(self) -> None:
+        while self._queue:
+            self._form_group(self._group_key(self._queue[0].req))
+
+    def _form_group(self, group: tuple) -> None:
+        take = [p for p in self._queue
+                if self._group_key(p.req) == group][:self.max_slots]
+        taken = set(map(id, take))
+        self._queue = [p for p in self._queue if id(p) not in taken]
+        self._staged.append(self._make_batch(group, take))
+
+    def _make_batch(self, group: tuple, take: "list[_Pending]") -> _Batch:
+        rate = group[1]
+        plans = [self._plan_of(p.req, rate) for p in take]
         # Canonical request order (plan serial, then value shapes): identical
         # traffic mixes bind identically, so the jit signature repeats even
         # when arrival order shuffles.
-        sigs = [self._shape_sig(p.req) for p in pendings]
-        order = sorted(range(len(pendings)),
-                       key=lambda i: (plans[i].serial, sigs[i]))
+        order = sorted(range(len(take)),
+                       key=lambda i: (plans[i].serial, take[i].sig))
         ordered_plans = tuple(plans[i] for i in order)
-        template = self._template_memo.get(ordered_plans)
-        if template is None:
-            template = compile_bank_template(list(ordered_plans),
+        members = self._layout_memo.get(ordered_plans)
+        if members is None:
+            members = tuple(template_members(list(ordered_plans),
                                              pad_counts=self.pad_counts,
-                                             pad_total=self.pad_total)
-            self._template_memo[ordered_plans] = template
-            while len(self._template_memo) > _TEMPLATE_MEMO_CAP:
-                self._template_memo.popitem(last=False)
+                                             pad_total=self.pad_total))
+            self._layout_memo[ordered_plans] = members
+            while len(self._layout_memo) > _TEMPLATE_MEMO_CAP:
+                self._layout_memo.popitem(last=False)
         else:
-            self._template_memo.move_to_end(ordered_plans)
+            self._layout_memo.move_to_end(ordered_plans)
+        batch = _Batch(group, members)
+        for i in order:
+            bound = batch.bind(take[i], plans[i])
+            assert bound, "canonical member layout must fit its own batch"
+        return batch
 
-        free: "dict[int, deque]" = defaultdict(deque)
-        for s, m in enumerate(template.members):
-            free[id(m)].append(s)
-        n = template.n_members
-        dummy_key = pendings[0].req.key
-        fk0 = pendings[0].req.flip_key
-        values_seq: list = [{} for _ in range(n)]
-        key_rows: list = [dummy_key] * n
-        flip_rows: list = [fk0 if fk0 is not None else dummy_key] * n
-        batch_shapes: list = [None] * n
-        active = [False] * n
-        slot_of: "dict[int, int]" = {}                  # request idx -> slot
-        for ri in order:
-            req = pendings[ri].req
-            s = free[id(plans[ri])].popleft()
-            slot_of[ri] = s
-            values_seq[s] = req.values
-            key_rows[s] = req.key
-            batch_shapes[s] = req.batch_shape
-            active[s] = True
-            if rate > 0.0:
-                flip_rows[s] = req.flip_key
+    def _join_staged(self) -> None:
+        """Continuous batching: bind queued requests into free padding slots
+        of staged (formed, not yet dispatched) batches of the same group."""
+        if not self._queue or not self._staged:
+            return
+        keep: "list[_Pending]" = []
+        for p in self._queue:
+            g = self._group_key(p.req)
+            plan = None
+            for b in self._staged:
+                if b.group != g:
+                    continue
+                if plan is None:
+                    plan = self._plan_of(p.req, g[1])
+                if b.bind(p, plan):
+                    self._stats.joined_requests += 1
+                    break
+            else:
+                keep.append(p)
+        self._queue = keep
 
-        # template.serial (a monotone build stamp) — never id(), which can
-        # alias a garbage-collected template after cache eviction and
-        # misreport cold batches as bucket hits.
-        signature = (template.serial, bl, rate, tuple(active),
-                     tuple(sigs[i] for i in order))
+    # ------------------------------ placement ------------------------------------
+
+    def _capacity(self, device) -> bool:
+        # max_inflight == 0 is the synchronous mode: each launch blocks, so
+        # every device is always free by the time placement runs.
+        return self.max_inflight == 0 or \
+            len(self._inflight[device]) < self.max_inflight
+
+    def _pick_device(self, batch: _Batch):
+        """A device with in-flight capacity for ``batch``, or None."""
+        devs = self.devices
+        if len(devs) == 1:
+            return devs[0] if self._capacity(devs[0]) else None
+        if self.placement == "round_robin":
+            for k in range(len(devs)):
+                d = devs[(self._rr + k) % len(devs)]
+                if self._capacity(d):
+                    self._rr = (self._rr + k + 1) % len(devs)
+                    return d
+            return None
+        cands = [d for d in devs if self._capacity(d)]
+        if not cands:
+            return None
+        if self.placement == "affinity":
+            warm = self._warm.get(batch.members)
+            warm_free = [d for d in cands if warm and d in warm]
+            if warm_free:
+                cands = warm_free
+        return min(cands, key=lambda d: (len(self._inflight[d]),
+                                         devs.index(d)))
+
+    # ------------------------------ execution ------------------------------------
+
+    def _dispatch_staged(self) -> None:
+        while self._staged:
+            device = self._pick_device(self._staged[0])
+            if device is None:
+                return
+            self._launch(self._staged.pop(0), device)
+
+    def _launch(self, batch: _Batch, device) -> None:
+        """Dispatch one batch asynchronously; resolve its tickets.
+
+        Dispatch-time failures (bad request values, trace errors) fail every
+        ticket in the batch immediately; device-side failures surface at
+        finalize/``result()``."""
+        bl, rate = batch.group
+        multi = len(self.devices) > 1
+        # Per-device template scope partitions the bank cache so each
+        # device's jit executable stays keyed to its own bank identity.
+        bank = compile_bank_members(batch.members,
+                                    scope=device if multi else None)
+        n = bank.n_members
+        slot_reqs: "list[SCRequest | None]" = [None] * n
+        for p, s in zip(batch.pendings, batch.slots):
+            slot_reqs[s] = p.req
+        active = [r is not None for r in slot_reqs]
+        shared = ExecOptions(backend=self.backend, key_mode=self.key_mode,
+                             bitstream_length=bl, bitflip_rate=rate,
+                             decode=self.decode)
+        sig_order = sorted(range(len(batch.pendings)),
+                           key=lambda i: batch.slots[i])
+        signature = (bank.serial, bl, rate, tuple(active),
+                     tuple(batch.pendings[i].sig for i in sig_order))
         hit = signature in self._seen_signatures
         self._seen_signatures[signature] = None
         self._seen_signatures.move_to_end(signature)
         while len(self._seen_signatures) > _SIGNATURE_CAP:
             self._seen_signatures.popitem(last=False)
 
-        outs = executor.execute_bank(
-            template, values_seq, _stack_keys(key_rows), bl, active=active,
-            bitflip_rate=rate,
-            flip_keys=_stack_keys(flip_rows) if rate > 0.0 else None,
-            backend=self.backend, key_mode=self.key_mode,
-            batch_shapes=batch_shapes, decode=self.decode)
-        jax.block_until_ready([outs[s] for s in slot_of.values()])
-        t_done = time.perf_counter()
-
-        for ri, s in slot_of.items():
-            pendings[ri].ticket._fulfil(outs[s], t_done)
+        t0 = time.perf_counter()
         st = self._stats
-        st.n_requests += len(pendings)
+        st.n_requests += len(batch.pendings)
         st.n_batches += 1
         st.bucket_hits += int(hit)
         st.bucket_misses += int(not hit)
         st.slots_total += n
-        st.active_slots += len(pendings)
-        st.identity_slots += template.n_identity_members
-        st.exec_s += t_done - t0
-        st.latencies_s.extend(p.ticket.latency_s for p in pendings)
+        st.active_slots += len(batch.pendings)
+        st.identity_slots += bank.n_identity_members
+        dev_arg = device if multi and device is not self._default_device \
+            else None
+        try:
+            outs = executor.run(slot_reqs, template=bank, active=active,
+                                device=dev_arg,
+                                donate=self.donate, options=shared)
+        except Exception as exc:
+            batch.finalized = True
+            for p in batch.pendings:
+                p.ticket._fail(exc)
+            return
+        batch.device = device
+        batch.dispatched_at = t0
+        batch.outs = [outs[s] for s in batch.slots]
+        for p, out in zip(batch.pendings, batch.outs):
+            p.ticket._fulfil(out, batch)
+        if self._busy_since is None:
+            self._busy_since = t0
+        self._inflight[device].append(batch)
+        warm = self._warm.setdefault(batch.members, set())
+        warm.add(device)
+        self._warm.move_to_end(batch.members)
+        while len(self._warm) > _TEMPLATE_MEMO_CAP:
+            self._warm.popitem(last=False)
+        ds = self._dev_stats[device]
+        ds["n_batches"] += 1
+        ds["n_requests"] += len(batch.pendings)
+        if self.max_inflight == 0:
+            self._finalize(batch)
+
+    def _reap(self) -> None:
+        """Retire in-flight batches whose results have landed (non-blocking)."""
+        for dq in self._inflight.values():
+            while dq and dq[0].ready():
+                self._finalize(dq[0])
+
+    def _finalize(self, batch: _Batch) -> None:
+        """Wait out one in-flight batch; record latencies or fail tickets."""
+        if batch.finalized:
+            return
+        batch.finalized = True
+        err: "BaseException | None" = None
+        try:
+            jax.block_until_ready(batch.outs)
+        except Exception as exc:
+            err = exc
+        t_done = time.perf_counter()
+        dq = self._inflight[batch.device]
+        try:
+            dq.remove(batch)
+        except ValueError:                      # pragma: no cover - safety
+            pass
+        if err is not None:
+            for p in batch.pendings:
+                p.ticket._fail(err)
+        else:
+            for p in batch.pendings:
+                p.ticket.latency_s = t_done - p.ticket.submitted_at
+            self._stats.latencies_s.extend(
+                p.ticket.latency_s for p in batch.pendings)
+        if self._busy_since is not None and \
+                not any(self._inflight.values()):
+            self._stats.exec_s += t_done - self._busy_since
+            self._busy_since = None
+
+    def _wait_batch(self, batch: _Batch, timeout: "float | None") -> None:
+        if batch.finalized:
+            return
+        if timeout is None:
+            self._finalize(batch)
+            return
+        deadline = time.perf_counter() + timeout
+        while not batch.ready():
+            now = time.perf_counter()
+            if now >= deadline:
+                raise TimeoutError(
+                    f"Ticket.result timed out after {timeout:g}s; batch of "
+                    f"{len(batch.pendings)} request(s) still in flight on "
+                    f"{batch.device}")
+            time.sleep(min(5e-4, deadline - now))
+        self._finalize(batch)
 
     # -------------------------------- stats --------------------------------------
 
     def stats(self) -> dict:
-        return self._stats.as_dict()
+        d = self._stats.as_dict()
+        d["n_devices"] = len(self.devices)
+        d["devices"] = [{"device": str(dev), **dict(st)}
+                        for dev, st in self._dev_stats.items()]
+        return d
 
     def reset_stats(self) -> None:
         """Zero the counters; keeps the bucket/jit caches warm (for
         measuring steady-state serving after a warmup pass)."""
         self._stats = BankServerStats()
+        self._dev_stats = {d: {"n_batches": 0, "n_requests": 0}
+                           for d in self.devices}
+        self._busy_since = None

@@ -252,8 +252,11 @@ def test_batch_shapes_in_bank_matches_loop():
     values = [{"a": jnp.float32(0.3), "b": jnp.float32(0.7)},
               {"a": jnp.float32(0.6), "b": jnp.float32(0.2)}]
     keys = jax.random.split(KEY, 2)
-    merged = executor.execute_many(nets, values, keys, 512,
-                                   batch_shapes=[(4,), None])
+    merged = executor.run(
+        [executor.ExecRequest(nets[i], values[i], keys[i],
+                              executor.ExecOptions(bitstream_length=512,
+                                                   batch_shape=bs))
+         for i, bs in enumerate([(4,), None])])
     for i, shape in enumerate([(4, 16), (16,)]):
         assert merged[i]["out"].shape == shape
         ref = executor.execute(nets[i], values[i], keys[i], 512,
