@@ -24,10 +24,17 @@ The record also splits merged wall-clock into a stream-generation phase
 (``pass_ms = merged_ms - gen_ms``), so PR-over-PR perf work can see which
 phase moved.
 
+Each arch record also carries the Algorithm-1 *scheduled* cycle pricing
+(``schedule_cycles`` / ``looped_schedule_cycles``, from the ``Schedule`` the
+compiler pipeline attaches to every plan) and their ratio
+``schedule_speedup`` — named with the "speedup" substring so
+``check_regression.py`` auto-tracks it PR over PR.
+
 Output schema (written here and by benchmarks/run.py):
   {"bitstream_length", "n_members", "members", "key_mode", "looped_ms",
    "merged_ms", "gen_ms", "pass_ms", "speedup", "merged_passes",
-   "looped_passes", "arch_bank": {...}, "table3_banks": {app: {...}}}
+   "looped_passes", "arch_bank": {..., "schedule_cycles",
+   "schedule_speedup"}, "table3_banks": {app: {...}}}
 """
 from __future__ import annotations
 
@@ -76,11 +83,16 @@ def bank_members() -> tuple[list, list, list]:
 
 def _arch_record(bank, cfg) -> dict:
     c = arch.evaluate_bank_plan(bank, cfg)
+    # "schedule_speedup" keeps the *speedup* substring on purpose:
+    # check_regression.py auto-tracks speedup-named numeric fields.
     return {"n_members": c.n_members, "merged_passes": c.merged_passes,
             "looped_passes": c.looped_passes,
             "pipeline_factor": c.pipeline_factor,
             "merged_cycles": c.merged_cycles, "looped_cycles": c.looped_cycles,
-            "simd_speedup": round(c.simd_speedup, 2)}
+            "simd_speedup": round(c.simd_speedup, 2),
+            "schedule_cycles": c.schedule_cycles,
+            "looped_schedule_cycles": c.looped_schedule_cycles,
+            "schedule_speedup": round(c.schedule_speedup, 2)}
 
 
 def run(verbose: bool = True, smoke: bool = False) -> dict:

@@ -241,15 +241,42 @@ class BankPlanCost:
     active_passes: int = -1      # passes of an exact-fit merged bank
     padding_overhead_passes: int = 0
     padding_overhead_cycles: int = 0
+    #: Algorithm-1 scheduled cycles of the merged bank: the comb/seq group
+    #: plans' actual row/lane schedules (logic cycles + final read + SBG
+    #: input-initialization), pipelined and accumulated like merged_cycles.
+    #: Richer than the pass-count arithmetic above (which stays as-is — its
+    #: invariants are pinned): scheduling can overlap presets and must
+    #: serialize BUFF copies, so the two cycle counts legitimately differ.
+    schedule_cycles: int = 0
+    #: Same pricing for a per-active-member dispatch loop (each member's own
+    #: schedule + init, one accumulation hierarchy per dispatch).
+    looped_schedule_cycles: int = 0
 
     @property
     def simd_speedup(self) -> float:
         return self.looped_cycles / max(self.merged_cycles, 1)
 
     @property
+    def schedule_speedup(self) -> float:
+        """SIMD speedup per the Algorithm-1 schedules (vs raw pass counts)."""
+        return self.looped_schedule_cycles / max(self.schedule_cycles, 1)
+
+    @property
     def padding_overhead_frac(self) -> float:
         """Fraction of merged bank cycles spent on padded-slot passes."""
         return self.padding_overhead_cycles / max(self.merged_cycles, 1)
+
+
+def _plan_schedule_cycles(plan) -> int:
+    """Scheduled cycles of one emitted plan: Algorithm-1 logic cycles + final
+    read + SBG input initialization (``input_init_cycles`` reads only
+    ``plan.pis``, so it prices plans directly).  Falls back to the pass count
+    for hand-built plans that carry no schedule.
+    """
+    init = input_init_cycles(plan)
+    if plan.schedule is None:
+        return plan.n_passes + 1 + init
+    return plan.schedule.total_cycles(init)
 
 
 def evaluate_bank_plan(bank, cfg: StochIMCConfig,
@@ -298,6 +325,13 @@ def evaluate_bank_plan(bank, cfg: StochIMCConfig,
     looped = sum(m.n_passes for m in active_plans) * pipeline \
         + acc * len(active_plans)
     pad_passes = bank.n_passes - active_passes
+    # Schedule-based pricing: every plan the pipeline emits carries its
+    # Algorithm-1 Schedule, so the bank can be priced on the actual row/lane
+    # schedule (init cycles + intra-subarray parallelism) instead of raw
+    # pass counts.
+    merged_sched = sum(_plan_schedule_cycles(g)
+                       for g in (bank.comb, bank.seq) if g is not None)
+    looped_sched = sum(_plan_schedule_cycles(m) for m in active_plans)
     return BankPlanCost(
         n_members=bank.n_members,
         merged_passes=bank.n_passes,
@@ -310,6 +344,9 @@ def evaluate_bank_plan(bank, cfg: StochIMCConfig,
         active_passes=active_passes,
         padding_overhead_passes=pad_passes,
         padding_overhead_cycles=pad_passes * pipeline,
+        schedule_cycles=merged_sched * pipeline + acc,
+        looped_schedule_cycles=looped_sched * pipeline
+        + acc * len(active_plans),
     )
 
 
@@ -330,6 +367,9 @@ class MultiBankCost:
     serial_cycles: int           # single-bank server: sum over banks
     total_members: int
     total_active: int
+    #: Schedule-priced analogues (see BankPlanCost.schedule_cycles).
+    parallel_schedule_cycles: int = 0
+    serial_schedule_cycles: int = 0
 
     @property
     def n_banks(self) -> int:
@@ -382,6 +422,8 @@ def evaluate_multibank(banks, cfg: StochIMCConfig,
         serial_cycles=sum(c.merged_cycles for c in costs),
         total_members=sum(c.n_members for c in costs),
         total_active=sum(c.active_members for c in costs),
+        parallel_schedule_cycles=max(c.schedule_cycles for c in costs),
+        serial_schedule_cycles=sum(c.schedule_cycles for c in costs),
     )
 
 

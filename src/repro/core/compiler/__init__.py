@@ -1,0 +1,26 @@
+"""Staged compiler pipeline: Netlist -> ExecutionPlan / BankPlan.
+
+Layout:
+
+  * ``ir.py``       — typed lowering IR (CompiledOp, StreamTable,
+                      ExecutionPlan, BankPlan);
+  * ``stages.py``   — individual transformation stages (structural passes,
+                      leveling, the Algorithm-1 schedule stage);
+  * ``pipeline.py`` — the ``PassPipeline`` and its entry points
+                      (``lower_netlist``, ``merge_plans``, ``build_bank``).
+
+External code imports through the ``repro.core.plan`` facade (which adds the
+caching layer); importing this package's internals from outside ``repro.core``
+is banned by ruff TID251.
+"""
+from .ir import (FUSED_MUX, FUSED_XOR, IDENTITY_NAME, BankPlan, CompiledOp,
+                 ExecutionPlan, StreamTable, build_stream_table, member_prefix)
+from .pipeline import (DEFAULT_PIPELINE, Lowering, PassPipeline, build_bank,
+                       lower_netlist, merge_plans, next_serial)
+
+__all__ = [
+    "FUSED_MUX", "FUSED_XOR", "IDENTITY_NAME", "BankPlan", "CompiledOp",
+    "ExecutionPlan", "StreamTable", "build_stream_table", "member_prefix",
+    "DEFAULT_PIPELINE", "Lowering", "PassPipeline", "build_bank",
+    "lower_netlist", "merge_plans", "next_serial",
+]

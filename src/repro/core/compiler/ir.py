@@ -1,0 +1,235 @@
+"""Typed lowering IR shared by every compiler stage.
+
+The dataclasses here are the currency of the staged pipeline
+(``compiler/pipeline.py``): a ``Netlist`` lowers through working-gate and
+working-op forms (``compiler/stages.py``) into an ``ExecutionPlan`` — leveled,
+type-batched fused passes plus the plan's stream table, Algorithm-1 schedule,
+and optimization provenance counters.  ``BankPlan`` wraps N member plans
+merged for bank-level execution.
+
+Import surface: external code reaches these types through the
+``repro.core.plan`` facade; only ``repro.core`` internals import this module
+directly (enforced by the ruff TID251 ban).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from ..gates import PIKind, PrimaryInput
+
+# Fused 3-input scaled addition: out = (a & s) | (b & ~s).  Not a 2T-1MTJ
+# primitive — it exists only at the plan level (and as packed_logic's "mux").
+FUSED_MUX = "MUX3"
+# Fused 2-input XOR: out = a ^ b, recognized from its 4-NAND netlist form.
+# Like MUX3, a plan-level op only (packed_logic's "xor").
+FUSED_XOR = "XOR"
+
+_OP_ARITY = {"MUX3": 3, "XOR": 2}
+
+# Gate types whose input order is semantically irrelevant — their CSE key is
+# order-canonicalized so NAND(a,b) and NAND(b,a) intern to one pass.
+_COMMUTATIVE = {"AND", "NAND", "OR", "NOR", "XOR",
+                "MAJ3", "NMAJ3", "MAJ5", "NMAJ5"}
+
+#: Name of the no-op padding member (see ``plan.identity_plan``).
+IDENTITY_NAME = "__pad__"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class CompiledOp:
+    """One fused pass: all same-type gates of one level, batched.
+
+    ``inputs[j][i]`` is the node feeding input position ``j`` of the i-th
+    batched gate; ``outputs[i]`` its output node; ``gids[i]`` the originating
+    gate id (used to key per-gate fault-injection streams).  For ``MUX3``,
+    ``gids[i]`` is the id of the root NAND of the fused 4-gate group.
+
+    ``neg[j]`` complements input position ``j`` of every batched gate before
+    the base op is applied — how absorbed lone NOT gates survive inside their
+    consuming pass (``()`` means no complemented inputs).  Gates only batch
+    with same-(op, neg) peers, so the mask is pass-wide.
+    """
+
+    op: str
+    gids: tuple[int, ...]
+    inputs: tuple[tuple[str, ...], ...]   # arity x n_batched
+    outputs: tuple[str, ...]
+    neg: tuple[bool, ...] = ()            # per-input complement mask
+
+    @property
+    def n_batched(self) -> int:
+        return len(self.outputs)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamTable:
+    """Static layout of a plan's PI streams for one batched SNG pass.
+
+    Row ``i`` describes one non-state PI: its node name, where its value
+    comes from (``value_keys[i]`` into the caller's values dict, else
+    ``const_values[i]``), and its fixed key-lane index ``lanes[i]``.  Lanes
+    are assigned per plan — correlation groups (sorted by group name, members
+    in declaration order) take lanes ``0..n_groups-1`` with every member of a
+    group *sharing* its lane (shared uniforms => XOR decodes exact |a-b|),
+    then the uncorrelated singles take one fresh lane each in declaration
+    order.  The lane assignment mirrors the legacy per-PI key-split order, so
+    the two disciplines differ only in how randomness is derived, not in
+    which PI is "first".
+    """
+
+    names: tuple[str, ...]
+    value_keys: tuple[str | None, ...]
+    const_values: tuple[float | None, ...]
+    lanes: tuple[int, ...]
+    n_groups: int
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.names)
+
+
+def build_stream_table(pis) -> StreamTable:
+    """Lay out the stream table for a PI sequence (see ``StreamTable``)."""
+    groups: dict[str, list[PrimaryInput]] = {}
+    singles: list[PrimaryInput] = []
+    for pi in pis:
+        if pi.kind == PIKind.STATE:
+            continue
+        if pi.corr_group is not None:
+            groups.setdefault(pi.corr_group, []).append(pi)
+        else:
+            singles.append(pi)
+    rows: list[tuple[PrimaryInput, int]] = []
+    for g, (_, gpis) in enumerate(sorted(groups.items())):
+        rows.extend((pi, g) for pi in gpis)
+    rows.extend((pi, len(groups) + k) for k, pi in enumerate(singles))
+    return StreamTable(
+        names=tuple(pi.name for pi, _ in rows),
+        value_keys=tuple(pi.value_key for pi, _ in rows),
+        const_values=tuple(pi.const_value for pi, _ in rows),
+        lanes=tuple(lane for _, lane in rows),
+        n_groups=len(groups),
+    )
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ExecutionPlan:
+    """A netlist lowered to leveled, type-batched fused passes.
+
+    ``eq=False``: plans are interned in the structure-keyed cache, so
+    identity equality/hash is both correct and cheap as a jit static arg.
+
+    ``aliases`` maps every *observable* node (primary output / state driver)
+    elided by BUFF elision or CSE to the surviving node computing the
+    identical stream; the executor re-exposes them in its node environment.
+    Non-observable elided nodes need no alias — every use was rewritten to
+    the survivor at compile time.  ``stream_table`` is the batched SNG
+    layout of the plan's PI streams (see ``StreamTable``).
+
+    ``serial`` is a process-wide monotone compile stamp: it gives plans a
+    deterministic canonical order (bank templates sort members by it) without
+    hashing structures on the serving hot path.
+
+    ``schedule`` is the Algorithm-1 ``scheduler.Schedule`` of the plan's
+    fused passes (pipeline stage "schedule"): each pass maps to one SIMD
+    V_SL drive over the subarray, so ``schedule.logic_cycles`` prices the
+    plan's in-memory cycle cost with the paper's one-op-per-row rule and
+    ``scheduler.input_init_cycles(plan)`` its SBG input-initialization cost.
+    ``arch.evaluate_bank_plan`` consumes it for scheduled cycle pricing.
+    """
+
+    name: str
+    pis: tuple[PrimaryInput, ...]
+    n_gates: int                                  # original gate count
+    levels: tuple[tuple[CompiledOp, ...], ...]
+    outputs: tuple[str, ...]
+    state_pis: tuple[str, ...]
+    state_drivers: tuple[str, ...]
+    state_inits: tuple[float, ...]
+    fused: bool
+    n_fused_mux: int
+    stream_table: StreamTable
+    aliases: tuple[tuple[str, str], ...] = ()     # elided node -> survivor
+    n_fused_xor: int = 0
+    n_buff_elided: int = 0
+    n_cse_elided: int = 0
+    n_fused_and: int = 0
+    n_not_absorbed: int = 0
+    serial: int = -1
+    schedule: Any = None                          # scheduler.Schedule | None
+
+    @property
+    def is_sequential(self) -> bool:
+        return bool(self.state_pis)
+
+    @property
+    def is_identity(self) -> bool:
+        """True for the no-op padding member (no PIs, gates, or outputs)."""
+        return (not self.pis and not self.n_gates and not self.outputs
+                and not self.state_pis)
+
+    @property
+    def n_passes(self) -> int:
+        """Fused passes executed per evaluation (vs n_gates for the
+        interpreter) — the compile-time speedup headline."""
+        return sum(len(level) for level in self.levels)
+
+    @property
+    def n_elided(self) -> int:
+        """Nodes removed from the pass schedule by BUFF elision and CSE."""
+        return self.n_buff_elided + self.n_cse_elided
+
+    def stream_pi_names(self) -> tuple[str, ...]:
+        """Non-state PIs, in declaration order (the streams the executor
+        generates; state PIs are carried by the sequential scan)."""
+        return tuple(p.name for p in self.pis if p.kind != PIKind.STATE)
+
+
+def member_prefix(index: int) -> str:
+    """Node-namespace prefix for bank member ``index`` ("b3/out" etc.)."""
+    return f"b{index}/"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BankPlan:
+    """N member plans merged for bank-level execution.
+
+    Combinational members merge into one word-parallel plan (``comb``);
+    sequential members merge into one plan run as a single scan (``seq``) —
+    mixing them would re-execute combinational logic per bitstream bit.
+    ``comb_members`` / ``seq_members`` hold the caller-order member indices of
+    each group, in merge order (ascending), which is also the order of the
+    per-member flat fault-key blocks (see ``executor`` bank dispatch).
+    """
+
+    name: str
+    members: tuple[ExecutionPlan, ...]
+    comb: ExecutionPlan | None
+    seq: ExecutionPlan | None
+    comb_members: tuple[int, ...]
+    seq_members: tuple[int, ...]
+    #: Process-wide monotone build stamp (like ExecutionPlan.serial): a
+    #: stable identity token that — unlike id() — can never alias a
+    #: garbage-collected bank after cache eviction.
+    serial: int = -1
+
+    @property
+    def n_members(self) -> int:
+        return len(self.members)
+
+    @property
+    def n_identity_members(self) -> int:
+        """Slots filled by the no-op identity padding plan."""
+        return sum(1 for m in self.members if m.is_identity)
+
+    @property
+    def n_passes(self) -> int:
+        """Fused passes per bank-wide evaluation (the merged headline)."""
+        return (self.comb.n_passes if self.comb else 0) + \
+               (self.seq.n_passes if self.seq else 0)
+
+    @property
+    def n_passes_looped(self) -> int:
+        """Passes a per-member dispatch loop would execute (the baseline)."""
+        return sum(m.n_passes for m in self.members)

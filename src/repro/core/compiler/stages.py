@@ -1,0 +1,412 @@
+"""Individual compiler stages: structural passes, leveling, scheduling.
+
+Every function here is one transformation step consumed by the staged
+``PassPipeline`` (``compiler/pipeline.py``).  The structural cleanups are all
+boolean identities, so optimized plans stay bit-identical to the reference
+interpreter; they are disabled together (``fuse=False``) when per-gate fault
+injection must observe every intermediate stream:
+
+  * **BUFF elision** — copy gates become node aliases (zero passes);
+  * **structural CSE** — same gate type over the same (resolved, order-
+    canonicalized for commutative types) inputs computes the same stream, so
+    duplicates alias the first occurrence;
+  * **pattern fusion** — the 4-gate stochastic scaled addition
+    ``NAND(NAND(a,s), NAND(b, NOT(s)))`` fuses to one MUX pass
+    ``(a & s) | (b & ~s)``, and the 4-NAND XOR form
+    ``NAND(NAND(a,n1), NAND(b,n1))`` with ``n1 = NAND(a,b)`` fuses to one
+    XOR pass (the |a-b| subtractor of Fig. 5(c));
+  * **NOT-directed cleanups** — ``NOT(NAND(a,b))`` folds to one fused AND
+    pass, and lone single-use NOTs absorb into their consuming pass via the
+    per-input ``neg`` mask.
+
+The **schedule stage** runs the paper's Algorithm 1 (``core/scheduler.py``)
+over the leveled passes: each fused pass is one SIMD gate spanning all rows
+(one V_SL drive pattern fires the same gate type across every column), so the
+resulting ``Schedule`` prices the plan's in-memory cycles — intra-subarray
+parallelism, preset overlap, and (via ``scheduler.input_init_cycles``) the
+SBG input-initialization cycles — instead of raw pass counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+from ..gates import ALL_ROWS, Netlist
+from ..scheduler import Schedule, schedule
+from .ir import _COMMUTATIVE, CompiledOp
+
+# ------------------------- pre-leveling optimization -------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _WGate:
+    """Working gate record during compilation (inputs already alias-resolved)."""
+
+    gid: int
+    gtype: str
+    inputs: tuple[str, ...]
+    output: str
+
+
+def _elide_and_cse(gates):
+    """BUFF elision + structural CSE over a topological gate list.
+
+    Returns ``(kept, alias, n_buff, n_cse)``.  BUFF gates become aliases to
+    their (resolved) input; a gate whose (type, resolved inputs) — input
+    order canonicalized for commutative types — matches an earlier survivor
+    aliases that survivor's output.  Both are exact stream identities: the
+    interpreter computes the same deterministic function at both sites, so
+    aliasing is bit-identical, not approximate.  Gates are visited in
+    construction (topological) order, so alias chains resolve in one pass.
+    """
+    alias: dict[str, str] = {}
+    seen: dict[tuple, str] = {}
+    kept: list[_WGate] = []
+    n_buff = n_cse = 0
+    for g in gates:
+        ins = tuple(alias.get(i, i) for i in g.inputs)
+        if g.gtype == "BUFF":
+            alias[g.output] = ins[0]
+            n_buff += 1
+            continue
+        key = (g.gtype, tuple(sorted(ins)) if g.gtype in _COMMUTATIVE else ins)
+        prev = seen.get(key)
+        if prev is not None:
+            alias[g.output] = prev
+            n_cse += 1
+            continue
+        seen[key] = g.output
+        kept.append(_WGate(g.gid, g.gtype, ins, g.output))
+    return kept, alias, n_buff, n_cse
+
+
+def _count_uses(gates) -> dict[str, int]:
+    uses: dict[str, int] = defaultdict(int)
+    for g in gates:
+        for i in g.inputs:
+            uses[i] += 1
+    return uses
+
+
+def _find_mux_fusions(
+        gates, protected: set[str],
+) -> tuple[dict[int, tuple[str, str, str]], set[int]]:
+    """Detect fusable 4-gate MUX groups over a working gate list.
+
+    Returns ``(roots, dead)``: ``roots`` maps the root NAND's gid to its
+    ``(a, b, s)`` operand nodes; ``dead`` holds gids of the three absorbed
+    feeder gates.  A feeder is absorbed only when its output has exactly one
+    use and is neither a primary output nor a state driver — otherwise the
+    intermediate stream is observable and must stay materialized.
+    """
+    driver = {g.output: g for g in gates}
+    uses = _count_uses(gates)
+
+    def absorbable(node: str) -> bool:
+        return uses[node] == 1 and node not in protected
+
+    roots: dict[int, tuple[str, str, str]] = {}
+    dead: set[int] = set()
+    for g in gates:
+        if g.gtype != "NAND" or g.gid in dead:
+            continue
+        g1 = driver.get(g.inputs[0])
+        g2 = driver.get(g.inputs[1])
+        if g1 is None or g2 is None or g1.gid == g2.gid:
+            continue
+        if g1.gtype != "NAND" or g2.gtype != "NAND":
+            continue
+        if {g1.gid, g2.gid} & dead:
+            continue
+        found = None
+        for x, y in ((g1, g2), (g2, g1)):
+            # y = NAND(b, sb) with sb = NOT(s), x = NAND(a, s).
+            for bi in (0, 1):
+                sb_gate = driver.get(y.inputs[1 - bi])
+                if sb_gate is None or sb_gate.gtype != "NOT" or sb_gate.gid in dead:
+                    continue
+                s = sb_gate.inputs[0]
+                if s not in x.inputs:
+                    continue
+                a = x.inputs[1] if x.inputs[0] == s else x.inputs[0]
+                b = y.inputs[bi]
+                if (absorbable(x.output) and absorbable(y.output)
+                        and absorbable(sb_gate.output)):
+                    found = (a, b, s, x.gid, y.gid, sb_gate.gid)
+                    break
+            if found:
+                break
+        if found:
+            a, b, s, xg, yg, sg = found
+            roots[g.gid] = (a, b, s)
+            dead.update((xg, yg, sg))
+    return roots, dead
+
+
+def _find_xor_fusions(gates, protected: set[str],
+                      dead: set[int]) -> dict[int, tuple[str, str]]:
+    """Detect the 4-NAND XOR form and fuse it to one XOR pass.
+
+    Pattern (Fig. 5(c)'s |a-b| subtractor): ``n1 = NAND(a, b)``;
+    ``root = NAND(NAND(a, n1), NAND(b, n1))`` computes ``a ^ b``.  The three
+    feeder NANDs are absorbed only when they are single-purpose — ``n1`` used
+    exactly by the two mid gates, each mid gate used only by the root, and
+    none of them observable (primary output / state driver).  Extends
+    ``dead`` in place; returns root gid -> (a, b).
+    """
+    driver = {g.output: g for g in gates}
+    uses = _count_uses(gates)
+    roots: dict[int, tuple[str, str]] = {}
+    for g in gates:
+        if g.gtype != "NAND" or g.gid in dead:
+            continue
+        x = driver.get(g.inputs[0])
+        y = driver.get(g.inputs[1])
+        if x is None or y is None or x.gid == y.gid:
+            continue
+        if x.gtype != "NAND" or y.gtype != "NAND":
+            continue
+        if {x.gid, y.gid} & dead:
+            continue
+        found = None
+        for c in x.inputs:                       # shared mid node candidate
+            if c not in y.inputs:
+                continue
+            n1 = driver.get(c)
+            if n1 is None or n1.gtype != "NAND" or n1.gid in dead:
+                continue
+            a = x.inputs[1] if x.inputs[0] == c else x.inputs[0]
+            b = y.inputs[1] if y.inputs[0] == c else y.inputs[0]
+            if a == b or set(n1.inputs) != {a, b}:
+                continue
+            if (uses[c] == 2 and uses[x.output] == 1 and uses[y.output] == 1
+                    and not {c, x.output, y.output} & protected):
+                found = (a, b, x.gid, y.gid, n1.gid)
+                break
+        if found:
+            a, b, xg, yg, ng = found
+            roots[g.gid] = (a, b)
+            dead.update((xg, yg, ng))
+    return roots
+
+
+@dataclasses.dataclass(frozen=True)
+class _WOp:
+    """Post-pattern-fusion working op (gate type or MUX3/XOR, + neg mask)."""
+
+    gid: int
+    op: str
+    inputs: tuple[str, ...]
+    neg: tuple[bool, ...]
+    output: str
+
+
+def _fold_ands(ops: "list[_WOp]", protected: set[str]) -> int:
+    """Fold ``NOT(NAND(a, b))`` pairs into one fused AND pass.
+
+    The 2T-1MTJ method has no AND primitive — stochastic multiplication is a
+    NAND feeding a NOT (two memory cycles) — but the plan level does: the
+    boolean identity ``NOT(NAND(a, b)) == AND(a, b)`` collapses the pair to
+    one pass whenever the intermediate NAND output is single-use and
+    unobservable.  The surviving op keeps the NOT's gid and output node (and
+    the NAND's neg mask, vacuously all-False at this stage).  Mutates ``ops``
+    in place; returns the number of folded pairs.
+    """
+    driver = {w.output: i for i, w in enumerate(ops)}
+    uses = _count_uses(ops)
+    dead: set[int] = set()
+    n = 0
+    for i, w in enumerate(ops):
+        if w.op != "NOT" or w.neg[0]:
+            continue
+        j = driver.get(w.inputs[0])
+        if j is None or j in dead:
+            continue
+        s = ops[j]
+        if s.op != "NAND" or uses[s.output] != 1 or s.output in protected:
+            continue
+        ops[i] = _WOp(w.gid, "AND", s.inputs, s.neg, w.output)
+        dead.add(j)
+        n += 1
+    if dead:
+        ops[:] = [w for i, w in enumerate(ops) if i not in dead]
+    return n
+
+
+def _absorb_nots(ops: "list[_WOp]", protected: set[str]) -> int:
+    """Fuse lone NOT gates into their consuming pass via the neg mask.
+
+    A NOT whose output has exactly one use and is unobservable disappears:
+    its consumer reads the NOT's *input* with the complement folded into the
+    pass (``CompiledOp.neg``) — an exact stream identity, one fewer pass.
+    Ops are visited in topological order, so NOT chains collapse step by step
+    (``NOT(NOT(x))`` absorbs to a plain ``x`` read).  Mutates ``ops`` in
+    place; returns the number of absorbed NOTs.
+    """
+    uses = _count_uses(ops)
+    consumers: dict[str, list[tuple[int, int]]] = defaultdict(list)
+    for i, w in enumerate(ops):
+        for p, nm in enumerate(w.inputs):
+            consumers[nm].append((i, p))
+    dead: set[int] = set()
+    n = 0
+    for i, w in enumerate(ops):
+        if w.op != "NOT" or i in dead:
+            continue
+        if w.output in protected or uses[w.output] != 1:
+            continue
+        (ci, pos), = consumers[w.output]
+        if ci in dead:
+            continue
+        c = ops[ci]
+        src = w.inputs[0]
+        ins = list(c.inputs)
+        ins[pos] = src
+        neg = list(c.neg)
+        # NOT with its own neg set is a double negation: absorbing it passes
+        # the source through uncomplemented.
+        neg[pos] = neg[pos] != (not w.neg[0])
+        ops[ci] = _WOp(c.gid, c.op, tuple(ins), tuple(neg), c.output)
+        consumers[src].append((ci, pos))
+        uses[src] += 1
+        dead.add(i)
+        n += 1
+    if dead:
+        ops[:] = [w for i, w in enumerate(ops) if i not in dead]
+    return n
+
+
+# --------------------------------- leveling ----------------------------------------
+
+def level_ops(ops: "list[_WOp]", pi_names) -> tuple:
+    """Longest-path leveling over the optimized op graph (PIs at level 0).
+
+    Ops batch within a level by (op, neg) — a complemented-input variant is
+    its own pass.  Returns the ``ExecutionPlan.levels`` tuple.
+    """
+    level: dict[str, int] = {name: 0 for name in pi_names}
+    by_level: dict[int, dict[tuple, list[tuple[int, tuple[str, ...], str]]]] = \
+        defaultdict(lambda: defaultdict(list))
+    for w in ops:
+        lvl = 1 + max(level[i] for i in w.inputs)
+        level[w.output] = lvl
+        neg = w.neg if any(w.neg) else ()
+        by_level[lvl][(w.op, neg)].append((w.gid, w.inputs, w.output))
+
+    levels = []
+    for lvl in sorted(by_level):
+        lvl_ops = []
+        for (op, neg), entries in by_level[lvl].items():
+            arity = len(entries[0][1])
+            lvl_ops.append(CompiledOp(
+                op=op,
+                gids=tuple(e[0] for e in entries),
+                inputs=tuple(tuple(e[1][j] for e in entries) for j in range(arity)),
+                outputs=tuple(e[2] for e in entries),
+                neg=neg,
+            ))
+        levels.append(tuple(lvl_ops))
+    return tuple(levels)
+
+
+# ------------------------------- schedule stage ------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _PassGate:
+    """Duck-typed gate for the pass-level scheduling view.
+
+    Bypasses ``gates.Gate``'s arity checks: a fused pass reads an arbitrary
+    number of source nodes and has the plan-level MUX3/XOR types.
+    """
+
+    gid: int
+    gtype: str
+    inputs: tuple[str, ...]
+    output: str
+    row: int = ALL_ROWS
+
+
+class _PassGraph:
+    """Netlist-shaped view of a plan's fused passes for Algorithm 1.
+
+    One scheduling gate per ``CompiledOp``: a fused pass is one SIMD V_SL
+    drive firing the same gate type in every occupied row/column of the
+    subarray (the paper's intra-subarray parallelism, generalized bank-wide
+    by cross-member type batching).  Dependencies are pass-to-pass: a pass
+    consuming any node another pass produced waits for it; PI reads anchor to
+    the plan's real ``PrimaryInput`` rows so ``input_init_cycles`` and the
+    PI-mapping step see the true input layout.
+
+    Implements exactly the ``scheduler.schedule`` surface: ``validate()``,
+    ``inverse_topological_order()``, ``pis``, ``gates``, ``name``.
+    """
+
+    def __init__(self, name: str, pis, levels) -> None:
+        self.name = name
+        self.pis = tuple(pis)
+        pi_names = {p.name for p in self.pis}
+        producer: dict[str, str] = {}
+        gates: list[_PassGate] = []
+        for lvl in levels:
+            for cop in lvl:
+                token = f"pass{len(gates)}"
+                deps: list[str] = []
+                seen: set[str] = set()
+                for col in cop.inputs:
+                    for nm in col:
+                        src = producer.get(nm, nm if nm in pi_names else None)
+                        if src is not None and src not in seen:
+                            seen.add(src)
+                            deps.append(src)
+                gates.append(_PassGate(len(gates), cop.op, tuple(deps), token))
+                for nm in cop.outputs:
+                    producer[nm] = token
+        self.gates = gates
+
+    def validate(self) -> None:
+        pass
+
+    def inverse_topological_order(self) -> dict[int, int]:
+        """Distance to the farthest sink, per gate id (list-scheduling rank)."""
+        consumers: dict[str, list[int]] = defaultdict(list)
+        for g in self.gates:
+            for i in g.inputs:
+                consumers[i].append(g.gid)
+        dist: dict[int, int] = {}
+        for g in reversed(self.gates):            # reverse topological order
+            outs = consumers.get(g.output, ())
+            dist[g.gid] = 1 + max((dist[c] for c in outs), default=0)
+        return dist
+
+
+#: Effectively-unbounded subarray limits for plan/bank scheduling: capacity
+#: judgement (does this bank fit an [n, m] configuration?) belongs to
+#: ``arch``, not the compile pipeline — a merged bank may legitimately need
+#: more columns than one physical subarray holds.
+_SCHED_LIMIT = 1 << 30
+
+
+def schedule_passes(name: str, pis, levels) -> Schedule:
+    """Run Algorithm 1 over the leveled passes (the pipeline schedule stage).
+
+    Every plan — single-netlist, merged-bank, padded-template member — gets a
+    ``Schedule`` whose ``logic_cycles`` reflect the one-logic-op-per-row rule
+    applied to its fused passes, with BUFF copies and placement accounted by
+    the real scheduler.  ``n_lanes=1``: lane scaling (bitstream bits, batch
+    instances) is applied by ``arch`` at pricing time.
+    """
+    return schedule(_PassGraph(name, pis, levels), n_lanes=1,
+                    r_available=_SCHED_LIMIT, c_available=_SCHED_LIMIT)
+
+
+# -------------------------------- signatures ---------------------------------------
+
+def signature(net: Netlist) -> tuple:
+    """Structural cache key of a netlist (PIs, gates, outputs, state)."""
+    return (
+        net.name,
+        tuple(net.pis),
+        tuple((g.gid, g.gtype, g.inputs, g.output) for g in net.gates),
+        tuple(net.outputs),
+        tuple(sorted((s, d, i) for s, (d, i) in net.state_bindings.items())),
+    )

@@ -1,0 +1,404 @@
+"""Request/options API and the ``run()`` entry point + historic shims.
+
+Top layer of the executor stack (``streams`` <- ``dispatch`` <-
+``exec_api`` <- the ``executor`` facade).  Defines the canonical request
+types (``ExecOptions``, ``ExecRequest``), the ``run()`` entry point over
+them, and the historic ``execute*`` functions as thin shims that build
+``ExecRequest``s and delegate to ``run()`` — outputs are bit-identical
+(pinned by tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any
+
+import jax
+
+from .dispatch import (_as_f32, _check_modes, _dispatch, _dispatch_binary,
+                       _dispatch_many, _execute_compiled,
+                       _normalize_batch_shapes, _normalize_keys, _stack_keys,
+                       execute_bank)
+from .gates import Netlist
+from .plan import BankPlan, ExecutionPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecOptions:
+    """Frozen execution options shared by every entry point.
+
+    ``backend`` / ``key_mode`` default (``None``) to the module defaults at
+    run time; ``flip_key`` is required when ``bitflip_rate > 0``;
+    ``batch_shape`` declares the stream batch shape when values alone cannot
+    (all-const stream PIs).  ``decode`` fuses the StoB decode into the
+    program (the ``execute_value`` behavior); ``binary`` runs the netlist on
+    packed binary test-vector words instead of stochastic streams (the
+    ``execute_binary`` behavior — ``values`` are then the operand bits and
+    the stream fields are ignored).
+    """
+
+    backend: str | None = None
+    key_mode: str | None = None
+    bitstream_length: int = 256
+    bitflip_rate: float = 0.0
+    flip_key: Any = None
+    batch_shape: "tuple[int, ...] | None" = None
+    decode: bool = False
+    binary: bool = False
+
+
+@dataclasses.dataclass
+class ExecRequest:
+    """One canonical execution request: circuit + values + key + options.
+
+    ``net`` is a ``Netlist`` or a prebuilt ``ExecutionPlan`` (compiled
+    backends only); ``values`` its PI values (operand bit words under
+    ``options.binary``); ``key`` the request's PRNG key — the bit-identity
+    anchor: a request produces the same output bits whether it runs
+    standalone, inside a merged bank, or bound to a padded template slot on
+    any device.  ``serve.SCRequest`` subclasses this with the serving
+    layer's flat constructor.
+    """
+
+    net: Any
+    values: dict[str, Any]
+    key: Any = None
+    options: ExecOptions = dataclasses.field(default_factory=ExecOptions)
+
+    # Flat views of the per-request option fields, so request consumers
+    # (serving engine, tests) need not reach through ``options`` for the
+    # fields every request carries.
+    @property
+    def bitstream_length(self) -> int:
+        return self.options.bitstream_length
+
+    @property
+    def batch_shape(self) -> "tuple[int, ...] | None":
+        return self.options.batch_shape
+
+    @property
+    def bitflip_rate(self) -> float:
+        return self.options.bitflip_rate
+
+    @property
+    def flip_key(self):
+        return self.options.flip_key
+
+
+# -------------------------------- shim API ----------------------------------------
+
+def execute(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
+            bitstream_length: int, bitflip_rate: float = 0.0,
+            flip_key: jax.Array | None = None,
+            backend: str | None = None, key_mode: str | None = None,
+            batch_shape: tuple[int, ...] | None = None) -> dict[str, jax.Array]:
+    """Execute a (possibly sequential) netlist; returns packed output streams.
+
+    ``bitflip_rate`` injects faults on the PI streams and on every gate
+    output stream (the paper injects at input/output nodes of the
+    arithmetic operations).  ``backend`` selects the execution engine (see
+    ``executor`` module docstring); all backends are bit-identical.
+    ``key_mode`` selects the stream-generation key discipline (``"batched"``
+    default — one fused SNG pass for all PI streams; ``"legacy"`` — one PRNG
+    split per stream, bit-exactly the pre-batching behavior); both backends
+    honor it identically.  ``batch_shape`` declares the stream batch shape
+    when it is not derivable from ``values`` (e.g. all stream PIs
+    const-valued).
+
+    Thin shim over ``run()``: builds one ``ExecRequest`` — bit-identical.
+    """
+    return run(ExecRequest(net, values, key, ExecOptions(
+        backend=backend, key_mode=key_mode,
+        bitstream_length=bitstream_length, bitflip_rate=bitflip_rate,
+        flip_key=flip_key, batch_shape=batch_shape)))
+
+
+def execute_value(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
+                  bitstream_length: int, bitflip_rate: float = 0.0,
+                  flip_key: jax.Array | None = None,
+                  backend: str | None = None, key_mode: str | None = None,
+                  batch_shape: tuple[int, ...] | None = None) -> dict[str, jax.Array]:
+    """Execute and decode each output stream to its unipolar value.
+
+    On the compiled backends the decode is fused into the execution program
+    (single dispatch per call).  Thin shim over ``run()``."""
+    return run(ExecRequest(net, values, key, ExecOptions(
+        backend=backend, key_mode=key_mode,
+        bitstream_length=bitstream_length, bitflip_rate=bitflip_rate,
+        flip_key=flip_key, batch_shape=batch_shape, decode=True)))
+
+
+def execute_binary(net: Netlist, operand_bits: dict[str, jax.Array],
+                   backend: str | None = None) -> dict[str, jax.Array]:
+    """Execute a binary netlist on packed test-vector words.
+
+    ``operand_bits`` maps PI names to uint32 words whose lane ``t`` is the
+    PI's value in test vector ``t``.  Constant PIs (const_value set) are
+    filled automatically.  Inverted-polarity storage (the Fig. 7(a) trick) is
+    applied by the *caller* via the netlist's value conventions.
+
+    Thin shim over ``run()`` (``options.binary``) — bit-identical.
+    """
+    return run(ExecRequest(net, dict(operand_bits), options=ExecOptions(
+        backend=backend, binary=True)))
+
+
+#: Legacy positional tail of execute_many/execute_value_many after
+#: (nets, values_seq); the *args/**kwargs shim reassembles it so the
+#: deprecated plural-kwarg spellings (keys=/batch_shapes=) can be detected.
+_MANY_TAIL = ("keys", "bitstream_length", "bitflip_rate", "flip_keys",
+              "backend", "key_mode", "batch_shapes")
+
+
+def _many_tail(fn_name: str, args: tuple, kwargs: dict) -> tuple:
+    for bad in ("keys", "batch_shapes"):
+        if bad in kwargs:
+            warnings.warn(
+                f"{fn_name}({bad}=...) is deprecated: build per-member "
+                f"ExecRequests (each carrying its own key / "
+                f"options.batch_shape) and call executor.run([...])",
+                DeprecationWarning, stacklevel=3)
+    if len(args) > len(_MANY_TAIL):
+        raise TypeError(f"{fn_name}: too many positional arguments")
+    params = dict(zip(_MANY_TAIL, args))
+    dup = sorted(set(params) & set(kwargs))
+    if dup:
+        raise TypeError(f"{fn_name}: got multiple values for {dup}")
+    params.update(kwargs)
+    unknown = sorted(set(params) - set(_MANY_TAIL))
+    if unknown:
+        raise TypeError(f"{fn_name}: unexpected keyword arguments {unknown}")
+    missing = sorted({"keys", "bitstream_length"} - set(params))
+    if missing:
+        raise TypeError(f"{fn_name}: missing required arguments {missing}")
+    return (params["keys"], params["bitstream_length"],
+            params.get("bitflip_rate", 0.0), params.get("flip_keys"),
+            params.get("backend"), params.get("key_mode"),
+            params.get("batch_shapes"))
+
+
+def _many_shim(fn_name: str, nets, values_seq, args, kwargs,
+               decode: bool) -> list:
+    """Shared execute_many/execute_value_many shim: build per-member
+    ``ExecRequest``s and delegate to ``run()`` — bit-identical to the legacy
+    plural-kwarg path (stacking per-member key rows reproduces the original
+    key array exactly)."""
+    (keys, bitstream_length, bitflip_rate, flip_keys, backend, key_mode,
+     batch_shapes) = _many_tail(fn_name, args, kwargs)
+    n = len(nets)
+    if n == 0:
+        raise ValueError("execute_many: need at least one netlist")
+    if len(values_seq) != n:
+        raise ValueError(f"values: got {len(values_seq)} for {n} netlists")
+    keys = _normalize_keys(keys, n)
+    batch_shapes = _normalize_batch_shapes(batch_shapes, n)
+    if bitflip_rate > 0.0:
+        if flip_keys is None:
+            raise ValueError("bitflip_rate > 0 requires flip_keys")
+        flip_keys = _normalize_keys(flip_keys, n, "flip_keys")
+    reqs = [ExecRequest(net, vals, keys[i], ExecOptions(
+                backend=backend, key_mode=key_mode,
+                bitstream_length=bitstream_length,
+                bitflip_rate=bitflip_rate,
+                flip_key=flip_keys[i] if bitflip_rate > 0.0 else None,
+                batch_shape=batch_shapes[i] if batch_shapes else None,
+                decode=decode))
+            for i, (net, vals) in enumerate(zip(nets, values_seq))]
+    return run(reqs)
+
+
+def execute_many(nets, values_seq, /, *args, **kwargs) -> list:
+    """Execute N (possibly different) netlists as ONE fused bank-level plan.
+
+    Legacy signature: ``execute_many(nets, values_seq, keys,
+    bitstream_length, bitflip_rate=0.0, flip_keys=None, backend=None,
+    key_mode=None, batch_shapes=None)``.
+
+    ``nets[i]`` runs with PI values ``values_seq[i]`` and PRNG key ``keys[i]``
+    (``keys`` may also be a single key, which is split N ways).  Returns one
+    packed-output dict per member, bit-identical to calling ``execute`` per
+    netlist with the same per-member keys and ``key_mode`` — the merged plan
+    batches same-type gates of each level *across* members (core/plan.py bank
+    merging), and in batched key mode all members' PI streams generate in one
+    fused SNG pass per distinct batch shape, so the whole bank runs in a
+    single jit dispatch instead of N.  Member batch shapes may differ
+    (``batch_shapes[i]`` declares member i's shape when its values alone
+    cannot, e.g. all-const stream PIs).  ``bitflip_rate`` injects per-member
+    faults keyed by ``flip_keys[i]`` (single key allowed, split N ways).
+
+    .. deprecated:: the plural-kwarg spellings ``keys=`` / ``batch_shapes=``
+       — build per-member ``ExecRequest``s and call ``run([...])`` instead;
+       this shim stays bit-identical but warns.
+    """
+    return _many_shim("execute_many", nets, values_seq, args, kwargs,
+                      decode=False)
+
+
+def execute_value_many(nets, values_seq, /, *args, **kwargs) -> list:
+    """``execute_many`` with the StoB decode fused into the same program.
+
+    Same legacy signature and deprecation notes as ``execute_many``.
+    """
+    return _many_shim("execute_value_many", nets, values_seq, args, kwargs,
+                      decode=True)
+
+
+# ------------------------------ run() entry point ---------------------------------
+
+_SHARED_OPTION_FIELDS = ("backend", "key_mode", "bitstream_length",
+                         "bitflip_rate", "decode", "binary")
+
+
+def _common_options(reqs: "list[ExecRequest]") -> ExecOptions:
+    """The options every request of a merged batch must agree on (per-slot
+    fields — key, flip_key, batch_shape, values — stay per request)."""
+    o0 = reqs[0].options
+    for r in reqs[1:]:
+        for f in _SHARED_OPTION_FIELDS:
+            if getattr(r.options, f) != getattr(o0, f):
+                raise ValueError(
+                    f"run: requests disagree on options.{f}: "
+                    f"{getattr(o0, f)!r} vs {getattr(r.options, f)!r} "
+                    f"(group requests by shared options, or pass options=)")
+    return o0
+
+
+def _run_one(req: ExecRequest, device=None,
+             options: ExecOptions | None = None):
+    o = options or req.options
+    if o.binary:
+        return _dispatch_binary(req.net, req.values, o.backend)
+    values, key, flip_key = req.values, req.key, o.flip_key
+    if device is not None:
+        # Commit only the key(s): jit places the program with its committed
+        # argument, and uncommitted values follow in one transfer (committing
+        # a values pytree leaf-by-leaf costs more than the dispatch).
+        key = jax.device_put(key, device)
+        if flip_key is not None:
+            flip_key = jax.device_put(flip_key, device)
+    if isinstance(req.net, ExecutionPlan):
+        backend, key_mode = _check_modes(o.backend, o.key_mode)
+        if backend == "reference":
+            raise ValueError("the reference backend interprets netlists; "
+                             "pass the Netlist, not its ExecutionPlan")
+        if o.bitflip_rate > 0.0 and flip_key is None:
+            raise ValueError("bitflip_rate > 0 requires flip_key")
+        batch_shape = (tuple(o.batch_shape)
+                       if o.batch_shape is not None else None)
+        values = {k: _as_f32(v) for k, v in values.items()}
+        return _execute_compiled(req.net, values, key, flip_key,
+                                 o.bitstream_length, float(o.bitflip_rate),
+                                 backend == "compiled_pallas", decode=o.decode,
+                                 key_mode=key_mode, batch_shape=batch_shape)
+    return _dispatch(req.net, values, key, o.bitstream_length,
+                     o.bitflip_rate, flip_key, o.backend, decode=o.decode,
+                     key_mode=o.key_mode, batch_shape=o.batch_shape)
+
+
+def _run_many(reqs: "list[ExecRequest]", device=None,
+              options: ExecOptions | None = None) -> list:
+    if not reqs:
+        raise ValueError("run: need at least one request")
+    shared = options or _common_options(reqs)
+    if shared.binary:
+        raise ValueError("run: binary requests execute one at a time")
+    for r in reqs:
+        if not isinstance(r.net, Netlist):
+            raise TypeError("run([...]) merges netlists into one bank; pass "
+                            "template= to execute a prebuilt BankPlan")
+    rate = float(shared.bitflip_rate)
+    flip_keys = None
+    if rate > 0.0:
+        flip_keys = [r.options.flip_key for r in reqs]
+        if any(fk is None for fk in flip_keys):
+            raise ValueError("bitflip_rate > 0 requires a flip_key on every "
+                             "request")
+    batch_shapes = [r.options.batch_shape for r in reqs]
+    if all(b is None for b in batch_shapes):
+        batch_shapes = None
+    values_seq = [r.values for r in reqs]
+    keys = [r.key for r in reqs]
+    if device is not None:
+        # Commit only the keys (see _run_one): the program follows them.
+        keys = jax.device_put(keys, device)
+        if flip_keys is not None:
+            flip_keys = jax.device_put(flip_keys, device)
+    return _dispatch_many([r.net for r in reqs], values_seq, keys,
+                          shared.bitstream_length, rate, flip_keys,
+                          shared.backend, shared.decode,
+                          key_mode=shared.key_mode,
+                          batch_shapes=batch_shapes)
+
+
+def _run_template(reqs, bank: BankPlan, active=None, device=None,
+                  donate: bool = False,
+                  options: ExecOptions | None = None) -> list:
+    """Slot-aligned template execution: ``reqs[i]`` feeds template slot ``i``
+    (``None`` = unbound slot, masked out)."""
+    n = bank.n_members
+    if len(reqs) != n:
+        raise ValueError(f"run: got {len(reqs)} slot requests for {n} slots")
+    bound = [(i, r) for i, r in enumerate(reqs) if r is not None]
+    if not bound:
+        raise ValueError("run: template batch needs at least one bound slot")
+    shared = options or _common_options([r for _, r in bound])
+    if shared.binary:
+        raise ValueError("run: binary requests execute one at a time")
+    rate = float(shared.bitflip_rate)
+    if active is None:
+        active = [r is not None for r in reqs]
+    # Placeholder rows for unbound slots: any same-impl key works (masked
+    # slots draw no streams); reusing the first bound key row unwraps once.
+    key0 = bound[0][1].key
+    fk0 = bound[0][1].options.flip_key
+    values_seq: list = [{} for _ in range(n)]
+    key_rows: list = [key0] * n
+    flip_rows: list = [fk0 if fk0 is not None else key0] * n
+    batch_shapes: list = [None] * n
+    for i, r in bound:
+        values_seq[i] = r.values
+        key_rows[i] = r.key
+        batch_shapes[i] = r.options.batch_shape
+        if rate > 0.0:
+            if r.options.flip_key is None:
+                raise ValueError("bitflip_rate > 0 requires a flip_key on "
+                                 "every request")
+            flip_rows[i] = r.options.flip_key
+    return execute_bank(
+        bank, values_seq, _stack_keys(key_rows), shared.bitstream_length,
+        active=active, bitflip_rate=rate,
+        flip_keys=_stack_keys(flip_rows) if rate > 0.0 else None,
+        backend=shared.backend, key_mode=shared.key_mode,
+        batch_shapes=batch_shapes, decode=shared.decode,
+        device=device, donate=donate)
+
+
+def run(request_or_requests, *, template: BankPlan | None = None,
+        active=None, device=None, donate: bool = False,
+        options: ExecOptions | None = None):
+    """Canonical execution entry point over ``ExecRequest``s.
+
+    * ``run(req)`` — execute one request (netlist or prebuilt plan);
+      returns its output dict (decoded when ``options.decode``).
+    * ``run([req, ...])`` — merge the requests' netlists into ONE fused
+      bank-level program (the ``execute_many`` path); returns one output
+      dict per request, bit-identical to running each alone.
+    * ``run(slot_reqs, template=bank)`` — bind slot-aligned requests
+      (``None`` = unbound) onto a padded bank template and execute with the
+      unbound slots masked; returns one entry per slot (``None`` where
+      unbound).  This is the serving engine's path.
+
+    Batch paths require the requests to agree on the shared option fields
+    (backend / key_mode / bitstream_length / bitflip_rate / decode); pass
+    ``options=`` to supply them explicitly instead (per-slot key, flip_key,
+    batch_shape and values always come from each request).  ``device``
+    commits the batch inputs to one JAX device before dispatch;
+    ``donate`` forwards to ``execute_bank`` (template path only).
+    """
+    if isinstance(request_or_requests, ExecRequest):
+        return _run_one(request_or_requests, device=device, options=options)
+    reqs = list(request_or_requests)
+    if template is not None:
+        return _run_template(reqs, template, active=active, device=device,
+                             donate=donate, options=options)
+    return _run_many(reqs, device=device, options=options)

@@ -1,4 +1,4 @@
-"""Netlist execution: compiled fused plans with a gate-by-gate reference.
+"""Netlist execution facade: compiled fused plans with a gate-by-gate reference.
 
 Bridges the structural view (circuits.py netlists, used for scheduling and
 cost) and the value view (sc_ops.py): every netlist can be *run* and its
@@ -8,8 +8,9 @@ circuits like the Gaines divider, and under injected bitflips (Table 4).
 
 Two backends share identical semantics (bit-for-bit):
 
-  * ``"compiled"`` (default): the netlist is lowered once by
-    ``core/plan.py`` into leveled, type-batched fused passes and executed by
+  * ``"compiled"`` (default): the netlist is lowered once by the staged
+    compiler pipeline (``core/compiler/``, fronted by ``core/plan.py``) into
+    leveled, type-batched fused passes and executed by
     ``kernels/netlist_exec.py`` inside a single jit — stream generation,
     logic, fault injection and state recurrence all in one XLA program.
     ``"compiled_pallas"`` additionally routes each fused pass through the
@@ -36,1206 +37,38 @@ bank template (the serving path — ``device=`` places the batch on a specific
 JAX device, ``donate=`` consumes the engine-owned key rows).  The historic
 ``execute*`` functions remain as thin shims that build ``ExecRequest``s and
 delegate to ``run()``; outputs are bit-identical (pinned by tests).
+
+This module is a *facade*: the implementation is layered as
+
+  * ``core/streams.py``  — PI stream generation (both key disciplines);
+  * ``core/dispatch.py`` — jit boundary, value packing/normalization, bank
+    execution, the reference interpreter;
+  * ``core/exec_api.py`` — ``ExecOptions``/``ExecRequest``, ``run()``, and
+    the historic ``execute*`` shims.
+
+Every name importable from here before the split still is.
 """
 from __future__ import annotations
 
-import dataclasses
-import warnings
-from functools import partial
-from typing import Any
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from . import bitstream as bs
-from . import sc_ops
-from .gates import Netlist, PIKind
-from .plan import (BankPlan, ExecutionPlan, StreamTable, build_stream_table,
-                   compile_bank_plan, compile_plan, member_prefix)
-
-#: Default backend for execute()/execute_value()/execute_binary().
-DEFAULT_BACKEND = "compiled"
-
-_BACKENDS = ("compiled", "compiled_pallas", "reference")
-
-#: Default key discipline for PI-stream generation (see ``_gen_pi_streams``).
-DEFAULT_KEY_MODE = "batched"
-
-_KEY_MODES = ("batched", "legacy")
-
-
-# ------------------------------ request API ---------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class ExecOptions:
-    """Frozen execution options shared by every entry point.
-
-    ``backend`` / ``key_mode`` default (``None``) to the module defaults at
-    run time; ``flip_key`` is required when ``bitflip_rate > 0``;
-    ``batch_shape`` declares the stream batch shape when values alone cannot
-    (all-const stream PIs).  ``decode`` fuses the StoB decode into the
-    program (the ``execute_value`` behavior); ``binary`` runs the netlist on
-    packed binary test-vector words instead of stochastic streams (the
-    ``execute_binary`` behavior — ``values`` are then the operand bits and
-    the stream fields are ignored).
-    """
-
-    backend: str | None = None
-    key_mode: str | None = None
-    bitstream_length: int = 256
-    bitflip_rate: float = 0.0
-    flip_key: Any = None
-    batch_shape: "tuple[int, ...] | None" = None
-    decode: bool = False
-    binary: bool = False
-
-
-@dataclasses.dataclass
-class ExecRequest:
-    """One canonical execution request: circuit + values + key + options.
-
-    ``net`` is a ``Netlist`` or a prebuilt ``ExecutionPlan`` (compiled
-    backends only); ``values`` its PI values (operand bit words under
-    ``options.binary``); ``key`` the request's PRNG key — the bit-identity
-    anchor: a request produces the same output bits whether it runs
-    standalone, inside a merged bank, or bound to a padded template slot on
-    any device.  ``serve.SCRequest`` subclasses this with the serving
-    layer's flat constructor.
-    """
-
-    net: Any
-    values: dict[str, Any]
-    key: Any = None
-    options: ExecOptions = dataclasses.field(default_factory=ExecOptions)
-
-    # Flat views of the per-request option fields, so request consumers
-    # (serving engine, tests) need not reach through ``options`` for the
-    # fields every request carries.
-    @property
-    def bitstream_length(self) -> int:
-        return self.options.bitstream_length
-
-    @property
-    def batch_shape(self) -> "tuple[int, ...] | None":
-        return self.options.batch_shape
-
-    @property
-    def bitflip_rate(self) -> float:
-        return self.options.bitflip_rate
-
-    @property
-    def flip_key(self):
-        return self.options.flip_key
-
-
-def _pi_shape(values: dict[str, jax.Array],
-              batch_shape: tuple[int, ...] | None) -> tuple[int, ...]:
-    """Common broadcast shape of the PI streams.
-
-    Derived from the supplied values AND the caller-declared ``batch_shape``
-    — so a netlist whose stream PIs are all const-valued (empty ``values``)
-    can still generate batched streams for batched downstream use instead of
-    silently falling back to scalar shape ``()``.
-    """
-    shapes = [jnp.shape(jnp.asarray(v)) for v in values.values()]
-    if batch_shape is not None:
-        shapes.append(tuple(batch_shape))
-    return jnp.broadcast_shapes(*shapes) if shapes else ()
-
-
-def _stack_table_values(table: StreamTable, values: dict[str, jax.Array],
-                        shape: tuple[int, ...]) -> jax.Array:
-    """Stack the stream table's row values into one (n_rows, *shape) tensor."""
-    rows = []
-    for vk, const in zip(table.value_keys, table.const_values):
-        v = values[vk] if vk is not None else const
-        rows.append(jnp.broadcast_to(jnp.asarray(v, jnp.float32), shape))
-    return jnp.stack(rows)
-
-
-def _gen_pi_streams(pis, values: dict[str, jax.Array], key: jax.Array,
-                    bitstream_length: int, key_mode: str = DEFAULT_KEY_MODE,
-                    batch_shape: tuple[int, ...] | None = None,
-                    use_pallas: bool = False,
-                    table: StreamTable | None = None) -> dict[str, jax.Array]:
-    """Generate packed streams for every PI, honoring correlation groups and
-    independent-copy indices.  ``pis`` is any sequence of PrimaryInput.
-
-    ``key_mode`` selects the key discipline (identical for every backend, so
-    reference and compiled stay bit-for-bit interchangeable):
-
-      * ``"batched"`` (default): ONE fused threshold+pack pass generates all
-        streams from the plan's stream table (``bs.generate_batch``) —
-        correlation groups share a key lane, singles get one lane each.
-      * ``"legacy"``: one PRNG split per correlation group / single PI, one
-        ``bs.generate*`` dispatch each — bit-exactly the pre-batching
-        behavior, kept for reproducibility pins.
-
-    The two modes differ bit-wise but are statistically equivalent (same
-    Bernoulli marginals, same correlation structure).
-    """
-    shape = _pi_shape(values, batch_shape)
-    if key_mode == "batched":
-        if table is None:
-            table = build_stream_table(pis)
-        if not table.names:
-            return {}
-        ps = _stack_table_values(table, values, shape)
-        words = bs.generate_batch(key, ps, bitstream_length,
-                                  lanes=jnp.asarray(table.lanes, jnp.uint32),
-                                  use_pallas=use_pallas)
-        return {name: words[i] for i, name in enumerate(table.names)}
-    if key_mode != "legacy":
-        raise ValueError(f"unknown key_mode {key_mode!r}; "
-                         f"expected one of {_KEY_MODES}")
-
-    streams: dict[str, jax.Array] = {}
-
-    # Correlated groups share underlying uniforms.
-    groups: dict[str, list] = {}
-    singles: list = []
-    for pi in pis:
-        if pi.kind == PIKind.STATE:
-            continue
-        if pi.corr_group is not None:
-            groups.setdefault(pi.corr_group, []).append(pi)
-        else:
-            singles.append(pi)
-
-    n_keys = len(groups) + len(singles)
-    keys = jax.random.split(key, max(n_keys, 1))
-    ki = 0
-    for gname, gpis in sorted(groups.items()):
-        vals = []
-        for pi in gpis:
-            v = values[pi.value_key] if pi.value_key else pi.const_value
-            vals.append(jnp.broadcast_to(jnp.asarray(v, jnp.float32), shape))
-        outs = bs.generate_correlated(keys[ki], vals, bitstream_length)
-        ki += 1
-        for pi, o in zip(gpis, outs):
-            streams[pi.name] = o
-    for pi in singles:
-        v = values[pi.value_key] if pi.value_key is not None else pi.const_value
-        v = jnp.broadcast_to(jnp.asarray(v, jnp.float32), shape)
-        streams[pi.name] = bs.generate(keys[ki], v, bitstream_length)
-        ki += 1
-    return streams
-
-
-# ------------------------------ compiled backend ----------------------------------
-
-@partial(jax.jit, static_argnames=("plan", "bitstream_length", "bitflip_rate",
-                                   "use_pallas", "decode", "key_mode",
-                                   "batch_shape"))
-def _execute_compiled(plan: ExecutionPlan, values: dict[str, jax.Array],
-                      key: jax.Array, flip_key, bitstream_length: int,
-                      bitflip_rate: float, use_pallas: bool,
-                      decode: bool = False,
-                      key_mode: str = DEFAULT_KEY_MODE,
-                      batch_shape: tuple[int, ...] | None = None) -> dict[str, jax.Array]:
-    """Whole-netlist execution as one XLA program.
-
-    Mirrors the reference interpreter's key discipline exactly (whatever the
-    ``key_mode``): one fkey per sorted PI stream, then one per gate id
-    (combinational) / per sorted output (sequential).  ``decode=True`` folds
-    the StoB popcount decode into the same program (used by execute_value),
-    leaving one dispatch per call.  In batched key mode the PI streams come
-    from ONE fused SNG pass over the plan's stream table — generation, logic,
-    fault injection and decode are all one XLA program either way.
-    """
-    from ..kernels import netlist_exec
-
-    streams = _gen_pi_streams(plan.pis, values, key, bitstream_length,
-                              key_mode=key_mode, batch_shape=batch_shape,
-                              use_pallas=use_pallas, table=plan.stream_table)
-
-    gate_fkeys = None
-    if bitflip_rate > 0.0:
-        fkeys = jax.random.split(flip_key, len(streams) + plan.n_gates)
-        for i, name in enumerate(sorted(streams)):
-            streams[name] = sc_ops.flip_bits(fkeys[i], streams[name], bitflip_rate)
-        gate_fkeys = fkeys[len(streams):]
-
-    if not plan.is_sequential:
-        env = dict(streams)
-        netlist_exec.run_combinational(plan, env, gate_fkeys=gate_fkeys,
-                                       bitflip_rate=bitflip_rate,
-                                       use_pallas=use_pallas)
-        packed_outs = {o: env[o] for o in plan.outputs}
-    else:
-        packed_outs = netlist_exec.run_sequential(
-            plan, streams, use_pallas=use_pallas,
-            n_words=bs.n_words(bitstream_length))
-        if bitflip_rate > 0.0:
-            for i, o in enumerate(sorted(packed_outs)):
-                packed_outs[o] = sc_ops.flip_bits(gate_fkeys[i], packed_outs[o],
-                                                  bitflip_rate)
-    if decode:
-        return {o: bs.to_value(w, bitstream_length)
-                for o, w in packed_outs.items()}
-    return packed_outs
-
-
-def _binary_env(pis, operand_bits: dict[str, jax.Array]) -> dict[str, jax.Array]:
-    """PI env for a binary netlist: supplied operands + const-PI fills."""
-    env: dict[str, jax.Array] = {}
-    shape = next(iter(operand_bits.values())).shape
-    for pi in pis:
-        if pi.name in operand_bits:
-            env[pi.name] = operand_bits[pi.name]
-        elif pi.const_value is not None:
-            c = float(pi.const_value)
-            if c == 0.0:
-                fill = jnp.uint32(0)
-            elif c == 1.0:
-                fill = jnp.uint32(0xFFFFFFFF)
-            else:
-                # A binary constant cell holds one bit; flooring 0 < c < 1 to
-                # an all-zeros word would silently miscompute.
-                raise ValueError(
-                    f"binary PI {pi.name}: const_value must be 0.0 or 1.0, "
-                    f"got {pi.const_value}")
-            env[pi.name] = jnp.full(shape, fill)
-        else:
-            raise KeyError(f"missing binary operand {pi.name}")
-    return env
-
-
-@partial(jax.jit, static_argnames=("plan", "use_pallas"))
-def _execute_binary_compiled(plan: ExecutionPlan,
-                             operand_bits: dict[str, jax.Array],
-                             use_pallas: bool) -> dict[str, jax.Array]:
-    from ..kernels import netlist_exec
-
-    env = _binary_env(plan.pis, operand_bits)
-    netlist_exec.run_combinational(plan, env, use_pallas=use_pallas)
-    return {o: env[o] for o in plan.outputs}
-
-
-def _plan_for(net: Netlist, bitflip_rate: float) -> ExecutionPlan:
-    # Per-gate fault injection must observe the 4-gate MUX intermediates, so
-    # the fused plan is only valid for clean combinational runs; sequential
-    # runs inject at PI/output streams only (like the reference) and may fuse.
-    fuse = bitflip_rate == 0.0 or net.is_sequential
-    return compile_plan(net, fuse_mux=fuse)
-
-
-# -------------------------------- public API --------------------------------------
-
-def _check_modes(backend: str | None, key_mode: str | None) -> tuple[str, str]:
-    backend = backend or DEFAULT_BACKEND
-    if backend not in _BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; expected one of {_BACKENDS}")
-    key_mode = key_mode or DEFAULT_KEY_MODE
-    if key_mode not in _KEY_MODES:
-        raise ValueError(f"unknown key_mode {key_mode!r}; "
-                         f"expected one of {_KEY_MODES}")
-    return backend, key_mode
-
-
-def _dispatch(net: Netlist, values, key, bitstream_length: int,
-              bitflip_rate: float, flip_key, backend: str | None,
-              decode: bool, key_mode: str | None = None,
-              batch_shape: tuple[int, ...] | None = None) -> dict[str, jax.Array]:
-    backend, key_mode = _check_modes(backend, key_mode)
-    if batch_shape is not None:
-        batch_shape = tuple(batch_shape)   # hashable for the jit static arg
-    if bitflip_rate > 0.0 and flip_key is None:
-        raise ValueError("bitflip_rate > 0 requires flip_key")
-    if backend == "reference":
-        outs = _execute_reference(net, values, key, bitstream_length,
-                                  bitflip_rate, flip_key, key_mode=key_mode,
-                                  batch_shape=batch_shape)
-        if decode:
-            outs = {k: bs.to_value(v, bitstream_length) for k, v in outs.items()}
-        return outs
-    plan = _plan_for(net, bitflip_rate)
-    values = {k: jnp.asarray(v, jnp.float32) for k, v in values.items()}
-    return _execute_compiled(plan, values, key, flip_key, bitstream_length,
-                             float(bitflip_rate),
-                             backend == "compiled_pallas", decode=decode,
-                             key_mode=key_mode, batch_shape=batch_shape)
-
-
-def execute(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
-            bitstream_length: int, bitflip_rate: float = 0.0,
-            flip_key: jax.Array | None = None,
-            backend: str | None = None, key_mode: str | None = None,
-            batch_shape: tuple[int, ...] | None = None) -> dict[str, jax.Array]:
-    """Execute a (possibly sequential) netlist; returns packed output streams.
-
-    ``bitflip_rate`` injects faults on the PI streams and on every gate
-    output stream (the paper injects at input/output nodes of the
-    arithmetic operations).  ``backend`` selects the execution engine (see
-    module docstring); all backends are bit-identical.  ``key_mode`` selects
-    the stream-generation key discipline (``"batched"`` default — one fused
-    SNG pass for all PI streams; ``"legacy"`` — one PRNG split per stream,
-    bit-exactly the pre-batching behavior); both backends honor it
-    identically.  ``batch_shape`` declares the stream batch shape when it is
-    not derivable from ``values`` (e.g. all stream PIs const-valued).
-
-    Thin shim over ``run()``: builds one ``ExecRequest`` — bit-identical.
-    """
-    return run(ExecRequest(net, values, key, ExecOptions(
-        backend=backend, key_mode=key_mode,
-        bitstream_length=bitstream_length, bitflip_rate=bitflip_rate,
-        flip_key=flip_key, batch_shape=batch_shape)))
-
-
-def execute_value(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
-                  bitstream_length: int, bitflip_rate: float = 0.0,
-                  flip_key: jax.Array | None = None,
-                  backend: str | None = None, key_mode: str | None = None,
-                  batch_shape: tuple[int, ...] | None = None) -> dict[str, jax.Array]:
-    """Execute and decode each output stream to its unipolar value.
-
-    On the compiled backends the decode is fused into the execution program
-    (single dispatch per call).  Thin shim over ``run()``."""
-    return run(ExecRequest(net, values, key, ExecOptions(
-        backend=backend, key_mode=key_mode,
-        bitstream_length=bitstream_length, bitflip_rate=bitflip_rate,
-        flip_key=flip_key, batch_shape=batch_shape, decode=True)))
-
-
-def _dispatch_binary(net: Netlist, operand_bits: dict[str, jax.Array],
-                     backend: str | None) -> dict[str, jax.Array]:
-    backend = backend or DEFAULT_BACKEND
-    if backend not in _BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; expected one of {_BACKENDS}")
-    if backend == "reference":
-        env = _binary_env(net.pis, operand_bits)
-        for g in net.gates:
-            env[g.output] = bs.GATE_FNS[g.gtype](*[env[i] for i in g.inputs])
-        return {o: env[o] for o in net.outputs}
-    plan = compile_plan(net, fuse_mux=True)
-    return _execute_binary_compiled(plan, dict(operand_bits),
-                                    backend == "compiled_pallas")
-
-
-def execute_binary(net: Netlist, operand_bits: dict[str, jax.Array],
-                   backend: str | None = None) -> dict[str, jax.Array]:
-    """Execute a binary netlist on packed test-vector words.
-
-    ``operand_bits`` maps PI names to uint32 words whose lane ``t`` is the
-    PI's value in test vector ``t``.  Constant PIs (const_value set) are
-    filled automatically.  Inverted-polarity storage (the Fig. 7(a) trick) is
-    applied by the *caller* via the netlist's value conventions.
-
-    Thin shim over ``run()`` (``options.binary``) — bit-identical.
-    """
-    return run(ExecRequest(net, dict(operand_bits), options=ExecOptions(
-        backend=backend, binary=True)))
-
-
-# ----------------------------- bank-level execution -------------------------------
-
-def _restrict(x: jax.Array, batch: tuple[int, ...]) -> jax.Array:
-    """Undo a broadcast: restrict ``x`` of shape (*common, W) to (*batch, W).
-
-    Exact, not approximate: a merged member's nodes only ever combine
-    elementwise with that member's own (broadcast) streams, so the restricted
-    entries equal the member's native computation bit for bit.
-    """
-    want = len(batch) + 1
-    if x.ndim == want and x.shape[:-1] == batch:
-        return x
-    x = x[(0,) * (x.ndim - want)]
-    for ax, d in enumerate(batch):
-        if d == 1 and x.shape[ax] != 1:
-            x = jax.lax.slice_in_dim(x, 0, 1, axis=ax)
-    return x
-
-
-def _gen_bank_streams(bank: BankPlan, values_seq, keys, bitstream_length: int,
-                      key_mode: str, use_pallas: bool,
-                      batch_shapes, active=None) -> list[dict[str, jax.Array]]:
-    """Per-member PI streams for a whole bank (list indexed by member).
-
-    Batched key mode is the paper's bulk BtoS pass bank-wide: every member's
-    stream-table rows stack into ONE threshold tensor per distinct batch
-    shape and generate in one fused SNG pass — instead of one dispatch per
-    PI per member.  Each row's randomness is keyed by (member key, fixed
-    key-lane index), independent of the stacking, so a merged run stays
-    bit-identical to a loop of per-member ``execute`` calls in the same mode.
-
-    ``active`` (None = all) masks padded template slots: inactive members
-    contribute NO rows to the fused SNG pass — their PI streams are zero
-    words (value-0.0 constants, nearly free), just enough to keep the merged
-    logic passes well-formed.  Active members' streams are untouched by the
-    masking, so padded execution stays bit-identical per bound slot.
-    """
-    n = bank.n_members
-    streams: list[dict[str, jax.Array]] = [{} for _ in range(n)]
-    w = bs.n_words(bitstream_length)
-
-    def masked(i: int) -> bool:
-        return active is not None and not active[i]
-
-    def zero_fill(i: int) -> dict[str, jax.Array]:
-        return {nm: jnp.zeros((w,), jnp.uint32)
-                for nm in bank.members[i].stream_table.names}
-
-    if key_mode != "batched":
-        for i, plan in enumerate(bank.members):
-            if masked(i):
-                streams[i] = zero_fill(i)
-                continue
-            streams[i] = _gen_pi_streams(
-                plan.pis, values_seq[i], keys[i], bitstream_length,
-                key_mode=key_mode,
-                batch_shape=batch_shapes[i] if batch_shapes else None)
-        return streams
-
-    # Group member tables by broadcast shape; one fused SNG pass per shape.
-    buckets: dict[tuple[int, ...], list[tuple[int, jax.Array, jax.Array]]] = {}
-    for i, plan in enumerate(bank.members):
-        table = plan.stream_table
-        if not table.names:
-            continue
-        if masked(i):
-            streams[i] = zero_fill(i)
-            continue
-        shape = _pi_shape(values_seq[i],
-                          batch_shapes[i] if batch_shapes else None)
-        ps = _stack_table_values(table, values_seq[i], shape)
-        seeds = bs.stream_row_seeds(keys[i],
-                                    jnp.asarray(table.lanes, jnp.uint32))
-        buckets.setdefault(shape, []).append((i, ps, seeds))
-    for entries in buckets.values():
-        ps = jnp.concatenate([e[1] for e in entries])
-        seeds = jnp.concatenate([e[2] for e in entries])
-        words = bs.generate_batch_seeded(seeds, ps, bitstream_length,
-                                         use_pallas=use_pallas)
-        off = 0
-        for i, ps_i, _ in entries:
-            names = bank.members[i].stream_table.names
-            for k, nm in enumerate(names):
-                streams[i][nm] = words[off + k]
-            off += len(names)
-    return streams
-
-
-@partial(jax.jit, static_argnames=("bank", "bitstream_length", "key_mode",
-                                   "use_pallas", "batch_shapes", "active"))
-def _generate_bank_streams_jit(bank: BankPlan, values_seq, keys,
-                               bitstream_length: int, key_mode: str,
-                               use_pallas: bool, batch_shapes, active=None):
-    return _gen_bank_streams(bank, values_seq, keys, bitstream_length,
-                             key_mode, use_pallas, batch_shapes, active=active)
-
-
-def generate_bank_streams(bank: BankPlan, values_seq, keys,
-                          bitstream_length: int,
-                          key_mode: str = DEFAULT_KEY_MODE,
-                          use_pallas: bool = False, batch_shapes=None,
-                          active=None):
-    """Generate (only) every member's PI streams — no logic passes.
-
-    The stream-generation phase of ``_execute_bank`` as its own jitted entry
-    point, used by the benchmarks to split bank wall-clock into gen vs pass
-    time.  Accepts the same calling convention as ``execute_many`` (``keys``
-    may be one key, split N ways; ``batch_shapes`` entries may be any
-    sequence; ``active`` masks padded template slots down to zero-word
-    fills).  Returns one ``{pi_name: packed words}`` dict per member.
-    """
-    values_seq = tuple(values_seq)
-    if len(values_seq) != bank.n_members:
-        raise ValueError(f"values: got {len(values_seq)} for "
-                         f"{bank.n_members} members")
-    keys = _normalize_keys(keys, bank.n_members)
-    batch_shapes = _normalize_batch_shapes(batch_shapes, bank.n_members,
-                                           "members")
-    active = _normalize_active(active, bank.n_members)
-    return _generate_bank_streams_jit(bank, values_seq, keys,
-                                      bitstream_length, key_mode, use_pallas,
-                                      batch_shapes, active)
-
-
-def _execute_bank_impl(bank: BankPlan, values_seq, keys, flip_keys,
-                       bitstream_length: int, bitflip_rate: float,
-                       use_pallas: bool, decode: bool,
-                       key_mode: str = DEFAULT_KEY_MODE, batch_shapes=None,
-                       active=None, scalar_names=None):
-    """Whole-bank execution of N member netlists as one XLA program.
-
-    Stream generation and fault keying stay *per member*: member ``i``'s
-    streams are drawn from ``keys[i]`` / ``flip_keys[i]`` exactly as a
-    standalone ``execute`` call (same ``key_mode``) would draw them, so a
-    merged run is bit-identical to a loop of per-member runs.  The logic
-    merges — all combinational members execute through one merged plan
-    (cross-member type-batched levels), all sequential members through one
-    merged scan — and in batched key mode the stream generation merges too
-    (one fused SNG pass per distinct member batch shape).
-
-    ``active`` (static; None = all) is the padded-template slot mask: an
-    inactive slot generates no real streams (zero-word fills), skips fault
-    injection on its streams, and returns ``None`` instead of outputs.  Its
-    *gate fault-key block* is still allocated when injecting — the merged
-    plan's flat gid offsets cover every member — so active slots see exactly
-    the keys a standalone run would.
-    """
-    from ..kernels import netlist_exec
-
-    if scalar_names is not None:
-        # Packed-slot layout (see execute_bank): slot i's host-scalar PI
-        # values arrive as one f32 vector; rebuild the per-name dict at
-        # trace time.  The unpack slices are free after fusion, and the jit
-        # boundary sees one leaf per slot instead of one per PI.
-        packed_seq, rest_seq = values_seq
-        values_seq = tuple(
-            {**{nm: packed_seq[i][j]
-                for j, nm in enumerate(scalar_names[i])}, **rest_seq[i]}
-            for i in range(len(scalar_names)))
-
-    comb_env: dict[str, jax.Array] = {}
-    seq_words: dict[str, jax.Array] = {}
-    comb_gate_fkeys: list[jax.Array] = []
-    seq_out_fkeys: dict[int, jax.Array | None] = {}
-    native_batch: dict[int, tuple[int, ...]] = {}
-    member_streams = _gen_bank_streams(bank, values_seq, keys,
-                                       bitstream_length, key_mode, use_pallas,
-                                       batch_shapes, active=active)
-    for i, plan in enumerate(bank.members):
-        pre = member_prefix(i)
-        streams = member_streams[i]
-        masked = active is not None and not active[i]
-        tail = None
-        if bitflip_rate > 0.0 and len(streams) + plan.n_gates > 0:
-            fkeys = jax.random.split(flip_keys[i], len(streams) + plan.n_gates)
-            if not masked:
-                for j, nm in enumerate(sorted(streams)):
-                    streams[nm] = sc_ops.flip_bits(fkeys[j], streams[nm],
-                                                   bitflip_rate)
-            tail = fkeys[len(streams):]
-        native_batch[i] = (next(iter(streams.values())).shape[:-1]
-                           if streams else ())
-        target = seq_words if plan.is_sequential else comb_env
-        for nm, v in streams.items():
-            target[pre + nm] = v
-        if plan.is_sequential:
-            seq_out_fkeys[i] = tail
-        elif tail is not None:
-            # Flat per-gate key blocks in merge (= ascending member) order:
-            # the merged plan's gids are offset to index this concatenation.
-            comb_gate_fkeys.append(tail)
-
-    outs: list = [None] * bank.n_members
-    if bank.comb is not None:
-        gf = jnp.concatenate(comb_gate_fkeys) if comb_gate_fkeys else None
-        netlist_exec.run_combinational(bank.comb, comb_env, gate_fkeys=gf,
-                                       bitflip_rate=bitflip_rate,
-                                       use_pallas=use_pallas)
-        for i in bank.comb_members:
-            if active is not None and not active[i]:
-                continue
-            pre = member_prefix(i)
-            outs[i] = {o: comb_env[pre + o] for o in bank.members[i].outputs}
-    if bank.seq is not None:
-        packed = netlist_exec.run_sequential(
-            bank.seq, seq_words, use_pallas=use_pallas,
-            n_words=bs.n_words(bitstream_length))
-        for i in bank.seq_members:
-            if active is not None and not active[i]:
-                continue
-            pre = member_prefix(i)
-            m = {o: _restrict(packed[pre + o], native_batch[i])
-                 for o in bank.members[i].outputs}
-            if bitflip_rate > 0.0:
-                tail = seq_out_fkeys[i]
-                for j, o in enumerate(sorted(m)):
-                    m[o] = sc_ops.flip_bits(tail[j], m[o], bitflip_rate)
-            outs[i] = m
-    if decode:
-        outs = [m if m is None else
-                {o: bs.to_value(w, bitstream_length) for o, w in m.items()}
-                for m in outs]
-    return tuple(outs)
-
-
-_BANK_STATIC = ("bank", "bitstream_length", "bitflip_rate", "use_pallas",
-                "decode", "key_mode", "batch_shapes", "active",
-                "scalar_names")
-_execute_bank = partial(jax.jit, static_argnames=_BANK_STATIC)(
-    _execute_bank_impl)
-#: Donating variant (its own jit cache): XLA reuses the stacked key rows'
-#: buffers (argnums 2/3).  Only safe when the caller owns those arrays and
-#: never reads them after the call — the serve engine's per-batch stacks.
-#: Slot *values* are never donated: they may alias caller-held request
-#: arrays.
-_execute_bank_donating = partial(jax.jit, static_argnames=_BANK_STATIC,
-                                 donate_argnums=(2, 3))(_execute_bank_impl)
-
-
-#: type -> "is a jax.Array subclass" memo: ``isinstance(v, jax.Array)`` goes
-#: through ABC registration machinery, which shows up at bank-dispatch rates
-#: (thousands of value leaves per batch).
-_IS_JAX_ARRAY: dict = {}
-
-
-def _as_f32(v) -> jax.Array:
-    """asarray(v, float32), skipping the (surprisingly costly) conversion
-    machinery on the serving hot path when the caller already holds f32."""
-    t = type(v)
-    is_jax = _IS_JAX_ARRAY.get(t)
-    if is_jax is None:
-        is_jax = _IS_JAX_ARRAY.setdefault(t, isinstance(v, jax.Array))
-    if is_jax and v.dtype == jnp.float32:
-        return v
-    return jnp.asarray(v, jnp.float32)
-
-
-def _is_host_scalar(v) -> bool:
-    t = type(v)
-    is_jax = _IS_JAX_ARRAY.get(t)
-    if is_jax is None:
-        is_jax = _IS_JAX_ARRAY.setdefault(t, isinstance(v, jax.Array))
-    return not is_jax and np.ndim(v) == 0
-
-
-def _pack_values_seq(values_seq):
-    """Slot-packed jit layout for bank dispatch: ``(packed, rest), names``.
-
-    Each slot's *host scalar* PI values (python/numpy scalars — the serving
-    admission format) collapse into one f32 vector, so the jit boundary
-    flattens/transfers one leaf per slot instead of one per PI (a LIT slot
-    alone carries 81).  ``names[i]`` records slot i's packed PI names in
-    sorted order (a static jit argument); `_execute_bank_impl` rebuilds the
-    dicts at trace time.  jax-array leaves are NOT packed — pulling them
-    back to host would force a device sync — and flow through ``rest``
-    unchanged, as do non-scalar (batched) values.
-    """
-    packed, rest, names = [], [], []
-    for vals in values_seq:
-        s = sorted(k for k, v in vals.items() if _is_host_scalar(v))
-        names.append(tuple(s))
-        packed.append(np.asarray([vals[k] for k in s], np.float32))
-        if len(s) == len(vals):
-            rest.append({})
-        else:
-            sset = set(s)
-            rest.append({k: _as_f32(v) for k, v in vals.items()
-                         if k not in sset})
-    return (tuple(packed), tuple(rest)), tuple(names)
-
-
-def _normalize_batch_shapes(batch_shapes, n: int, what: str = "netlists"):
-    """Coerce per-member batch shapes to a hashable tuple-of-tuples (jit
-    static arg) and validate the member count; None passes through."""
-    if batch_shapes is None:
-        return None
-    batch_shapes = tuple(tuple(b) if b is not None else None
-                         for b in batch_shapes)
-    if len(batch_shapes) != n:
-        raise ValueError(
-            f"batch_shapes: got {len(batch_shapes)} for {n} {what}")
-    return batch_shapes
-
-
-def _normalize_active(active, n: int):
-    """Coerce a slot-active mask to a hashable bool tuple (jit static arg).
-
-    ``None`` and all-True both normalize to ``None`` — a fully-bound bank
-    must share its jit trace with the mask-free ``execute_many`` path.
-    """
-    if active is None:
-        return None
-    active = tuple(bool(a) for a in active)
-    if len(active) != n:
-        raise ValueError(f"active: got {len(active)} for {n} slots")
-    return None if all(active) else active
-
-
-def _normalize_keys(keys, n: int, what: str = "keys") -> jax.Array:
-    """Accept one key (split n ways), a key array, or a sequence of keys.
-
-    Returns a stacked (n,) key array — members index it *inside* the jitted
-    program, so the per-member key slicing costs no host dispatches.
-    """
-    if isinstance(keys, (list, tuple)):
-        keys = jnp.stack(keys)
-    elif jnp.ndim(keys) == 0:
-        keys = jax.random.split(keys, n)
-    if keys.shape[0] != n:
-        raise ValueError(f"{what}: got {keys.shape[0]} for {n} netlists")
-    return keys
-
-
-def _dispatch_many(nets, values_seq, keys, bitstream_length: int,
-                   bitflip_rate: float, flip_keys, backend: str | None,
-                   decode: bool, key_mode: str | None = None,
-                   batch_shapes=None) -> list:
-    backend, key_mode = _check_modes(backend, key_mode)
-    n = len(nets)
-    if n == 0:
-        raise ValueError("execute_many: need at least one netlist")
-    if len(values_seq) != n:
-        raise ValueError(f"values: got {len(values_seq)} for {n} netlists")
-    batch_shapes = _normalize_batch_shapes(batch_shapes, n)
-    keys = _normalize_keys(keys, n)
-    if bitflip_rate > 0.0:
-        if flip_keys is None:
-            raise ValueError("bitflip_rate > 0 requires flip_keys")
-        flip_keys = _normalize_keys(flip_keys, n, "flip_keys")
-    else:
-        flip_keys = None
-    if backend == "reference":
-        return [_dispatch(net, dict(vals), keys[i], bitstream_length,
-                          bitflip_rate,
-                          flip_keys[i] if flip_keys is not None else None,
-                          backend, decode, key_mode=key_mode,
-                          batch_shape=batch_shapes[i] if batch_shapes else None)
-                for i, (net, vals) in enumerate(zip(nets, values_seq))]
-    bank = compile_bank_plan(list(nets), fuse_mux=bitflip_rate == 0.0)
-    values_seq, scalar_names = _pack_values_seq(values_seq)
-    outs = _execute_bank(bank, values_seq, keys, flip_keys, bitstream_length,
-                         float(bitflip_rate), backend == "compiled_pallas",
-                         decode, key_mode=key_mode, batch_shapes=batch_shapes,
-                         scalar_names=scalar_names)
-    return list(outs)
-
-
-#: Legacy positional tail of execute_many/execute_value_many after
-#: (nets, values_seq); the *args/**kwargs shim reassembles it so the
-#: deprecated plural-kwarg spellings (keys=/batch_shapes=) can be detected.
-_MANY_TAIL = ("keys", "bitstream_length", "bitflip_rate", "flip_keys",
-              "backend", "key_mode", "batch_shapes")
-
-
-def _many_tail(fn_name: str, args: tuple, kwargs: dict) -> tuple:
-    for bad in ("keys", "batch_shapes"):
-        if bad in kwargs:
-            warnings.warn(
-                f"{fn_name}({bad}=...) is deprecated: build per-member "
-                f"ExecRequests (each carrying its own key / "
-                f"options.batch_shape) and call executor.run([...])",
-                DeprecationWarning, stacklevel=3)
-    if len(args) > len(_MANY_TAIL):
-        raise TypeError(f"{fn_name}: too many positional arguments")
-    params = dict(zip(_MANY_TAIL, args))
-    dup = sorted(set(params) & set(kwargs))
-    if dup:
-        raise TypeError(f"{fn_name}: got multiple values for {dup}")
-    params.update(kwargs)
-    unknown = sorted(set(params) - set(_MANY_TAIL))
-    if unknown:
-        raise TypeError(f"{fn_name}: unexpected keyword arguments {unknown}")
-    missing = sorted({"keys", "bitstream_length"} - set(params))
-    if missing:
-        raise TypeError(f"{fn_name}: missing required arguments {missing}")
-    return (params["keys"], params["bitstream_length"],
-            params.get("bitflip_rate", 0.0), params.get("flip_keys"),
-            params.get("backend"), params.get("key_mode"),
-            params.get("batch_shapes"))
-
-
-def _many_shim(fn_name: str, nets, values_seq, args, kwargs,
-               decode: bool) -> list:
-    """Shared execute_many/execute_value_many shim: build per-member
-    ``ExecRequest``s and delegate to ``run()`` — bit-identical to the legacy
-    plural-kwarg path (stacking per-member key rows reproduces the original
-    key array exactly)."""
-    (keys, bitstream_length, bitflip_rate, flip_keys, backend, key_mode,
-     batch_shapes) = _many_tail(fn_name, args, kwargs)
-    n = len(nets)
-    if n == 0:
-        raise ValueError("execute_many: need at least one netlist")
-    if len(values_seq) != n:
-        raise ValueError(f"values: got {len(values_seq)} for {n} netlists")
-    keys = _normalize_keys(keys, n)
-    batch_shapes = _normalize_batch_shapes(batch_shapes, n)
-    if bitflip_rate > 0.0:
-        if flip_keys is None:
-            raise ValueError("bitflip_rate > 0 requires flip_keys")
-        flip_keys = _normalize_keys(flip_keys, n, "flip_keys")
-    reqs = [ExecRequest(net, vals, keys[i], ExecOptions(
-                backend=backend, key_mode=key_mode,
-                bitstream_length=bitstream_length,
-                bitflip_rate=bitflip_rate,
-                flip_key=flip_keys[i] if bitflip_rate > 0.0 else None,
-                batch_shape=batch_shapes[i] if batch_shapes else None,
-                decode=decode))
-            for i, (net, vals) in enumerate(zip(nets, values_seq))]
-    return run(reqs)
-
-
-def execute_many(nets, values_seq, /, *args, **kwargs) -> list:
-    """Execute N (possibly different) netlists as ONE fused bank-level plan.
-
-    Legacy signature: ``execute_many(nets, values_seq, keys,
-    bitstream_length, bitflip_rate=0.0, flip_keys=None, backend=None,
-    key_mode=None, batch_shapes=None)``.
-
-    ``nets[i]`` runs with PI values ``values_seq[i]`` and PRNG key ``keys[i]``
-    (``keys`` may also be a single key, which is split N ways).  Returns one
-    packed-output dict per member, bit-identical to calling ``execute`` per
-    netlist with the same per-member keys and ``key_mode`` — the merged plan
-    batches same-type gates of each level *across* members (core/plan.py bank
-    merging), and in batched key mode all members' PI streams generate in one
-    fused SNG pass per distinct batch shape, so the whole bank runs in a
-    single jit dispatch instead of N.  Member batch shapes may differ
-    (``batch_shapes[i]`` declares member i's shape when its values alone
-    cannot, e.g. all-const stream PIs).  ``bitflip_rate`` injects per-member
-    faults keyed by ``flip_keys[i]`` (single key allowed, split N ways).
-
-    .. deprecated:: the plural-kwarg spellings ``keys=`` / ``batch_shapes=``
-       — build per-member ``ExecRequest``s and call ``run([...])`` instead;
-       this shim stays bit-identical but warns.
-    """
-    return _many_shim("execute_many", nets, values_seq, args, kwargs,
-                      decode=False)
-
-
-def execute_value_many(nets, values_seq, /, *args, **kwargs) -> list:
-    """``execute_many`` with the StoB decode fused into the same program.
-
-    Same legacy signature and deprecation notes as ``execute_many``.
-    """
-    return _many_shim("execute_value_many", nets, values_seq, args, kwargs,
-                      decode=True)
-
-
-def execute_bank(bank: BankPlan, values_seq, keys, bitstream_length: int,
-                 *, active=None, bitflip_rate: float = 0.0, flip_keys=None,
-                 backend: str | None = None, key_mode: str | None = None,
-                 batch_shapes=None, decode: bool = False,
-                 device=None, donate: bool = False) -> list:
-    """Execute a prebuilt (possibly padded) BankPlan slot-wise.
-
-    The serving-engine entry point (``repro.serve.sc_engine``): ``bank`` is
-    typically a canonical template from ``plan.compile_bank_template`` whose
-    slots outnumber the bound requests.  ``values_seq[i]`` / ``keys[i]`` /
-    ``batch_shapes[i]`` / ``flip_keys[i]`` feed slot ``i``; ``active[i] =
-    False`` masks slot ``i`` out — no streams are generated for it (zero-word
-    fills keep the merged passes well-formed), and its entry in the returned
-    list is ``None``.  Unbound slots' ``values_seq`` entries should be empty
-    dicts; their key rows are placeholders (any same-dtype key).
-
-    Every *bound* slot's outputs are bit-identical to a standalone
-    ``execute`` of that member with the same key, ``key_mode`` and flip key —
-    padding never perturbs active streams.  ``decode=True`` fuses the StoB
-    decode into the program (the ``execute_value_many`` analogue).  Bank
-    plans only execute on the compiled backends.
-
-    ``device`` (a ``jax.Device``) commits the stacked key rows there before
-    dispatch; jit places the whole bank execution with its committed
-    argument, so the program runs on that device and the outputs live there
-    — the multi-bank server's sharded placement.  Only the key arrays are
-    committed (one buffer each): committing the per-slot values pytree
-    leaf-by-leaf costs more host time than the dispatch itself, while
-    uncommitted values follow the keys in one transfer.  Values already
-    committed to a *different* device raise jax's colocation error — pass
-    host/uncommitted values when sharding.  ``donate=True`` lets XLA consume
-    the stacked key-row buffers (never the slot values, which may alias
-    caller arrays); only pass it when the key rows are call-owned scratch,
-    like the serve engine's per-batch stacks.
-    """
-    backend, key_mode = _check_modes(backend, key_mode)
-    if backend == "reference":
-        raise ValueError("execute_bank runs compiled BankPlans; use "
-                         "execute()/execute_many() for the reference backend")
-    n = bank.n_members
-    if len(values_seq) != n:
-        raise ValueError(f"values: got {len(values_seq)} for {n} slots")
-    values_seq, scalar_names = _pack_values_seq(values_seq)
-    keys = _normalize_keys(keys, n)
-    batch_shapes = _normalize_batch_shapes(batch_shapes, n, "slots")
-    active = _normalize_active(active, n)
-    if bitflip_rate > 0.0:
-        if flip_keys is None:
-            raise ValueError("bitflip_rate > 0 requires flip_keys")
-        flip_keys = _normalize_keys(flip_keys, n, "flip_keys")
-    else:
-        flip_keys = None
-    if device is not None:
-        keys = jax.device_put(keys, device)
-        if flip_keys is not None:
-            flip_keys = jax.device_put(flip_keys, device)
-    args = (bank, values_seq, keys, flip_keys, bitstream_length,
-            float(bitflip_rate), backend == "compiled_pallas", decode)
-    kw = dict(key_mode=key_mode, batch_shapes=batch_shapes, active=active,
-              scalar_names=scalar_names)
-    if donate:
-        # Donation is best-effort: when no output can alias a key-row buffer
-        # (the common case — outputs are packed words, not keys) XLA ignores
-        # it and jax warns; that advisory is noise on a hot serving path.
-        with warnings.catch_warnings():
-            warnings.filterwarnings("ignore",
-                                    message="Some donated buffers were not")
-            outs = _execute_bank_donating(*args, **kw)
-    else:
-        outs = _execute_bank(*args, **kw)
-    return list(outs)
-
-
-# ------------------------------ run() entry point ---------------------------------
-
-def _key_data_host(k) -> np.ndarray:
-    # The public unwrap (jax.random.key_data) dispatches an XLA op per key —
-    # at serving rates that is the single largest per-batch host cost.  The
-    # raw buffer is directly reachable on current jax; fall back to the
-    # public path if the internal layout ever changes.
-    base = getattr(k, "_base_array", None)
-    if base is not None:
-        return np.asarray(base)
-    return np.asarray(jax.random.key_data(k))
-
-
-def _stack_keys(keys: list):
-    """Stack per-slot PRNG keys into one (n,) key array, host-side.
-
-    ``jnp.stack`` over typed keys dispatches one expand_dims per slot plus a
-    concatenate; staging the raw key data through numpy collapses that to
-    ONE device put, bit-identical to the stacked keys (same key data, same
-    impl).  Repeated slot keys (the unbound-slot placeholder) unwrap once.
-    """
-    try:
-        memo: dict[int, np.ndarray] = {}
-        rows = []
-        for k in keys:
-            d = memo.get(id(k))
-            if d is None:
-                d = memo[id(k)] = _key_data_host(k)
-            rows.append(d)
-        return jax.random.wrap_key_data(jnp.asarray(np.stack(rows)),
-                                        impl=jax.random.key_impl(keys[0]))
-    except (TypeError, AttributeError):
-        return jnp.stack(keys)
-
-
-_SHARED_OPTION_FIELDS = ("backend", "key_mode", "bitstream_length",
-                         "bitflip_rate", "decode", "binary")
-
-
-def _common_options(reqs: "list[ExecRequest]") -> ExecOptions:
-    """The options every request of a merged batch must agree on (per-slot
-    fields — key, flip_key, batch_shape, values — stay per request)."""
-    o0 = reqs[0].options
-    for r in reqs[1:]:
-        for f in _SHARED_OPTION_FIELDS:
-            if getattr(r.options, f) != getattr(o0, f):
-                raise ValueError(
-                    f"run: requests disagree on options.{f}: "
-                    f"{getattr(o0, f)!r} vs {getattr(r.options, f)!r} "
-                    f"(group requests by shared options, or pass options=)")
-    return o0
-
-
-def _run_one(req: ExecRequest, device=None,
-             options: ExecOptions | None = None):
-    o = options or req.options
-    if o.binary:
-        return _dispatch_binary(req.net, req.values, o.backend)
-    values, key, flip_key = req.values, req.key, o.flip_key
-    if device is not None:
-        # Commit only the key(s): jit places the program with its committed
-        # argument, and uncommitted values follow in one transfer (committing
-        # a values pytree leaf-by-leaf costs more than the dispatch).
-        key = jax.device_put(key, device)
-        if flip_key is not None:
-            flip_key = jax.device_put(flip_key, device)
-    if isinstance(req.net, ExecutionPlan):
-        backend, key_mode = _check_modes(o.backend, o.key_mode)
-        if backend == "reference":
-            raise ValueError("the reference backend interprets netlists; "
-                             "pass the Netlist, not its ExecutionPlan")
-        if o.bitflip_rate > 0.0 and flip_key is None:
-            raise ValueError("bitflip_rate > 0 requires flip_key")
-        batch_shape = (tuple(o.batch_shape)
-                       if o.batch_shape is not None else None)
-        values = {k: _as_f32(v) for k, v in values.items()}
-        return _execute_compiled(req.net, values, key, flip_key,
-                                 o.bitstream_length, float(o.bitflip_rate),
-                                 backend == "compiled_pallas", decode=o.decode,
-                                 key_mode=key_mode, batch_shape=batch_shape)
-    return _dispatch(req.net, values, key, o.bitstream_length,
-                     o.bitflip_rate, flip_key, o.backend, decode=o.decode,
-                     key_mode=o.key_mode, batch_shape=o.batch_shape)
-
-
-def _run_many(reqs: "list[ExecRequest]", device=None,
-              options: ExecOptions | None = None) -> list:
-    if not reqs:
-        raise ValueError("run: need at least one request")
-    shared = options or _common_options(reqs)
-    if shared.binary:
-        raise ValueError("run: binary requests execute one at a time")
-    for r in reqs:
-        if not isinstance(r.net, Netlist):
-            raise TypeError("run([...]) merges netlists into one bank; pass "
-                            "template= to execute a prebuilt BankPlan")
-    rate = float(shared.bitflip_rate)
-    flip_keys = None
-    if rate > 0.0:
-        flip_keys = [r.options.flip_key for r in reqs]
-        if any(fk is None for fk in flip_keys):
-            raise ValueError("bitflip_rate > 0 requires a flip_key on every "
-                             "request")
-    batch_shapes = [r.options.batch_shape for r in reqs]
-    if all(b is None for b in batch_shapes):
-        batch_shapes = None
-    values_seq = [r.values for r in reqs]
-    keys = [r.key for r in reqs]
-    if device is not None:
-        # Commit only the keys (see _run_one): the program follows them.
-        keys = jax.device_put(keys, device)
-        if flip_keys is not None:
-            flip_keys = jax.device_put(flip_keys, device)
-    return _dispatch_many([r.net for r in reqs], values_seq, keys,
-                          shared.bitstream_length, rate, flip_keys,
-                          shared.backend, shared.decode,
-                          key_mode=shared.key_mode,
-                          batch_shapes=batch_shapes)
-
-
-def _run_template(reqs, bank: BankPlan, active=None, device=None,
-                  donate: bool = False,
-                  options: ExecOptions | None = None) -> list:
-    """Slot-aligned template execution: ``reqs[i]`` feeds template slot ``i``
-    (``None`` = unbound slot, masked out)."""
-    n = bank.n_members
-    if len(reqs) != n:
-        raise ValueError(f"run: got {len(reqs)} slot requests for {n} slots")
-    bound = [(i, r) for i, r in enumerate(reqs) if r is not None]
-    if not bound:
-        raise ValueError("run: template batch needs at least one bound slot")
-    shared = options or _common_options([r for _, r in bound])
-    if shared.binary:
-        raise ValueError("run: binary requests execute one at a time")
-    rate = float(shared.bitflip_rate)
-    if active is None:
-        active = [r is not None for r in reqs]
-    # Placeholder rows for unbound slots: any same-impl key works (masked
-    # slots draw no streams); reusing the first bound key row unwraps once.
-    key0 = bound[0][1].key
-    fk0 = bound[0][1].options.flip_key
-    values_seq: list = [{} for _ in range(n)]
-    key_rows: list = [key0] * n
-    flip_rows: list = [fk0 if fk0 is not None else key0] * n
-    batch_shapes: list = [None] * n
-    for i, r in bound:
-        values_seq[i] = r.values
-        key_rows[i] = r.key
-        batch_shapes[i] = r.options.batch_shape
-        if rate > 0.0:
-            if r.options.flip_key is None:
-                raise ValueError("bitflip_rate > 0 requires a flip_key on "
-                                 "every request")
-            flip_rows[i] = r.options.flip_key
-    return execute_bank(
-        bank, values_seq, _stack_keys(key_rows), shared.bitstream_length,
-        active=active, bitflip_rate=rate,
-        flip_keys=_stack_keys(flip_rows) if rate > 0.0 else None,
-        backend=shared.backend, key_mode=shared.key_mode,
-        batch_shapes=batch_shapes, decode=shared.decode,
-        device=device, donate=donate)
-
-
-def run(request_or_requests, *, template: BankPlan | None = None,
-        active=None, device=None, donate: bool = False,
-        options: ExecOptions | None = None):
-    """Canonical execution entry point over ``ExecRequest``s.
-
-    * ``run(req)`` — execute one request (netlist or prebuilt plan);
-      returns its output dict (decoded when ``options.decode``).
-    * ``run([req, ...])`` — merge the requests' netlists into ONE fused
-      bank-level program (the ``execute_many`` path); returns one output
-      dict per request, bit-identical to running each alone.
-    * ``run(slot_reqs, template=bank)`` — bind slot-aligned requests
-      (``None`` = unbound) onto a padded bank template and execute with the
-      unbound slots masked; returns one entry per slot (``None`` where
-      unbound).  This is the serving engine's path.
-
-    Batch paths require the requests to agree on the shared option fields
-    (backend / key_mode / bitstream_length / bitflip_rate / decode); pass
-    ``options=`` to supply them explicitly instead (per-slot key, flip_key,
-    batch_shape and values always come from each request).  ``device``
-    commits the batch inputs to one JAX device before dispatch;
-    ``donate`` forwards to ``execute_bank`` (template path only).
-    """
-    if isinstance(request_or_requests, ExecRequest):
-        return _run_one(request_or_requests, device=device, options=options)
-    reqs = list(request_or_requests)
-    if template is not None:
-        return _run_template(reqs, template, active=active, device=device,
-                             donate=donate, options=options)
-    return _run_many(reqs, device=device, options=options)
-
-
-# ----------------------------- reference backend ----------------------------------
-
-def _execute_reference(net: Netlist, values: dict[str, jax.Array],
-                       key: jax.Array, bitstream_length: int,
-                       bitflip_rate: float = 0.0,
-                       flip_key: jax.Array | None = None,
-                       key_mode: str = DEFAULT_KEY_MODE,
-                       batch_shape: tuple[int, ...] | None = None) -> dict[str, jax.Array]:
-    """Gate-by-gate interpreter: the oracle for the compiled plans.
-
-    Stream generation honors the same ``key_mode`` as the compiled backends
-    (the discipline lives in ``_gen_pi_streams``, upstream of interpretation),
-    so reference and compiled outputs stay bit-for-bit comparable in either
-    mode."""
-    streams = _gen_pi_streams(net.pis, values, key, bitstream_length,
-                              key_mode=key_mode, batch_shape=batch_shape)
-
-    if bitflip_rate > 0.0:
-        if flip_key is None:
-            raise ValueError("bitflip_rate > 0 requires flip_key")
-        fkeys = jax.random.split(flip_key, len(streams) + len(net.gates))
-        for i, name in enumerate(sorted(streams)):
-            streams[name] = sc_ops.flip_bits(fkeys[i], streams[name], bitflip_rate)
-
-    if not net.is_sequential:
-        # Snapshot the PI-stream count: gate outputs are appended to the env
-        # below, and letting the flip-key index grow with it would silently
-        # clamp past the end of ``fkeys`` and reuse the last key.
-        n_streams = len(streams)
-        for gi, g in enumerate(net.gates):
-            out = bs.GATE_FNS[g.gtype](*[streams[i] for i in g.inputs])
-            if bitflip_rate > 0.0:
-                out = sc_ops.flip_bits(fkeys[n_streams + gi], out, bitflip_rate)
-            streams[g.output] = out
-        return {o: streams[o] for o in net.outputs}
-
-    # Sequential: iterate the combinational core over bitstream bits.
-    state_pis = list(net.state_bindings.keys())
-    # State-only recurrences have no streams to read the shape from.
-    shape = (next(iter(streams.values())).shape if streams
-             else (bitstream_length // bs.WORD_BITS,))  # (..., W)
-    bl = bitstream_length
-
-    def unpack_time_major(w):
-        bits = bs.unpack_bits(w)                      # (..., W, 32)
-        flat = bits.reshape(bits.shape[:-2] + (bl,))
-        return jnp.moveaxis(flat, -1, 0)              # (BL, ...)
-
-    time_streams = {k: unpack_time_major(v) for k, v in streams.items()}
-
-    def step(state, xs):
-        env = dict(xs) if xs is not None else {}
-        for s_name in state_pis:
-            env[s_name] = state[s_name]
-        for g in net.gates:
-            env[g.output] = bs.GATE_FNS[g.gtype](*[env[i] for i in g.inputs])
-        new_state = {s: env[net.state_bindings[s][0]] for s in state_pis}
-        outs = {o: env[o] for o in net.outputs}
-        return new_state, outs
-
-    init = {s: jnp.full(shape[:-1], jnp.uint32(round(net.state_bindings[s][1])))
-            for s in state_pis}
-    _, out_seq = jax.lax.scan(step, init, time_streams or None,
-                              length=None if time_streams else bl)
-    packed_outs = {}
-    for o, seq in out_seq.items():
-        seq = jnp.moveaxis(seq, 0, -1)                # (..., BL)
-        bits = seq.reshape(seq.shape[:-1] + (bl // 32, 32))
-        # Mask to bit 0 before packing: inverting gates (~x) leave garbage
-        # in bits 1..31 of the per-step values, which pack_bits would sum
-        # into other bit positions of the word.
-        packed_outs[o] = bs.pack_bits(bits & jnp.uint32(1))
-    if bitflip_rate > 0.0:
-        for i, o in enumerate(sorted(packed_outs)):
-            packed_outs[o] = sc_ops.flip_bits(fkeys[len(streams) + i],
-                                              packed_outs[o], bitflip_rate)
-    return packed_outs
+from .dispatch import (_BANK_STATIC, _as_f32, _check_modes, _dispatch,  # noqa: F401
+                       _dispatch_binary, _dispatch_many, _execute_bank,
+                       _execute_bank_donating, _execute_bank_impl,
+                       _execute_binary_compiled, _execute_compiled,
+                       _execute_reference, _is_host_scalar, _key_data_host,
+                       _normalize_active, _normalize_batch_shapes,
+                       _normalize_keys, _pack_values_seq, _plan_for,
+                       _restrict, _stack_keys, _unpack_values_seq,
+                       execute_bank, generate_bank_streams)
+from .exec_api import (_MANY_TAIL, ExecOptions, ExecRequest,  # noqa: F401
+                       _common_options, _many_shim, _many_tail, _run_many,
+                       _run_one, _run_template, execute, execute_binary,
+                       execute_many, execute_value, execute_value_many, run)
+from .streams import (_BACKENDS, _KEY_MODES, DEFAULT_BACKEND,  # noqa: F401
+                      DEFAULT_KEY_MODE, _gen_bank_streams, _gen_pi_streams,
+                      _pi_shape, _stack_table_values)
+
+__all__ = [
+    "DEFAULT_BACKEND", "DEFAULT_KEY_MODE", "ExecOptions", "ExecRequest",
+    "execute", "execute_bank", "execute_binary", "execute_many",
+    "execute_value", "execute_value_many", "generate_bank_streams", "run",
+]

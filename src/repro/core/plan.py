@@ -1,37 +1,25 @@
-"""Execution-plan compiler: lower a Netlist to fused bit-parallel passes.
+"""Plan compilation facade: caching front over the staged compiler pipeline.
 
-The interpreter in ``executor.py`` walks a netlist gate by gate — one Python
-dispatch per gate per call.  The paper's throughput, however, comes from
-SIMD execution of *whole gate levels* over memory subarrays (Algorithm 1's
-intra-subarray parallelism).  This module is the TPU translation of that
-step: it compiles a netlist into an ``ExecutionPlan`` — a topologically
-leveled schedule where every level's same-type gates are batched into ONE
-fused packed-logic pass over stacked uint32 stream words (executed by
-``kernels/netlist_exec.py``).
+The actual lowering lives in ``repro.core.compiler`` — a typed IR
+(``compiler/ir.py``), individual stages (``compiler/stages.py``), and the
+staged ``PassPipeline`` (``compiler/pipeline.py``) through which ALL compile
+paths flow:
 
-Beyond straight leveling, the compiler runs three structural cleanups before
-leveling (all boolean identities, so optimized plans stay bit-identical to
-the reference interpreter; disabled together with MUX fusion when per-gate
-fault injection must observe every intermediate stream):
+  * ``compile_plan``          — one netlist, full pipeline;
+  * ``compile_bank_plan``     — N netlists, member plans merged level-wise,
+                                re-entering the pipeline at the schedule stage;
+  * ``compile_bank_template`` / ``compile_bank_members`` — the padded
+                                canonical serving layout, same merge path.
 
-  * **BUFF elision** — copy gates become node aliases (zero passes);
-  * **structural CSE** — same gate type over the same (resolved, order-
-    canonicalized for commutative types) inputs computes the same stream, so
-    duplicates alias the first occurrence;
-  * **pattern fusion** — the 4-gate stochastic scaled addition
-    ``NAND(NAND(a,s), NAND(b, NOT(s)))`` fuses to one MUX pass
-    ``(a & s) | (b & ~s)``, and the 4-NAND XOR form
-    ``NAND(NAND(a,n1), NAND(b,n1))`` with ``n1 = NAND(a,b)`` fuses to one
-    XOR pass (the |a-b| subtractor of Fig. 5(c)) — where the 2T-1MTJ
-    hardware needs 4 cycles, one VPU pass needs none of the intermediate
-    cell writes.
+This module is the public import surface (external code must not import
+``repro.core.compiler`` internals — ruff TID251 enforces it) plus the state
+the pipeline deliberately doesn't own:
 
-Compilation also lays out the plan's **stream table**: every non-state PI as
-one row of a stacked threshold tensor with a fixed key-lane index
-(correlation-group members share a lane), so the executor's batched key mode
-generates all of a plan's — or a whole bank's — input streams in ONE fused
-SNG pass (core/bitstream.generate_batch / kernels/sng.py) instead of one
-dispatch per PI.
+  * the structure-keyed LRU plan/bank caches (interning: equal structures
+    return the *same* plan object, which keys the downstream jit cache);
+  * the per-netlist ``_plan_memo`` fast path, epoch-guarded so
+    ``clear_cache()`` invalidates memoized plans too;
+  * cumulative optimizer provenance counters (``cache_info()``).
 
 Plans are cached per netlist *structure* (PIs, gates, outputs, state
 bindings), so repeated executions of equal circuits — every benchmark/test
@@ -39,420 +27,18 @@ pattern — hit both the plan cache and the downstream jit cache.
 """
 from __future__ import annotations
 
-import dataclasses
-import itertools
 from collections import OrderedDict, defaultdict
 
-from .gates import Netlist, PIKind, PrimaryInput
+from .compiler.ir import (_COMMUTATIVE, _OP_ARITY, FUSED_MUX, FUSED_XOR,  # noqa: F401
+                          IDENTITY_NAME, BankPlan, CompiledOp, ExecutionPlan,
+                          StreamTable, build_stream_table, member_prefix)
+from .compiler.pipeline import (DEFAULT_PIPELINE, PassPipeline,  # noqa: F401
+                                build_bank, lower_netlist, merge_plans,
+                                next_serial)
+from .compiler.stages import signature as _signature  # noqa: F401
+from .gates import Netlist
 
-# Fused 3-input scaled addition: out = (a & s) | (b & ~s).  Not a 2T-1MTJ
-# primitive — it exists only at the plan level (and as packed_logic's "mux").
-FUSED_MUX = "MUX3"
-# Fused 2-input XOR: out = a ^ b, recognized from its 4-NAND netlist form.
-# Like MUX3, a plan-level op only (packed_logic's "xor").
-FUSED_XOR = "XOR"
-
-_OP_ARITY = {"MUX3": 3, "XOR": 2}
-
-# Gate types whose input order is semantically irrelevant — their CSE key is
-# order-canonicalized so NAND(a,b) and NAND(b,a) intern to one pass.
-_COMMUTATIVE = {"AND", "NAND", "OR", "NOR", "XOR",
-                "MAJ3", "NMAJ3", "MAJ5", "NMAJ5"}
-
-
-@dataclasses.dataclass(frozen=True, eq=False)
-class CompiledOp:
-    """One fused pass: all same-type gates of one level, batched.
-
-    ``inputs[j][i]`` is the node feeding input position ``j`` of the i-th
-    batched gate; ``outputs[i]`` its output node; ``gids[i]`` the originating
-    gate id (used to key per-gate fault-injection streams).  For ``MUX3``,
-    ``gids[i]`` is the id of the root NAND of the fused 4-gate group.
-
-    ``neg[j]`` complements input position ``j`` of every batched gate before
-    the base op is applied — how absorbed lone NOT gates survive inside their
-    consuming pass (``()`` means no complemented inputs).  Gates only batch
-    with same-(op, neg) peers, so the mask is pass-wide.
-    """
-
-    op: str
-    gids: tuple[int, ...]
-    inputs: tuple[tuple[str, ...], ...]   # arity x n_batched
-    outputs: tuple[str, ...]
-    neg: tuple[bool, ...] = ()            # per-input complement mask
-
-    @property
-    def n_batched(self) -> int:
-        return len(self.outputs)
-
-
-@dataclasses.dataclass(frozen=True)
-class StreamTable:
-    """Static layout of a plan's PI streams for one batched SNG pass.
-
-    Row ``i`` describes one non-state PI: its node name, where its value
-    comes from (``value_keys[i]`` into the caller's values dict, else
-    ``const_values[i]``), and its fixed key-lane index ``lanes[i]``.  Lanes
-    are assigned per plan — correlation groups (sorted by group name, members
-    in declaration order) take lanes ``0..n_groups-1`` with every member of a
-    group *sharing* its lane (shared uniforms => XOR decodes exact |a-b|),
-    then the uncorrelated singles take one fresh lane each in declaration
-    order.  The lane assignment mirrors the legacy per-PI key-split order, so
-    the two disciplines differ only in how randomness is derived, not in
-    which PI is "first".
-    """
-
-    names: tuple[str, ...]
-    value_keys: tuple[str | None, ...]
-    const_values: tuple[float | None, ...]
-    lanes: tuple[int, ...]
-    n_groups: int
-
-    @property
-    def n_rows(self) -> int:
-        return len(self.names)
-
-
-def build_stream_table(pis) -> StreamTable:
-    """Lay out the stream table for a PI sequence (see ``StreamTable``)."""
-    groups: dict[str, list[PrimaryInput]] = {}
-    singles: list[PrimaryInput] = []
-    for pi in pis:
-        if pi.kind == PIKind.STATE:
-            continue
-        if pi.corr_group is not None:
-            groups.setdefault(pi.corr_group, []).append(pi)
-        else:
-            singles.append(pi)
-    rows: list[tuple[PrimaryInput, int]] = []
-    for g, (_, gpis) in enumerate(sorted(groups.items())):
-        rows.extend((pi, g) for pi in gpis)
-    rows.extend((pi, len(groups) + k) for k, pi in enumerate(singles))
-    return StreamTable(
-        names=tuple(pi.name for pi, _ in rows),
-        value_keys=tuple(pi.value_key for pi, _ in rows),
-        const_values=tuple(pi.const_value for pi, _ in rows),
-        lanes=tuple(lane for _, lane in rows),
-        n_groups=len(groups),
-    )
-
-
-@dataclasses.dataclass(frozen=True, eq=False)
-class ExecutionPlan:
-    """A netlist lowered to leveled, type-batched fused passes.
-
-    ``eq=False``: plans are interned in the structure-keyed cache, so
-    identity equality/hash is both correct and cheap as a jit static arg.
-
-    ``aliases`` maps every *observable* node (primary output / state driver)
-    elided by BUFF elision or CSE to the surviving node computing the
-    identical stream; the executor re-exposes them in its node environment.
-    Non-observable elided nodes need no alias — every use was rewritten to
-    the survivor at compile time.  ``stream_table`` is the batched SNG
-    layout of the plan's PI streams (see ``StreamTable``).
-
-    ``serial`` is a process-wide monotone compile stamp: it gives plans a
-    deterministic canonical order (bank templates sort members by it) without
-    hashing structures on the serving hot path.
-    """
-
-    name: str
-    pis: tuple[PrimaryInput, ...]
-    n_gates: int                                  # original gate count
-    levels: tuple[tuple[CompiledOp, ...], ...]
-    outputs: tuple[str, ...]
-    state_pis: tuple[str, ...]
-    state_drivers: tuple[str, ...]
-    state_inits: tuple[float, ...]
-    fused: bool
-    n_fused_mux: int
-    stream_table: StreamTable
-    aliases: tuple[tuple[str, str], ...] = ()     # elided node -> survivor
-    n_fused_xor: int = 0
-    n_buff_elided: int = 0
-    n_cse_elided: int = 0
-    n_fused_and: int = 0
-    n_not_absorbed: int = 0
-    serial: int = -1
-
-    @property
-    def is_sequential(self) -> bool:
-        return bool(self.state_pis)
-
-    @property
-    def is_identity(self) -> bool:
-        """True for the no-op padding member (no PIs, gates, or outputs)."""
-        return (not self.pis and not self.n_gates and not self.outputs
-                and not self.state_pis)
-
-    @property
-    def n_passes(self) -> int:
-        """Fused passes executed per evaluation (vs n_gates for the
-        interpreter) — the compile-time speedup headline."""
-        return sum(len(level) for level in self.levels)
-
-    @property
-    def n_elided(self) -> int:
-        """Nodes removed from the pass schedule by BUFF elision and CSE."""
-        return self.n_buff_elided + self.n_cse_elided
-
-    def stream_pi_names(self) -> tuple[str, ...]:
-        """Non-state PIs, in declaration order (the streams the executor
-        generates; state PIs are carried by the sequential scan)."""
-        return tuple(p.name for p in self.pis if p.kind != PIKind.STATE)
-
-
-# ------------------------- pre-leveling optimization -------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class _WGate:
-    """Working gate record during compilation (inputs already alias-resolved)."""
-
-    gid: int
-    gtype: str
-    inputs: tuple[str, ...]
-    output: str
-
-
-def _elide_and_cse(gates):
-    """BUFF elision + structural CSE over a topological gate list.
-
-    Returns ``(kept, alias, n_buff, n_cse)``.  BUFF gates become aliases to
-    their (resolved) input; a gate whose (type, resolved inputs) — input
-    order canonicalized for commutative types — matches an earlier survivor
-    aliases that survivor's output.  Both are exact stream identities: the
-    interpreter computes the same deterministic function at both sites, so
-    aliasing is bit-identical, not approximate.  Gates are visited in
-    construction (topological) order, so alias chains resolve in one pass.
-    """
-    alias: dict[str, str] = {}
-    seen: dict[tuple, str] = {}
-    kept: list[_WGate] = []
-    n_buff = n_cse = 0
-    for g in gates:
-        ins = tuple(alias.get(i, i) for i in g.inputs)
-        if g.gtype == "BUFF":
-            alias[g.output] = ins[0]
-            n_buff += 1
-            continue
-        key = (g.gtype, tuple(sorted(ins)) if g.gtype in _COMMUTATIVE else ins)
-        prev = seen.get(key)
-        if prev is not None:
-            alias[g.output] = prev
-            n_cse += 1
-            continue
-        seen[key] = g.output
-        kept.append(_WGate(g.gid, g.gtype, ins, g.output))
-    return kept, alias, n_buff, n_cse
-
-
-def _count_uses(gates) -> dict[str, int]:
-    uses: dict[str, int] = defaultdict(int)
-    for g in gates:
-        for i in g.inputs:
-            uses[i] += 1
-    return uses
-
-
-def _find_mux_fusions(
-        gates, protected: set[str],
-) -> tuple[dict[int, tuple[str, str, str]], set[int]]:
-    """Detect fusable 4-gate MUX groups over a working gate list.
-
-    Returns ``(roots, dead)``: ``roots`` maps the root NAND's gid to its
-    ``(a, b, s)`` operand nodes; ``dead`` holds gids of the three absorbed
-    feeder gates.  A feeder is absorbed only when its output has exactly one
-    use and is neither a primary output nor a state driver — otherwise the
-    intermediate stream is observable and must stay materialized.
-    """
-    driver = {g.output: g for g in gates}
-    uses = _count_uses(gates)
-
-    def absorbable(node: str) -> bool:
-        return uses[node] == 1 and node not in protected
-
-    roots: dict[int, tuple[str, str, str]] = {}
-    dead: set[int] = set()
-    for g in gates:
-        if g.gtype != "NAND" or g.gid in dead:
-            continue
-        g1 = driver.get(g.inputs[0])
-        g2 = driver.get(g.inputs[1])
-        if g1 is None or g2 is None or g1.gid == g2.gid:
-            continue
-        if g1.gtype != "NAND" or g2.gtype != "NAND":
-            continue
-        if {g1.gid, g2.gid} & dead:
-            continue
-        found = None
-        for x, y in ((g1, g2), (g2, g1)):
-            # y = NAND(b, sb) with sb = NOT(s), x = NAND(a, s).
-            for bi in (0, 1):
-                sb_gate = driver.get(y.inputs[1 - bi])
-                if sb_gate is None or sb_gate.gtype != "NOT" or sb_gate.gid in dead:
-                    continue
-                s = sb_gate.inputs[0]
-                if s not in x.inputs:
-                    continue
-                a = x.inputs[1] if x.inputs[0] == s else x.inputs[0]
-                b = y.inputs[bi]
-                if (absorbable(x.output) and absorbable(y.output)
-                        and absorbable(sb_gate.output)):
-                    found = (a, b, s, x.gid, y.gid, sb_gate.gid)
-                    break
-            if found:
-                break
-        if found:
-            a, b, s, xg, yg, sg = found
-            roots[g.gid] = (a, b, s)
-            dead.update((xg, yg, sg))
-    return roots, dead
-
-
-def _find_xor_fusions(gates, protected: set[str],
-                      dead: set[int]) -> dict[int, tuple[str, str]]:
-    """Detect the 4-NAND XOR form and fuse it to one XOR pass.
-
-    Pattern (Fig. 5(c)'s |a-b| subtractor): ``n1 = NAND(a, b)``;
-    ``root = NAND(NAND(a, n1), NAND(b, n1))`` computes ``a ^ b``.  The three
-    feeder NANDs are absorbed only when they are single-purpose — ``n1`` used
-    exactly by the two mid gates, each mid gate used only by the root, and
-    none of them observable (primary output / state driver).  Extends
-    ``dead`` in place; returns root gid -> (a, b).
-    """
-    driver = {g.output: g for g in gates}
-    uses = _count_uses(gates)
-    roots: dict[int, tuple[str, str]] = {}
-    for g in gates:
-        if g.gtype != "NAND" or g.gid in dead:
-            continue
-        x = driver.get(g.inputs[0])
-        y = driver.get(g.inputs[1])
-        if x is None or y is None or x.gid == y.gid:
-            continue
-        if x.gtype != "NAND" or y.gtype != "NAND":
-            continue
-        if {x.gid, y.gid} & dead:
-            continue
-        found = None
-        for c in x.inputs:                       # shared mid node candidate
-            if c not in y.inputs:
-                continue
-            n1 = driver.get(c)
-            if n1 is None or n1.gtype != "NAND" or n1.gid in dead:
-                continue
-            a = x.inputs[1] if x.inputs[0] == c else x.inputs[0]
-            b = y.inputs[1] if y.inputs[0] == c else y.inputs[0]
-            if a == b or set(n1.inputs) != {a, b}:
-                continue
-            if (uses[c] == 2 and uses[x.output] == 1 and uses[y.output] == 1
-                    and not {c, x.output, y.output} & protected):
-                found = (a, b, x.gid, y.gid, n1.gid)
-                break
-        if found:
-            a, b, xg, yg, ng = found
-            roots[g.gid] = (a, b)
-            dead.update((xg, yg, ng))
-    return roots
-
-
-@dataclasses.dataclass(frozen=True)
-class _WOp:
-    """Post-pattern-fusion working op (gate type or MUX3/XOR, + neg mask)."""
-
-    gid: int
-    op: str
-    inputs: tuple[str, ...]
-    neg: tuple[bool, ...]
-    output: str
-
-
-def _fold_ands(ops: "list[_WOp]", protected: set[str]) -> int:
-    """Fold ``NOT(NAND(a, b))`` pairs into one fused AND pass.
-
-    The 2T-1MTJ method has no AND primitive — stochastic multiplication is a
-    NAND feeding a NOT (two memory cycles) — but the plan level does: the
-    boolean identity ``NOT(NAND(a, b)) == AND(a, b)`` collapses the pair to
-    one pass whenever the intermediate NAND output is single-use and
-    unobservable.  The surviving op keeps the NOT's gid and output node (and
-    the NAND's neg mask, vacuously all-False at this stage).  Mutates ``ops``
-    in place; returns the number of folded pairs.
-    """
-    driver = {w.output: i for i, w in enumerate(ops)}
-    uses = _count_uses(ops)
-    dead: set[int] = set()
-    n = 0
-    for i, w in enumerate(ops):
-        if w.op != "NOT" or w.neg[0]:
-            continue
-        j = driver.get(w.inputs[0])
-        if j is None or j in dead:
-            continue
-        s = ops[j]
-        if s.op != "NAND" or uses[s.output] != 1 or s.output in protected:
-            continue
-        ops[i] = _WOp(w.gid, "AND", s.inputs, s.neg, w.output)
-        dead.add(j)
-        n += 1
-    if dead:
-        ops[:] = [w for i, w in enumerate(ops) if i not in dead]
-    return n
-
-
-def _absorb_nots(ops: "list[_WOp]", protected: set[str]) -> int:
-    """Fuse lone NOT gates into their consuming pass via the neg mask.
-
-    A NOT whose output has exactly one use and is unobservable disappears:
-    its consumer reads the NOT's *input* with the complement folded into the
-    pass (``CompiledOp.neg``) — an exact stream identity, one fewer pass.
-    Ops are visited in topological order, so NOT chains collapse step by step
-    (``NOT(NOT(x))`` absorbs to a plain ``x`` read).  Mutates ``ops`` in
-    place; returns the number of absorbed NOTs.
-    """
-    uses = _count_uses(ops)
-    consumers: dict[str, list[tuple[int, int]]] = defaultdict(list)
-    for i, w in enumerate(ops):
-        for p, nm in enumerate(w.inputs):
-            consumers[nm].append((i, p))
-    dead: set[int] = set()
-    n = 0
-    for i, w in enumerate(ops):
-        if w.op != "NOT" or i in dead:
-            continue
-        if w.output in protected or uses[w.output] != 1:
-            continue
-        (ci, pos), = consumers[w.output]
-        if ci in dead:
-            continue
-        c = ops[ci]
-        src = w.inputs[0]
-        ins = list(c.inputs)
-        ins[pos] = src
-        neg = list(c.neg)
-        # NOT with its own neg set is a double negation: absorbing it passes
-        # the source through uncomplemented.
-        neg[pos] = neg[pos] != (not w.neg[0])
-        ops[ci] = _WOp(c.gid, c.op, tuple(ins), tuple(neg), c.output)
-        consumers[src].append((ci, pos))
-        uses[src] += 1
-        dead.add(i)
-        n += 1
-    if dead:
-        ops[:] = [w for i, w in enumerate(ops) if i not in dead]
-    return n
-
-
-# -------------------------------- compilation -------------------------------------
-
-def _signature(net: Netlist) -> tuple:
-    return (
-        net.name,
-        tuple(net.pis),
-        tuple((g.gid, g.gtype, g.inputs, g.output) for g in net.gates),
-        tuple(net.outputs),
-        tuple(sorted((s, d, i) for s, (d, i) in net.state_bindings.items())),
-    )
-
+# ----------------------------------- caches ----------------------------------------
 
 # Both structural caches are LRU-bounded: serving traffic compiles a new
 # plan/bank per *bucket shape*, and an unbounded dict would grow with every
@@ -468,8 +54,10 @@ _EVICTIONS = {"plan_evictions": 0, "bank_evictions": 0}
 # removed, and reset by clear_cache).
 _OPT_COUNTS = {"buff_elided": 0, "cse_elided": 0, "mux_fused": 0,
                "xor_fused": 0, "and_fused": 0, "not_absorbed": 0}
-# Monotone compile stamp for ExecutionPlan.serial.
-_SERIAL = itertools.count()
+# Cache generation stamp: bumped by clear_cache() and baked into every
+# per-netlist memo key, so memoized plans from before a clear can never be
+# served after it (they'd resurrect cleared interning).
+_CACHE_EPOCH = [0]
 
 
 def _cache_get(cache: OrderedDict, key):
@@ -515,16 +103,30 @@ def cache_info() -> dict[str, int]:
 
 
 def clear_cache() -> None:
+    """Drop all structural caches AND invalidate per-netlist plan memos.
+
+    The memos live on Netlist instances, so they can't be cleared here
+    directly; instead the cache epoch is baked into every memo key — bumping
+    it makes every existing memo entry unreachable (and ``compile_plan``
+    prunes stale-epoch entries on its next visit to each netlist).
+    """
     _PLAN_CACHE.clear()
     _BANK_CACHE.clear()
     for k in _OPT_COUNTS:
         _OPT_COUNTS[k] = 0
     for k in _EVICTIONS:
         _EVICTIONS[k] = 0
+    _CACHE_EPOCH[0] += 1
 
+
+# -------------------------------- compilation -------------------------------------
 
 def compile_plan(net: Netlist, fuse_mux: bool = True) -> ExecutionPlan:
     """Compile ``net`` into an ExecutionPlan (structure-cached).
+
+    Runs the full staged pipeline (``compiler.DEFAULT_PIPELINE``): normalize
+    → BUFF-elide/CSE → MUX/XOR/AND fusion + NOT absorption → level →
+    schedule → stream-table build → emit.
 
     ``fuse_mux=False`` keeps every gate as its own batched op, disabling ALL
     structural optimization (MUX/XOR fusion, BUFF elision, CSE) — required
@@ -538,19 +140,23 @@ def compile_plan(net: Netlist, fuse_mux: bool = True) -> ExecutionPlan:
     guarded by the netlist's mutation counter (bumped by every Netlist
     mutator, including in-place ``replace_gate`` edits that leave the gate
     count unchanged) plus the PI/gate counts as a belt-and-braces check, so
-    mutating a compiled netlist through its mutators always recompiles.
+    mutating a compiled netlist through its mutators always recompiles — and
+    by the cache epoch, so ``clear_cache()`` invalidates memos too.
     """
     memo = net.__dict__.setdefault("_plan_memo", {})
-    memo_key = (fuse_mux, getattr(net, "_version", None),
+    memo_key = (_CACHE_EPOCH[0], fuse_mux, getattr(net, "_version", None),
                 len(net.pis), len(net.gates))
     hit = memo.get(memo_key)
     if hit is not None:
         return hit
 
-    # Entries from older netlist versions can never hit again — drop them so
-    # a mutate/recompile loop doesn't grow the memo (at most the two fuse_mux
-    # variants of the current version remain).
-    for k in [k for k in memo if k[1] != memo_key[1]]:
+    # Entries from older netlist versions or cache epochs can never hit again
+    # — drop them so a mutate/recompile (or clear/recompile) loop doesn't grow
+    # the memo (at most the two fuse_mux variants of the current version
+    # remain).
+    stale = [k for k in memo
+             if k[0] != memo_key[0] or k[2] != memo_key[2]]
+    for k in stale:
         del memo[k]
 
     key = (_signature(net), fuse_mux)
@@ -559,105 +165,13 @@ def compile_plan(net: Netlist, fuse_mux: bool = True) -> ExecutionPlan:
         memo[memo_key] = cached
         return cached
 
-    net.validate()
-    protected = set(net.outputs) | {drv for drv, _ in net.state_bindings.values()}
-    if fuse_mux:
-        # Structural cleanups first (BUFF elision + CSE rewrite the graph the
-        # pattern matchers see), then 4-gate pattern fusion on the survivors.
-        gates, alias, n_buff, n_cse = _elide_and_cse(net.gates)
-        # Only observable elided nodes (outputs / state drivers) need
-        # re-exposing at execution time — every other use was rewritten to
-        # the survivor.  Restricting the recorded aliases to those keeps the
-        # next step sound: a dangling alias to a node fusion then absorbs
-        # would crash the re-expose loop.
-        alias = {s: d for s, d in alias.items() if s in protected}
-        # An elided observable node aliases its survivor — which makes the
-        # SURVIVOR observable too: resolve protection through the aliases so
-        # pattern fusion cannot absorb a node some alias must re-expose.
-        protected |= set(alias.values())
-        mux_roots, dead = _find_mux_fusions(gates, protected)
-        xor_roots = _find_xor_fusions(gates, protected, dead)
-    else:
-        # Per-gate fault injection must observe every intermediate stream:
-        # no elision, no dedup, no fusion (mirrors the interpreter exactly).
-        gates = [_WGate(g.gid, g.gtype, g.inputs, g.output) for g in net.gates]
-        alias, n_buff, n_cse = {}, 0, 0
-        mux_roots, dead, xor_roots = {}, set(), {}
-
-    # Materialize the post-pattern-fusion op list, then run the NOT-directed
-    # cleanups on it: AND folding (NOT(NAND) pairs) and lone-NOT absorption
-    # into consuming passes.  Both run after the 4-gate matchers so the
-    # NOT-bearing MUX/XOR forms are recognized first.
-    ops: list[_WOp] = []
-    for g in gates:
-        if g.gid in dead:
-            continue
-        if g.gid in mux_roots:
-            op, ins = FUSED_MUX, mux_roots[g.gid]
-        elif g.gid in xor_roots:
-            op, ins = FUSED_XOR, xor_roots[g.gid]
-        else:
-            op, ins = g.gtype, g.inputs
-        ops.append(_WOp(g.gid, op, tuple(ins), (False,) * len(ins), g.output))
-    if fuse_mux:
-        n_and = _fold_ands(ops, protected)
-        n_not = _absorb_nots(ops, protected)
-    else:
-        n_and = n_not = 0
-    _OPT_COUNTS["buff_elided"] += n_buff
-    _OPT_COUNTS["cse_elided"] += n_cse
-    _OPT_COUNTS["mux_fused"] += len(mux_roots)
-    _OPT_COUNTS["xor_fused"] += len(xor_roots)
-    _OPT_COUNTS["and_fused"] += n_and
-    _OPT_COUNTS["not_absorbed"] += n_not
-
-    # Longest-path leveling over the optimized op graph (PIs at level 0).
-    # Ops batch within a level by (op, neg) — a complemented-input variant is
-    # its own pass.
-    level: dict[str, int] = {p.name: 0 for p in net.pis}
-    by_level: dict[int, dict[tuple, list[tuple[int, tuple[str, ...], str]]]] = \
-        defaultdict(lambda: defaultdict(list))
-    for w in ops:
-        lvl = 1 + max(level[i] for i in w.inputs)
-        level[w.output] = lvl
-        neg = w.neg if any(w.neg) else ()
-        by_level[lvl][(w.op, neg)].append((w.gid, w.inputs, w.output))
-
-    levels = []
-    for lvl in sorted(by_level):
-        lvl_ops = []
-        for (op, neg), entries in by_level[lvl].items():
-            arity = len(entries[0][1])
-            lvl_ops.append(CompiledOp(
-                op=op,
-                gids=tuple(e[0] for e in entries),
-                inputs=tuple(tuple(e[1][j] for e in entries) for j in range(arity)),
-                outputs=tuple(e[2] for e in entries),
-                neg=neg,
-            ))
-        levels.append(tuple(lvl_ops))
-
-    state_items = sorted(net.state_bindings.items())
-    plan = ExecutionPlan(
-        name=net.name,
-        pis=tuple(net.pis),
-        n_gates=len(net.gates),
-        levels=tuple(levels),
-        outputs=tuple(net.outputs),
-        state_pis=tuple(s for s, _ in state_items),
-        state_drivers=tuple(d for _, (d, _) in state_items),
-        state_inits=tuple(i for _, (_, i) in state_items),
-        fused=fuse_mux,
-        n_fused_mux=len(mux_roots),
-        stream_table=build_stream_table(net.pis),
-        aliases=tuple(sorted(alias.items())),
-        n_fused_xor=len(xor_roots),
-        n_buff_elided=n_buff,
-        n_cse_elided=n_cse,
-        n_fused_and=n_and,
-        n_not_absorbed=n_not,
-        serial=next(_SERIAL),
-    )
+    plan = lower_netlist(net, fuse_mux=fuse_mux)
+    _OPT_COUNTS["buff_elided"] += plan.n_buff_elided
+    _OPT_COUNTS["cse_elided"] += plan.n_cse_elided
+    _OPT_COUNTS["mux_fused"] += plan.n_fused_mux
+    _OPT_COUNTS["xor_fused"] += plan.n_fused_xor
+    _OPT_COUNTS["and_fused"] += plan.n_fused_and
+    _OPT_COUNTS["not_absorbed"] += plan.n_not_absorbed
     _cache_put(_PLAN_CACHE, key, plan, "plans", "plan_evictions")
     memo[memo_key] = plan
     return plan
@@ -671,158 +185,17 @@ def compile_plan(net: Netlist, fuse_mux: bool = True) -> ExecutionPlan:
 # translation: merge N (possibly different) netlists' plans into ONE plan
 # whose levels type-batch gates *across* members — one CompiledOp pass covers
 # every same-type gate of a level bank-wide, and N app instances execute as a
-# single fused XLA program (executor.execute_many).
-
-def member_prefix(index: int) -> str:
-    """Node-namespace prefix for bank member ``index`` ("b3/out" etc.)."""
-    return f"b{index}/"
+# single fused XLA program (executor.execute_many).  The merge itself is
+# ``compiler.pipeline.merge_plans`` / ``build_bank``; this layer adds caching.
 
 
-@dataclasses.dataclass(frozen=True, eq=False)
-class BankPlan:
-    """N member plans merged for bank-level execution.
-
-    Combinational members merge into one word-parallel plan (``comb``);
-    sequential members merge into one plan run as a single scan (``seq``) —
-    mixing them would re-execute combinational logic per bitstream bit.
-    ``comb_members`` / ``seq_members`` hold the caller-order member indices of
-    each group, in merge order (ascending), which is also the order of the
-    per-member flat fault-key blocks (see ``executor._execute_bank``).
-    """
-
-    name: str
-    members: tuple[ExecutionPlan, ...]
-    comb: ExecutionPlan | None
-    seq: ExecutionPlan | None
-    comb_members: tuple[int, ...]
-    seq_members: tuple[int, ...]
-    #: Process-wide monotone build stamp (like ExecutionPlan.serial): a
-    #: stable identity token that — unlike id() — can never alias a
-    #: garbage-collected bank after cache eviction.
-    serial: int = -1
-
-    @property
-    def n_members(self) -> int:
-        return len(self.members)
-
-    @property
-    def n_identity_members(self) -> int:
-        """Slots filled by the no-op identity padding plan."""
-        return sum(1 for m in self.members if m.is_identity)
-
-    @property
-    def n_passes(self) -> int:
-        """Fused passes per bank-wide evaluation (the merged headline)."""
-        return (self.comb.n_passes if self.comb else 0) + \
-               (self.seq.n_passes if self.seq else 0)
-
-    @property
-    def n_passes_looped(self) -> int:
-        """Passes a per-member dispatch loop would execute (the baseline)."""
-        return sum(m.n_passes for m in self.members)
-
-
-def merge_plans(plans: "list[ExecutionPlan]", indices: "list[int]",
-                name: str) -> ExecutionPlan:
-    """Merge same-kind plans into one cross-member type-batched plan.
-
-    ``indices`` are the members' caller-order positions — they become the node
-    namespace prefixes, so the executor can scatter outputs back per member.
-    Members are independent graphs, so each gate keeps its per-member level;
-    merging level ``L`` across members and type-batching within it is a valid
-    re-leveling of the union graph.  Gate ids are offset by the running gate
-    count so they index a flat per-merge-order fault-key array.  Identity
-    (padding) members contribute no nodes and are exempt from the kind check,
-    so a padded bank template can carry them in either group.
-    """
-    if len({p.is_sequential for p in plans if not p.is_identity}) > 1:
-        raise ValueError("merge_plans: cannot mix sequential and "
-                         "combinational members in one merged plan")
-    prefixes = [member_prefix(i) for i in indices]
-    offsets = []
-    off = 0
-    for p in plans:
-        offsets.append(off)
-        off += p.n_gates
-
-    n_levels = max(len(p.levels) for p in plans)
-    levels = []
-    for lvl in range(n_levels):
-        by_op: dict[tuple, list[tuple]] = {}
-        for p, pre, goff in zip(plans, prefixes, offsets):
-            if lvl >= len(p.levels):
-                continue
-            for cop in p.levels[lvl]:
-                by_op.setdefault((cop.op, cop.neg), []).append((cop, pre, goff))
-        ops = []
-        for (op, neg), entries in by_op.items():
-            arity = len(entries[0][0].inputs)
-            ops.append(CompiledOp(
-                op=op,
-                gids=tuple(goff + g for cop, _, goff in entries
-                           for g in cop.gids),
-                inputs=tuple(tuple(pre + n for cop, pre, _ in entries
-                                   for n in cop.inputs[j])
-                             for j in range(arity)),
-                outputs=tuple(pre + o for cop, pre, _ in entries
-                              for o in cop.outputs),
-                neg=neg,
-            ))
-        levels.append(tuple(ops))
-
-    pis = tuple(dataclasses.replace(
-        pi, name=pre + pi.name,
-        corr_group=(pre + pi.corr_group) if pi.corr_group else None)
-        for p, pre in zip(plans, prefixes) for pi in p.pis)
-    # NOTE: the merged stream table is laid out over the *merged* PI list, so
-    # its lanes differ from the members' own tables.  Bank execution generates
-    # streams from each member's table with that member's key (preserving
-    # merged == looped bit-identity); the merged table exists for plans
-    # executed standalone.
-    return ExecutionPlan(
-        name=name,
-        pis=pis,
-        n_gates=off,
-        levels=tuple(levels),
-        outputs=tuple(pre + o for p, pre in zip(plans, prefixes)
-                      for o in p.outputs),
-        state_pis=tuple(pre + s for p, pre in zip(plans, prefixes)
-                        for s in p.state_pis),
-        state_drivers=tuple(pre + d for p, pre in zip(plans, prefixes)
-                            for d in p.state_drivers),
-        state_inits=tuple(i for p in plans for i in p.state_inits),
-        # Identity padding members are vacuously "fused"; only real members
-        # decide whether the merged plan admits per-gate fault injection.
-        fused=any(p.fused for p in plans if not p.is_identity),
-        n_fused_mux=sum(p.n_fused_mux for p in plans),
-        stream_table=build_stream_table(pis),
-        aliases=tuple((pre + a, pre + b) for p, pre in zip(plans, prefixes)
-                      for a, b in p.aliases),
-        n_fused_xor=sum(p.n_fused_xor for p in plans),
-        n_buff_elided=sum(p.n_buff_elided for p in plans),
-        n_cse_elided=sum(p.n_cse_elided for p in plans),
-        n_fused_and=sum(p.n_fused_and for p in plans),
-        n_not_absorbed=sum(p.n_not_absorbed for p in plans),
-        serial=next(_SERIAL),
-    )
-
-
-def _build_bank(members: "tuple[ExecutionPlan, ...]", key: tuple,
-                name: str | None) -> BankPlan:
+def _cached_bank(members: "tuple[ExecutionPlan, ...]", key: tuple,
+                 name: str | None) -> BankPlan:
     """Merge a member-plan tuple into a (cached) BankPlan under ``key``."""
     cached = _cache_get(_BANK_CACHE, key)
     if cached is not None:
         return cached
-    comb_idx = tuple(i for i, m in enumerate(members) if not m.is_sequential)
-    seq_idx = tuple(i for i, m in enumerate(members) if m.is_sequential)
-    bank_name = name or f"bank{len(members)}"
-    comb = merge_plans([members[i] for i in comb_idx], list(comb_idx),
-                       f"{bank_name}/comb") if comb_idx else None
-    seq = merge_plans([members[i] for i in seq_idx], list(seq_idx),
-                      f"{bank_name}/seq") if seq_idx else None
-    bank = BankPlan(name=bank_name, members=members, comb=comb, seq=seq,
-                    comb_members=comb_idx, seq_members=seq_idx,
-                    serial=next(_SERIAL))
+    bank = build_bank(members, name)
     _cache_put(_BANK_CACHE, key, bank, "banks", "bank_evictions")
     return bank
 
@@ -842,7 +215,7 @@ def compile_bank_plan(nets: "list[Netlist]", fuse_mux: bool = True,
         raise ValueError("compile_bank_plan: need at least one netlist")
     members = tuple(compile_plan(n, fuse_mux=fuse_mux or n.is_sequential)
                     for n in nets)
-    return _build_bank(members, (members, fuse_mux), name)
+    return _cached_bank(members, (members, fuse_mux), name)
 
 
 # --------------------------- canonical bank templates ------------------------------
@@ -856,7 +229,6 @@ def compile_bank_plan(nets: "list[Netlist]", fuse_mux: bool = True,
 # and ONE jit program, with unbound slots masked out at execution time
 # (executor.execute_bank's ``active`` mask).
 
-IDENTITY_NAME = "__pad__"
 _IDENTITY_PLAN: "list[ExecutionPlan]" = []
 
 
@@ -931,8 +303,8 @@ def compile_bank_template(plans: "list[ExecutionPlan]",
         raise ValueError("compile_bank_template: need at least one plan")
     members = template_members(plans, n_slots=n_slots, pad_counts=pad_counts,
                                pad_total=pad_total)
-    return _build_bank(members, (members, True, scope),
-                       name or f"tmpl{len(members)}")
+    return _cached_bank(members, (members, True, scope),
+                        name or f"tmpl{len(members)}")
 
 
 def compile_bank_members(members: "tuple[ExecutionPlan, ...]",
@@ -949,8 +321,8 @@ def compile_bank_members(members: "tuple[ExecutionPlan, ...]",
     if not members:
         raise ValueError("compile_bank_members: need at least one member")
     members = tuple(members)
-    return _build_bank(members, (members, True, scope),
-                       name or f"tmpl{len(members)}")
+    return _cached_bank(members, (members, True, scope),
+                        name or f"tmpl{len(members)}")
 
 
 def merged_pass_count(plans: "list[ExecutionPlan]") -> int:

@@ -53,6 +53,7 @@ import jax
 import numpy as np
 
 from ..core import executor
+from ..core.arch import _plan_schedule_cycles
 from ..core.executor import ExecOptions, ExecRequest
 from ..core.gates import Netlist
 from ..core.plan import compile_bank_members, compile_plan, template_members
@@ -245,6 +246,13 @@ class BankServerStats:
     slots_total: int = 0          # executed template slots (incl. padding)
     active_slots: int = 0         # slots bound to requests
     identity_slots: int = 0       # no-op identity padding slots
+    # Compiler-pipeline provenance, summed over every launched batch's bank
+    # (per-pass counters the pipeline stages attach to each ExecutionPlan).
+    passes_merged: int = 0        # fused passes actually driven (merged bank)
+    passes_looped_equiv: int = 0  # passes a per-member loop would have driven
+    schedule_cycles: int = 0      # Algorithm-1 scheduled cycles (merged bank)
+    passes_fused_away: int = 0    # MUX/XOR/AND fusions + NOT absorptions
+    nodes_elided: int = 0         # BUFF elisions + CSE merges
     exec_s: float = 0.0           # busy wall time (>=1 batch in flight)
     latencies_s: "deque[float]" = dataclasses.field(
         default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
@@ -262,6 +270,14 @@ class BankServerStats:
             "padding_waste": (self.slots_total - self.active_slots)
             / max(self.slots_total, 1),
             "identity_slots": self.identity_slots,
+            "passes_merged": self.passes_merged,
+            "passes_looped_equiv": self.passes_looped_equiv,
+            "pass_savings_rate": (self.passes_looped_equiv
+                                  - self.passes_merged)
+            / max(self.passes_looped_equiv, 1),
+            "schedule_cycles": self.schedule_cycles,
+            "passes_fused_away": self.passes_fused_away,
+            "nodes_elided": self.nodes_elided,
             "p50_ms": _percentile(lat, 0.50) * 1e3,
             "p99_ms": _percentile(lat, 0.99) * 1e3,
             "mean_ms": (sum(lat) / len(lat) * 1e3) if lat else 0.0,
@@ -616,6 +632,17 @@ class BankServer:
         st.slots_total += n
         st.active_slots += len(batch.pendings)
         st.identity_slots += bank.n_identity_members
+        st.passes_merged += bank.n_passes
+        st.passes_looped_equiv += bank.n_passes_looped
+        st.schedule_cycles += sum(
+            _plan_schedule_cycles(g) for g in (bank.comb, bank.seq)
+            if g is not None)
+        for g in (bank.comb, bank.seq):
+            if g is None:
+                continue
+            st.passes_fused_away += (g.n_fused_mux + g.n_fused_xor
+                                     + g.n_fused_and + g.n_not_absorbed)
+            st.nodes_elided += g.n_elided
         dev_arg = device if multi and device is not self._default_device \
             else None
         try:

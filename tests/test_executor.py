@@ -131,3 +131,40 @@ def test_sequential_without_stream_pis_backends_bit_identical():
     cmp = executor.execute(_oscillator(), {}, jax.random.key(1), 128,
                            backend="compiled")
     assert (ref["Qn"] == cmp["Qn"]).all()
+
+
+# ------------------------- jit-boundary value packing -----------------------------
+
+def test_pack_values_seq_groups_leaves_per_shape():
+    # The bank jit boundary must flatten a handful of leaves per slot, not
+    # one per PI: host scalars collapse into one f32 vector, host arrays
+    # into one stacked leaf per distinct shape; jax arrays pass through
+    # untouched (packing them would force a device sync).
+    dev = jnp.ones((4,), jnp.float32)
+    vals = {
+        "s2": 0.2, "s1": np.float32(0.1), "s3": 0.3,          # 3 scalars
+        "b1": np.full((16, 6), 0.5), "b0": np.full((16, 6), 0.4),
+        "b2": np.full((16, 6), 0.6),                          # 3 of one shape
+        "c0": np.linspace(0.0, 1.0, 8),                       # 1 of another
+        "j0": dev,                                            # jax leaf
+    }
+    values_seq, names = executor._pack_values_seq([vals, {"x": 0.7}])
+    # Slot 0: 1 scalar vector + 2 grouped arrays + 1 jax array; slot 1: 1
+    # scalar vector (+ empty groups/rest).
+    leaves = jax.tree_util.tree_leaves(values_seq)
+    assert len(leaves) == 4 + 1
+    packed, grouped, rest = values_seq
+    assert packed[0].shape == (3,) and packed[1].shape == (1,)
+    assert [g.shape for g in grouped[0]] == [(1, 8), (3, 16, 6)]
+    assert rest[0]["j0"] is dev
+    # Static layout spec is hashable (jit static arg) and fully ordered.
+    hash(names)
+    assert names[0][0] == ("s1", "s2", "s3")
+    assert names[0][1] == (((8,), ("c0",)), ((16, 6), ("b0", "b1", "b2")))
+    # Round trip: the trace-time unpack rebuilds the per-slot dicts exactly.
+    rebuilt = executor._unpack_values_seq(values_seq, names)
+    assert set(rebuilt[0]) == set(vals)
+    for k, v in vals.items():
+        np.testing.assert_array_equal(np.asarray(rebuilt[0][k], np.float32),
+                                      np.asarray(v, np.float32))
+    assert set(rebuilt[1]) == {"x"}

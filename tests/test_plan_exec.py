@@ -5,15 +5,22 @@ Every backend claim of executor.py is pinned here with exact stream equality
 bitflip-injected, and binary netlists; MUX fusion; plan/jit cache reuse; and
 the Pallas-routed pass variant.
 """
+import hashlib
+import json
+import pathlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hyp import given, settings, st
 
 from repro.core import apps, circuits, executor
+from repro.core import plan as plan_mod
 from repro.core.appnet import APP_NETLISTS
 from repro.core.gates import Netlist
-from repro.core.plan import FUSED_MUX, compile_plan
+from repro.core.plan import (DEFAULT_PIPELINE, FUSED_MUX, PassPipeline,
+                             compile_plan, lower_netlist)
 
 KEY = jax.random.key(0)
 FLIP_KEY = jax.random.key(99)
@@ -233,6 +240,157 @@ def test_fused_plan_collapses_scaled_add_to_single_pass():
     plan = compile_plan(circuits.sc_scaled_add())
     assert plan.n_passes == 1
     assert plan.levels[0][0].op == FUSED_MUX
+
+
+# --------------------------- pinned pipeline goldens ------------------------------
+# tests/golden_digests.json was captured from the pre-refactor compiler: the
+# staged PassPipeline must reproduce every stream bit-for-bit and every
+# optimization counter exactly (drift here means the refactor changed
+# semantics, not just structure).
+
+_GOLD = json.loads((pathlib.Path(__file__).parent
+                    / "golden_digests.json").read_text())
+GOLD_KEY = jax.random.key(42)
+GOLD_FLIP = jax.random.key(7)
+GOLD_BL = _GOLD["bitstream_length"]
+
+GOLD_VALUES = {
+    "sc_multiply": {"a": 0.3, "b": 0.7},
+    "sc_scaled_add": {"a": 0.2, "b": 0.9},
+    "sc_scaled_add_var": {"a": 0.2, "b": 0.9, "s": 0.4},
+    "sc_abs_sub": {"a": 0.4, "b": 0.1},
+    "sc_sqrt": {"a": 0.5},
+    "sc_exp": {"a": 0.5},
+    "sc_scaled_div": {"a": 0.4, "b": 0.4},
+}
+
+
+def _digest(streams, order) -> str:
+    # Hash output streams by declared-output POSITION, not node name: node
+    # names embed a process-global counter, so they depend on how many
+    # netlists were built earlier in the process (goldens must not).
+    h = hashlib.sha256()
+    for i, name in enumerate(order):
+        arr = np.asarray(streams[name])
+        h.update(str(i).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()[:16]
+
+
+def _golden_case(name):
+    """(netlist, values, bitstream_length) for a golden-digest case name."""
+    if name == "sc_multiply_batched":
+        a = jnp.asarray(np.linspace(0.1, 0.9, 8), jnp.float32)
+        return (circuits.sc_multiply(),
+                {"a": a, "b": jnp.full((8,), 0.5, jnp.float32)}, GOLD_BL)
+    if name.startswith("appnet_"):
+        app = name.removeprefix("appnet_")
+        kw = ({"p": np.full((16, 6), 0.8)} if app == "ol" else
+              {"v": {k: jnp.float32(0.5) for k in apps.HDP_KEYS}})
+        return APP_NETLISTS[app](), apps.appnet_inputs(app, **kw), 256
+    return (getattr(circuits, name)(),
+            {k: jnp.float32(v) for k, v in GOLD_VALUES[name].items()}, GOLD_BL)
+
+
+@pytest.mark.parametrize("case", sorted(_GOLD["digests"]))
+def test_pipeline_matches_pre_refactor_golden_digest(case):
+    name, key_mode, variant = case.split("/")
+    net, vals, bl = _golden_case(name)
+    kw = dict(bitflip_rate=0.05, flip_key=GOLD_FLIP) \
+        if variant == "bitflip" else {}
+    streams = executor.execute(net, vals, GOLD_KEY, bl,
+                               key_mode=key_mode, **kw)
+    assert _digest(streams, net.outputs) == _GOLD["digests"][case], case
+
+
+def test_plan_counters_match_goldens():
+    for name, want in _GOLD["plan_counters"].items():
+        net, _, _ = _golden_case(name)
+        p = compile_plan(net)
+        got = {k: getattr(p, k) for k in want}
+        assert got == want, name
+
+
+_DRIFT_KEYS = ("buff_elided", "cse_elided", "mux_fused", "xor_fused",
+               "and_fused", "not_absorbed")
+
+
+@pytest.mark.parametrize("app", sorted(_GOLD["app_pass_counters"]))
+def test_app_pass_counters_no_drift(app):
+    # CI drift check (see pyproject/README): the cache_info() optimization
+    # counters for each Table-3 app bank are pinned — a pipeline-stage change
+    # that alters how many nodes fuse/elide must update the goldens on
+    # purpose, not silently.
+    want = _GOLD["app_pass_counters"][app]
+    plan_mod.clear_cache()
+    before = {k: plan_mod.cache_info().get(k, 0) for k in _DRIFT_KEYS}
+    bank = plan_mod.compile_bank_plan(apps.cost_stage_netlists(app))
+    after = plan_mod.cache_info()
+    got = {k: after.get(k, 0) - before[k] for k in _DRIFT_KEYS}
+    got["merged_passes"] = bank.n_passes
+    got["looped_passes"] = bank.n_passes_looped
+    assert got == want, app
+
+
+def test_clear_cache_invalidates_per_netlist_memo():
+    # Regression (cache staleness): clear_cache() empties the interning
+    # caches, but the per-netlist _plan_memo used to keep pointing at the
+    # old plan object — a post-clear compile returned a plan no longer in
+    # any cache, silently defeating the clear.
+    net = circuits.sc_multiply()
+    p1 = compile_plan(net)
+    plan_mod.clear_cache()
+    p2 = compile_plan(net)
+    assert p2 is not p1
+    # Epoch-stale memo entries are pruned, not accumulated.
+    for _ in range(5):
+        plan_mod.clear_cache()
+        compile_plan(net)
+        compile_plan(net, fuse_mux=False)
+    assert len(net._plan_memo) <= 2
+
+
+def test_every_plan_carries_a_schedule():
+    for name in ("sc_multiply", "sc_scaled_div", "appnet_ol"):
+        net, _, _ = _golden_case(name)
+        p = compile_plan(net)
+        assert p.schedule is not None
+        assert p.schedule.logic_cycles >= p.n_passes
+
+
+@settings(max_examples=20, deadline=None)
+@given(idx=st.integers(0, len(GOLD_VALUES) - 1),
+       fuse=st.booleans(),
+       key_mode=st.sampled_from(("batched", "legacy")),
+       frac=st.floats(0.05, 0.95))
+def test_property_pipeline_bit_identical(idx, fuse, key_mode, frac):
+    # Property (random netlist x pipeline config x fuse_mux): the staged
+    # pipeline's compiled output is bit-identical to the reference
+    # interpreter, and rebuilding the PassPipeline from its own stages
+    # lowers to the identical pass program.
+    name = sorted(GOLD_VALUES)[idx]
+    net = getattr(circuits, name)()
+    vals = {k: jnp.float32(round(min(max(v * frac * 2.0, 0.05), 0.95), 3))
+            for k, v in GOLD_VALUES[name].items()}
+    # fuse=False exercises the unfused plan via the bitflip path (the only
+    # execute() entry that selects it).
+    kw = {} if fuse else dict(bitflip_rate=0.05, flip_key=GOLD_FLIP)
+    ref = executor.execute(net, vals, GOLD_KEY, 256, backend="reference",
+                           key_mode=key_mode, **kw)
+    cmp = executor.execute(net, vals, GOLD_KEY, 256, backend="compiled",
+                           key_mode=key_mode, **kw)
+    assert set(ref) == set(cmp)
+    for o in ref:
+        assert (ref[o] == cmp[o]).all(), f"{name}:{o}"
+    p_default = lower_netlist(net, fuse_mux=fuse)
+    p_rebuilt = lower_netlist(
+        net, fuse_mux=fuse,
+        pipeline=PassPipeline(stages=DEFAULT_PIPELINE.stages))
+    assert p_rebuilt.levels == p_default.levels
+    assert p_rebuilt.aliases == p_default.aliases
+    assert p_rebuilt.stream_table == p_default.stream_table
+    assert p_rebuilt.schedule.logic_cycles == p_default.schedule.logic_cycles
 
 
 # ---------------------------------- pallas ----------------------------------------
