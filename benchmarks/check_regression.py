@@ -44,6 +44,11 @@ PAIRS = [
     # threshold only catches the async path collapsing to (or below) the
     # single-bank baseline.
     ("BENCH_serve_multibank_smoke.json", "BENCH_serve_multibank.json", 0.25),
+    # The fault record's only speedup field is chaos_vs_clean_speedup —
+    # clean-replay time over chaos-replay time, ~0.9X when recovery is
+    # cheap.  Sub-ms smoke replays are noisy, so only the chaos path
+    # getting an order of magnitude slower than clean should warn.
+    ("BENCH_faults_smoke.json", "BENCH_faults.json", 0.15),
 ]
 
 

@@ -30,10 +30,10 @@ def main(argv=None):
                           else "BENCH_plan_exec.json")
 
     t0 = time.time()
-    from . import (bank_plan_bench, fig10_energy, fig11_lifetime,
-                   plan_exec_bench, sc_matmul_bench, serve_bench,
-                   serve_multibank_bench, sng_bench, table2_arith,
-                   table3_apps, table4_bitflip)
+    from . import (bank_plan_bench, fault_campaign, fig10_energy,
+                   fig11_lifetime, plan_exec_bench, sc_matmul_bench,
+                   serve_bench, serve_multibank_bench, sng_bench,
+                   table2_arith, table3_apps, table4_bitflip)
 
     print("=" * 72)
     print("Stoch-IMC reproduction benchmarks (paper: 10.1016/j.aeue.2024.155614)")
@@ -70,6 +70,10 @@ def main(argv=None):
                   "run `XLA_FLAGS=--xla_force_host_platform_device_count=4 "
                   "python -m benchmarks.serve_multibank_bench` or rerun "
                   "benchmarks.run with that XLA_FLAGS setting")
+    # Fault campaign: smoke runs it as its own CI step
+    # (`python -m benchmarks.fault_campaign --smoke`, like the serve
+    # benches); the chaos half skips itself below 2 devices.
+    fc = None if args.smoke else fault_campaign.run()
 
     with open(args.bench_out, "w") as f:
         json.dump(pe, f, indent=2)
@@ -85,10 +89,14 @@ def main(argv=None):
     if mb is not None:
         with open("BENCH_serve_multibank.json", "w") as f:
             json.dump(mb, f, indent=2)
+    if fc is not None:
+        with open("BENCH_faults.json", "w") as f:
+            json.dump(fc, f, indent=2)
     print(f"\nwrote {args.bench_out} and {sng_out}"
           + ("" if bp is None else " and BENCH_bank_plan.json")
           + ("" if sv is None else " and BENCH_serve.json")
-          + ("" if mb is None else " and BENCH_serve_multibank.json"))
+          + ("" if mb is None else " and BENCH_serve_multibank.json")
+          + ("" if fc is None else " and BENCH_faults.json"))
 
     s = t3["summary"]
     print("\n" + "=" * 72)
@@ -138,6 +146,19 @@ def main(argv=None):
                  f"{mb['speedup_vs_single_bank']:.1f}X", ">=2X (target)",
                  mb["speedup_vs_single_bank"] >= 2.0
                  and mb["bit_identical"]))
+        if fc is not None:
+            worst_tr = max(fc["accuracy"][a]["transient"][-1]
+                           for a in fc["apps"])
+            checks.append(
+                ("Fault sweep: transient worst err @20%",
+                 f"{worst_tr:.2f}%", "<10%", worst_tr < 10.0))
+            if fc["chaos"] is not None:
+                ch = fc["chaos"]
+                checks.append(
+                    ("Chaos serve: lost tickets",
+                     f"{ch['lost_tickets'] + ch['failed_tickets']}", "0",
+                     ch["lost_tickets"] == 0 and ch["failed_tickets"] == 0
+                     and ch["bit_identical"]))
     ok = True
     for name, got, paper, passed in checks:
         mark = "PASS" if passed else "FAIL"

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import bitstream as bs
-from . import circuits, executor, sc_ops
+from . import circuits, executor, faults, sc_ops
 from .gates import Netlist
 
 
@@ -48,8 +48,25 @@ def mean_select_stream(key: jax.Array, leaves: jax.Array, bl: int) -> jax.Array:
     return bs.pack_bits(picked)
 
 
-def _flip(key, words, rate):
-    return sc_ops.flip_bits(key, words, rate) if rate > 0 else words
+def _flip(key, words, rate, model=None):
+    """Fault injection on one stored intermediate (Table-4 checkpoints).
+
+    Each call site models one STT-MRAM array holding the stage's streams:
+    transient flips under the legacy ``rate``, or the full ``FaultModel``
+    (stuck-at cells, dead rows, wear) — each site draws its own masks from
+    its own key, so distinct arrays fail independently."""
+    if not faults.injecting(rate, model):
+        return words
+    return faults.apply_faults(key, words, rate, model)
+
+
+def _app_fault_model(rate: float, model):
+    """Normalize/validate the (bitflip_rate, fault_model) pair of one app."""
+    model = faults.normalize_fault_model(model)
+    if model is not None and rate > 0.0:
+        raise ValueError("pass bitflip_rate or fault_model, not both "
+                         "(FaultModel(flip_rate=...) subsumes bitflip_rate)")
+    return model
 
 
 def _value_stream(key: jax.Array, value: jax.Array, bl: int) -> jax.Array:
@@ -90,21 +107,24 @@ def lit_exact(a: np.ndarray) -> np.ndarray:
 
 
 def lit_stochastic(key: jax.Array, a: jax.Array, bl: int = 256,
-                   bitflip_rate: float = 0.0) -> jax.Array:
+                   bitflip_rate: float = 0.0, fault_model=None) -> jax.Array:
     """SC accuracy path for LIT.  a: (..., 81) in [0,1]; returns T estimates."""
+    fault_model = _app_fault_model(bitflip_rate, fault_model)
     ks = jax.random.split(key, 16)
     a = jnp.asarray(a, jnp.float32)
-    A1 = _flip(ks[10], bs.generate(ks[0], a, bl), bitflip_rate)   # (...,81,W)
-    A2 = _flip(ks[11], bs.generate(ks[1], a, bl), bitflip_rate)
+    A1 = _flip(ks[10], bs.generate(ks[0], a, bl), bitflip_rate,
+               fault_model)                                       # (...,81,W)
+    A2 = _flip(ks[11], bs.generate(ks[1], a, bl), bitflip_rate, fault_model)
 
     squares = A1 & A2                                             # value a^2
-    squares = _flip(ks[12], squares, bitflip_rate)
+    squares = _flip(ks[12], squares, bitflip_rate, fault_model)
     mean_sq = mean_select_stream(ks[2], squares, bl)              # E[a^2]
     mean_a_x = mean_select_stream(ks[3], A1, bl)
     mean_a_y = mean_select_stream(ks[4], A2, bl)
     mean_sq_of_mean = mean_a_x & mean_a_y                         # E[a]^2
-    mean_sq = _flip(ks[13], mean_sq, bitflip_rate)
-    mean_sq_of_mean = _flip(ks[14], mean_sq_of_mean, bitflip_rate)
+    mean_sq = _flip(ks[13], mean_sq, bitflip_rate, fault_model)
+    mean_sq_of_mean = _flip(ks[14], mean_sq_of_mean, bitflip_rate,
+                            fault_model)
 
     # Absolute difference needs correlated operands: regenerate correlated
     # streams at the decoded values (StoB->BtoS regeneration, DESIGN.md §7).
@@ -121,7 +141,7 @@ def lit_stochastic(key: jax.Array, a: jax.Array, bl: int = 256,
     scaled = sc_ops.scaled_add(sigma_stream, ones, half)          # (sigma+1)/2
     mean_a_z = mean_select_stream(ks[9], A1, bl)
     t_stream = mean_a_z & scaled
-    t_stream = _flip(ks[15], t_stream, bitflip_rate)
+    t_stream = _flip(ks[15], t_stream, bitflip_rate, fault_model)
     return bs.to_value(t_stream, bl)
 
 
@@ -175,15 +195,16 @@ def ol_exact(p: np.ndarray) -> np.ndarray:
 
 
 def ol_stochastic(key: jax.Array, p: jax.Array, bl: int = 256,
-                  bitflip_rate: float = 0.0) -> jax.Array:
+                  bitflip_rate: float = 0.0, fault_model=None) -> jax.Array:
+    fault_model = _app_fault_model(bitflip_rate, fault_model)
     ks = jax.random.split(key, 3)
     p = jnp.asarray(p, jnp.float32)
     streams = bs.generate(ks[0], p, bl)            # (..., 6, W) independent
-    streams = _flip(ks[1], streams, bitflip_rate)
+    streams = _flip(ks[1], streams, bitflip_rate, fault_model)
     out = streams[..., 0, :]
     for i in range(1, p.shape[-1]):
         out = out & streams[..., i, :]
-    out = _flip(ks[2], out, bitflip_rate)
+    out = _flip(ks[2], out, bitflip_rate, fault_model)
     return bs.to_value(out, bl)
 
 
@@ -220,20 +241,22 @@ def hdp_exact(v: dict[str, np.ndarray]) -> np.ndarray:
 
 
 def hdp_stochastic(key: jax.Array, v: dict[str, jax.Array], bl: int = 256,
-                   bitflip_rate: float = 0.0) -> jax.Array:
+                   bitflip_rate: float = 0.0, fault_model=None) -> jax.Array:
+    fault_model = _app_fault_model(bitflip_rate, fault_model)
     ks = jax.random.split(key, 12)
     g = {k: bs.generate(ks[i], jnp.asarray(v[k], jnp.float32), bl)
          for i, k in enumerate(HDP_KEYS)}
-    if bitflip_rate > 0:
+    if faults.injecting(bitflip_rate, fault_model):
         fk = jax.random.split(ks[8], len(HDP_KEYS))
-        g = {k: _flip(fk[i], s, bitflip_rate) for i, (k, s) in enumerate(g.items())}
+        g = {k: _flip(fk[i], s, bitflip_rate, fault_model)
+             for i, (k, s) in enumerate(g.items())}
     # Eq. (9): nested MUXes with variable selects P(D), P(E).
     inner_e = sc_ops.scaled_add(g["p_ed"], g["p_end"], g["p_d"])
     inner_ne = sc_ops.scaled_add(g["p_ned"], g["p_nend"], g["p_d"])
     # Independent select stream instances for the outer MUX:
     p_e2 = bs.generate(ks[9], jnp.asarray(v["p_e"], jnp.float32), bl)
     p_hd_ed = sc_ops.scaled_add(inner_e, inner_ne, p_e2)
-    p_hd_ed = _flip(ks[10], p_hd_ed, bitflip_rate)
+    p_hd_ed = _flip(ks[10], p_hd_ed, bitflip_rate, fault_model)
     # Eq. (8): numerator / (numerator + complement term) via the JK divider.
     num = g["p_bp"] & g["p_cp"] & p_hd_ed
     # Complement streams: NOT of independent regenerations (independence for
@@ -288,10 +311,12 @@ def kde_exact(x_t: np.ndarray, hist: np.ndarray) -> np.ndarray:
 
 
 def kde_stochastic(key: jax.Array, x_t: jax.Array, hist: jax.Array,
-                   bl: int = 256, bitflip_rate: float = 0.0) -> jax.Array:
+                   bl: int = 256, bitflip_rate: float = 0.0,
+                   fault_model=None) -> jax.Array:
     """Five independent e^{-0.8 d} factors per history term, ANDed (paper:
     "five stages of e^{-4/5 x} multiplication"); unbiasedness needs fresh
     correlated (x_t, x_i) pairs and fresh Maclaurin input copies per factor."""
+    fault_model = _app_fault_model(bitflip_rate, fault_model)
     x_t = jnp.asarray(x_t, jnp.float32)
     hist = jnp.asarray(hist, jnp.float32)
     n_hist = hist.shape[-1]
@@ -305,7 +330,8 @@ def kde_stochastic(key: jax.Array, x_t: jax.Array, hist: jax.Array,
             xa, xb = bs.generate_correlated(keys[ki], [x_t, hist[..., i]], bl)
             ki += 1
             d = xa ^ xb                                   # |x_t - x_i|
-            d = _flip(jax.random.fold_in(keys[-1], ki), d, bitflip_rate)
+            d = _flip(jax.random.fold_in(keys[-1], ki), d, bitflip_rate,
+                      fault_model)
             copies = []
             for _ in range(order):
                 # independent copies of the diff for the Maclaurin ladder
@@ -318,7 +344,7 @@ def kde_stochastic(key: jax.Array, x_t: jax.Array, hist: jax.Array,
         terms.append(factor)
     stacked = jnp.stack(terms, axis=-2)                   # (..., N, W)
     out = mean_select_stream(keys[-2], stacked, bl)
-    out = _flip(keys[-1], out, bitflip_rate)
+    out = _flip(keys[-1], out, bitflip_rate, fault_model)
     return bs.to_value(out, bl)
 
 
@@ -400,7 +426,8 @@ def appnet_inputs(app: str, *, a=None, p=None, v=None, x_t=None,
 def appnet_stochastic(app: str, key: jax.Array, bl: int = 256,
                       backend: str | None = None, bitflip_rate: float = 0.0,
                       flip_key: jax.Array | None = None,
-                      net: Netlist | None = None, **inputs) -> dict[str, jax.Array]:
+                      net: Netlist | None = None, fault_model=None,
+                      **inputs) -> dict[str, jax.Array]:
     """Execute the composed per-bit application netlist end to end.
 
     This is the cost-path netlist (``appnet.APP_NETLISTS`` — the circuit
@@ -417,7 +444,7 @@ def appnet_stochastic(app: str, key: jax.Array, bl: int = 256,
     values = appnet_inputs(app, **inputs)
     return executor.execute_value(net, values, key, bl,
                                   bitflip_rate=bitflip_rate, flip_key=flip_key,
-                                  backend=backend)
+                                  backend=backend, fault_model=fault_model)
 
 
 def appnet_stochastic_many(requests, key, bl: int = 256,

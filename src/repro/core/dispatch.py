@@ -28,7 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import bitstream as bs
-from . import sc_ops
+from . import faults as _faults
+from .faults import FaultModel
 from .gates import Netlist
 from .plan import BankPlan, ExecutionPlan, compile_bank_plan, compile_plan, member_prefix
 from .streams import (_BACKENDS, _KEY_MODES, DEFAULT_BACKEND, DEFAULT_KEY_MODE,
@@ -39,13 +40,14 @@ from .streams import (_BACKENDS, _KEY_MODES, DEFAULT_BACKEND, DEFAULT_KEY_MODE,
 
 @partial(jax.jit, static_argnames=("plan", "bitstream_length", "bitflip_rate",
                                    "use_pallas", "decode", "key_mode",
-                                   "batch_shape"))
+                                   "batch_shape", "fault_model"))
 def _execute_compiled(plan: ExecutionPlan, values: dict[str, jax.Array],
                       key: jax.Array, flip_key, bitstream_length: int,
                       bitflip_rate: float, use_pallas: bool,
                       decode: bool = False,
                       key_mode: str = DEFAULT_KEY_MODE,
-                      batch_shape: tuple[int, ...] | None = None) -> dict[str, jax.Array]:
+                      batch_shape: tuple[int, ...] | None = None,
+                      fault_model: FaultModel | None = None) -> dict[str, jax.Array]:
     """Whole-netlist execution as one XLA program.
 
     Mirrors the reference interpreter's key discipline exactly (whatever the
@@ -55,6 +57,14 @@ def _execute_compiled(plan: ExecutionPlan, values: dict[str, jax.Array],
     leaving one dispatch per call.  In batched key mode the PI streams come
     from ONE fused SNG pass over the plan's stream table — generation, logic,
     fault injection and decode are all one XLA program either way.
+
+    ``fault_model`` (static, pre-normalized) generalizes ``bitflip_rate``:
+    its transient component consumes each injection point's raw fault key —
+    the same split, the same key assignment — and its persistent/static
+    masks stack on top (``core/faults.py``), so a transient-only model is
+    bit-identical to the legacy rate path.  Static-only models (dead
+    columns, explicit cell maps) need no ``flip_key``; a placeholder key
+    feeds the (unconsumed) splits.
     """
     from ..kernels import netlist_exec
 
@@ -63,26 +73,30 @@ def _execute_compiled(plan: ExecutionPlan, values: dict[str, jax.Array],
                               use_pallas=use_pallas, table=plan.stream_table)
 
     gate_fkeys = None
-    if bitflip_rate > 0.0:
-        fkeys = jax.random.split(flip_key, len(streams) + plan.n_gates)
+    if _faults.injecting(bitflip_rate, fault_model):
+        fk = flip_key if flip_key is not None else jax.random.key(0)
+        fkeys = jax.random.split(fk, len(streams) + plan.n_gates)
         for i, name in enumerate(sorted(streams)):
-            streams[name] = sc_ops.flip_bits(fkeys[i], streams[name], bitflip_rate)
+            streams[name] = _faults.apply_faults(fkeys[i], streams[name],
+                                                 bitflip_rate, fault_model)
         gate_fkeys = fkeys[len(streams):]
 
     if not plan.is_sequential:
         env = dict(streams)
         netlist_exec.run_combinational(plan, env, gate_fkeys=gate_fkeys,
                                        bitflip_rate=bitflip_rate,
+                                       fault_model=fault_model,
                                        use_pallas=use_pallas)
         packed_outs = {o: env[o] for o in plan.outputs}
     else:
         packed_outs = netlist_exec.run_sequential(
             plan, streams, use_pallas=use_pallas,
             n_words=bs.n_words(bitstream_length))
-        if bitflip_rate > 0.0:
+        if gate_fkeys is not None:
             for i, o in enumerate(sorted(packed_outs)):
-                packed_outs[o] = sc_ops.flip_bits(gate_fkeys[i], packed_outs[o],
-                                                  bitflip_rate)
+                packed_outs[o] = _faults.apply_faults(gate_fkeys[i],
+                                                      packed_outs[o],
+                                                      bitflip_rate, fault_model)
     if decode:
         return {o: bs.to_value(w, bitstream_length)
                 for o, w in packed_outs.items()}
@@ -125,12 +139,36 @@ def _execute_binary_compiled(plan: ExecutionPlan,
     return {o: env[o] for o in plan.outputs}
 
 
-def _plan_for(net: Netlist, bitflip_rate: float) -> ExecutionPlan:
+def _plan_for(net: Netlist, bitflip_rate: float,
+              fault_model: FaultModel | None = None) -> ExecutionPlan:
     # Per-gate fault injection must observe the 4-gate MUX intermediates, so
     # the fused plan is only valid for clean combinational runs; sequential
     # runs inject at PI/output streams only (like the reference) and may fuse.
-    fuse = bitflip_rate == 0.0 or net.is_sequential
+    fuse = not _faults.injecting(bitflip_rate, fault_model) \
+        or net.is_sequential
     return compile_plan(net, fuse_mux=fuse)
+
+
+def _check_fault_args(bitflip_rate: float, fault_model, flip_key,
+                      what: str = "flip_key") -> "FaultModel | None":
+    """Normalize/validate the fault arguments shared by every entry point.
+
+    Returns the normalized model (null models collapse to ``None`` so the
+    clean path — and its jit cache entry — is taken).  ``bitflip_rate`` and
+    ``fault_model`` are mutually exclusive: the model's ``flip_rate`` *is*
+    the transient rate, and letting both stack would silently double-inject.
+    """
+    fault_model = _faults.normalize_fault_model(fault_model)
+    if fault_model is not None and bitflip_rate > 0.0:
+        raise ValueError(
+            "pass bitflip_rate or fault_model, not both "
+            "(FaultModel(flip_rate=...) subsumes bitflip_rate)")
+    if bitflip_rate > 0.0 and flip_key is None:
+        raise ValueError(f"bitflip_rate > 0 requires {what}")
+    if fault_model is not None and fault_model.needs_keys and flip_key is None:
+        raise ValueError(
+            f"fault_model with random components requires {what}")
+    return fault_model
 
 
 def _check_modes(backend: str | None, key_mode: str | None) -> tuple[str, str]:
@@ -147,25 +185,27 @@ def _check_modes(backend: str | None, key_mode: str | None) -> tuple[str, str]:
 def _dispatch(net: Netlist, values, key, bitstream_length: int,
               bitflip_rate: float, flip_key, backend: str | None,
               decode: bool, key_mode: str | None = None,
-              batch_shape: tuple[int, ...] | None = None) -> dict[str, jax.Array]:
+              batch_shape: tuple[int, ...] | None = None,
+              fault_model: FaultModel | None = None) -> dict[str, jax.Array]:
     backend, key_mode = _check_modes(backend, key_mode)
     if batch_shape is not None:
         batch_shape = tuple(batch_shape)   # hashable for the jit static arg
-    if bitflip_rate > 0.0 and flip_key is None:
-        raise ValueError("bitflip_rate > 0 requires flip_key")
+    fault_model = _check_fault_args(bitflip_rate, fault_model, flip_key)
     if backend == "reference":
         outs = _execute_reference(net, values, key, bitstream_length,
                                   bitflip_rate, flip_key, key_mode=key_mode,
-                                  batch_shape=batch_shape)
+                                  batch_shape=batch_shape,
+                                  fault_model=fault_model)
         if decode:
             outs = {k: bs.to_value(v, bitstream_length) for k, v in outs.items()}
         return outs
-    plan = _plan_for(net, bitflip_rate)
+    plan = _plan_for(net, bitflip_rate, fault_model)
     values = {k: jnp.asarray(v, jnp.float32) for k, v in values.items()}
     return _execute_compiled(plan, values, key, flip_key, bitstream_length,
                              float(bitflip_rate),
                              backend == "compiled_pallas", decode=decode,
-                             key_mode=key_mode, batch_shape=batch_shape)
+                             key_mode=key_mode, batch_shape=batch_shape,
+                             fault_model=fault_model)
 
 
 def _dispatch_binary(net: Netlist, operand_bits: dict[str, jax.Array],
@@ -260,7 +300,8 @@ def _execute_bank_impl(bank: BankPlan, values_seq, keys, flip_keys,
                        bitstream_length: int, bitflip_rate: float,
                        use_pallas: bool, decode: bool,
                        key_mode: str = DEFAULT_KEY_MODE, batch_shapes=None,
-                       active=None, scalar_names=None):
+                       active=None, scalar_names=None,
+                       fault_model: FaultModel | None = None):
     """Whole-bank execution of N member netlists as one XLA program.
 
     Stream generation and fault keying stay *per member*: member ``i``'s
@@ -295,17 +336,19 @@ def _execute_bank_impl(bank: BankPlan, values_seq, keys, flip_keys,
     member_streams = _gen_bank_streams(bank, values_seq, keys,
                                        bitstream_length, key_mode, use_pallas,
                                        batch_shapes, active=active)
+    inject = _faults.injecting(bitflip_rate, fault_model)
     for i, plan in enumerate(bank.members):
         pre = member_prefix(i)
         streams = member_streams[i]
         masked = active is not None and not active[i]
         tail = None
-        if bitflip_rate > 0.0 and len(streams) + plan.n_gates > 0:
+        if inject and len(streams) + plan.n_gates > 0:
             fkeys = jax.random.split(flip_keys[i], len(streams) + plan.n_gates)
             if not masked:
                 for j, nm in enumerate(sorted(streams)):
-                    streams[nm] = sc_ops.flip_bits(fkeys[j], streams[nm],
-                                                   bitflip_rate)
+                    streams[nm] = _faults.apply_faults(fkeys[j], streams[nm],
+                                                       bitflip_rate,
+                                                       fault_model)
             tail = fkeys[len(streams):]
         native_batch[i] = (next(iter(streams.values())).shape[:-1]
                            if streams else ())
@@ -324,6 +367,7 @@ def _execute_bank_impl(bank: BankPlan, values_seq, keys, flip_keys,
         gf = jnp.concatenate(comb_gate_fkeys) if comb_gate_fkeys else None
         netlist_exec.run_combinational(bank.comb, comb_env, gate_fkeys=gf,
                                        bitflip_rate=bitflip_rate,
+                                       fault_model=fault_model,
                                        use_pallas=use_pallas)
         for i in bank.comb_members:
             if active is not None and not active[i]:
@@ -340,10 +384,11 @@ def _execute_bank_impl(bank: BankPlan, values_seq, keys, flip_keys,
             pre = member_prefix(i)
             m = {o: _restrict(packed[pre + o], native_batch[i])
                  for o in bank.members[i].outputs}
-            if bitflip_rate > 0.0:
+            if inject:
                 tail = seq_out_fkeys[i]
                 for j, o in enumerate(sorted(m)):
-                    m[o] = sc_ops.flip_bits(tail[j], m[o], bitflip_rate)
+                    m[o] = _faults.apply_faults(tail[j], m[o], bitflip_rate,
+                                                fault_model)
             outs[i] = m
     if decode:
         outs = [m if m is None else
@@ -354,7 +399,7 @@ def _execute_bank_impl(bank: BankPlan, values_seq, keys, flip_keys,
 
 _BANK_STATIC = ("bank", "bitstream_length", "bitflip_rate", "use_pallas",
                 "decode", "key_mode", "batch_shapes", "active",
-                "scalar_names")
+                "scalar_names", "fault_model")
 _execute_bank = partial(jax.jit, static_argnames=_BANK_STATIC)(
     _execute_bank_impl)
 #: Donating variant (its own jit cache): XLA reuses the stacked key rows'
@@ -476,10 +521,26 @@ def _normalize_keys(keys, n: int, what: str = "keys") -> jax.Array:
     return keys
 
 
+def _fault_flip_keys(flip_keys, n: int, bitflip_rate: float,
+                     fault_model: "FaultModel | None"):
+    """Normalize per-member fault keys for a bank dispatch.
+
+    When injecting, the bank impl splits a key per member unconditionally;
+    a static-only model (no random components) may run keyless, so a
+    deterministic placeholder fills in — its splits are never consumed.
+    """
+    if not _faults.injecting(bitflip_rate, fault_model):
+        return None
+    if flip_keys is None:
+        return _normalize_keys(jax.random.key(0), n, "flip_keys")
+    return _normalize_keys(flip_keys, n, "flip_keys")
+
+
 def _dispatch_many(nets, values_seq, keys, bitstream_length: int,
                    bitflip_rate: float, flip_keys, backend: str | None,
                    decode: bool, key_mode: str | None = None,
-                   batch_shapes=None) -> list:
+                   batch_shapes=None,
+                   fault_model: FaultModel | None = None) -> list:
     backend, key_mode = _check_modes(backend, key_mode)
     n = len(nets)
     if n == 0:
@@ -488,25 +549,25 @@ def _dispatch_many(nets, values_seq, keys, bitstream_length: int,
         raise ValueError(f"values: got {len(values_seq)} for {n} netlists")
     batch_shapes = _normalize_batch_shapes(batch_shapes, n)
     keys = _normalize_keys(keys, n)
-    if bitflip_rate > 0.0:
-        if flip_keys is None:
-            raise ValueError("bitflip_rate > 0 requires flip_keys")
-        flip_keys = _normalize_keys(flip_keys, n, "flip_keys")
-    else:
-        flip_keys = None
+    fault_model = _check_fault_args(bitflip_rate, fault_model, flip_keys,
+                                    "flip_keys")
+    flip_keys = _fault_flip_keys(flip_keys, n, bitflip_rate, fault_model)
     if backend == "reference":
         return [_dispatch(net, dict(vals), keys[i], bitstream_length,
                           bitflip_rate,
                           flip_keys[i] if flip_keys is not None else None,
                           backend, decode, key_mode=key_mode,
-                          batch_shape=batch_shapes[i] if batch_shapes else None)
+                          batch_shape=batch_shapes[i] if batch_shapes else None,
+                          fault_model=fault_model)
                 for i, (net, vals) in enumerate(zip(nets, values_seq))]
-    bank = compile_bank_plan(list(nets), fuse_mux=bitflip_rate == 0.0)
+    bank = compile_bank_plan(
+        list(nets),
+        fuse_mux=not _faults.injecting(bitflip_rate, fault_model))
     values_seq, scalar_names = _pack_values_seq(values_seq)
     outs = _execute_bank(bank, values_seq, keys, flip_keys, bitstream_length,
                          float(bitflip_rate), backend == "compiled_pallas",
                          decode, key_mode=key_mode, batch_shapes=batch_shapes,
-                         scalar_names=scalar_names)
+                         scalar_names=scalar_names, fault_model=fault_model)
     return list(outs)
 
 
@@ -514,7 +575,8 @@ def execute_bank(bank: BankPlan, values_seq, keys, bitstream_length: int,
                  *, active=None, bitflip_rate: float = 0.0, flip_keys=None,
                  backend: str | None = None, key_mode: str | None = None,
                  batch_shapes=None, decode: bool = False,
-                 device=None, donate: bool = False) -> list:
+                 device=None, donate: bool = False,
+                 fault_model: FaultModel | None = None) -> list:
     """Execute a prebuilt (possibly padded) BankPlan slot-wise.
 
     The serving-engine entry point (``repro.serve.sc_engine``): ``bank`` is
@@ -556,12 +618,9 @@ def execute_bank(bank: BankPlan, values_seq, keys, bitstream_length: int,
     keys = _normalize_keys(keys, n)
     batch_shapes = _normalize_batch_shapes(batch_shapes, n, "slots")
     active = _normalize_active(active, n)
-    if bitflip_rate > 0.0:
-        if flip_keys is None:
-            raise ValueError("bitflip_rate > 0 requires flip_keys")
-        flip_keys = _normalize_keys(flip_keys, n, "flip_keys")
-    else:
-        flip_keys = None
+    fault_model = _check_fault_args(bitflip_rate, fault_model, flip_keys,
+                                    "flip_keys")
+    flip_keys = _fault_flip_keys(flip_keys, n, bitflip_rate, fault_model)
     if device is not None:
         keys = jax.device_put(keys, device)
         if flip_keys is not None:
@@ -569,7 +628,7 @@ def execute_bank(bank: BankPlan, values_seq, keys, bitstream_length: int,
     args = (bank, values_seq, keys, flip_keys, bitstream_length,
             float(bitflip_rate), backend == "compiled_pallas", decode)
     kw = dict(key_mode=key_mode, batch_shapes=batch_shapes, active=active,
-              scalar_names=scalar_names)
+              scalar_names=scalar_names, fault_model=fault_model)
     if donate:
         # Donation is best-effort: when no output can alias a key-row buffer
         # (the common case — outputs are packed words, not keys) XLA ignores
@@ -625,22 +684,27 @@ def _execute_reference(net: Netlist, values: dict[str, jax.Array],
                        bitflip_rate: float = 0.0,
                        flip_key: jax.Array | None = None,
                        key_mode: str = DEFAULT_KEY_MODE,
-                       batch_shape: tuple[int, ...] | None = None) -> dict[str, jax.Array]:
+                       batch_shape: tuple[int, ...] | None = None,
+                       fault_model: FaultModel | None = None) -> dict[str, jax.Array]:
     """Gate-by-gate interpreter: the oracle for the compiled plans.
 
     Stream generation honors the same ``key_mode`` as the compiled backends
     (the discipline lives in ``_gen_pi_streams``, upstream of interpretation),
     so reference and compiled outputs stay bit-for-bit comparable in either
-    mode."""
+    mode.  Fault injection (``bitflip_rate`` or its ``fault_model``
+    generalization) applies at the same points with the same key splits as
+    the compiled path."""
     streams = _gen_pi_streams(net.pis, values, key, bitstream_length,
                               key_mode=key_mode, batch_shape=batch_shape)
 
-    if bitflip_rate > 0.0:
-        if flip_key is None:
-            raise ValueError("bitflip_rate > 0 requires flip_key")
-        fkeys = jax.random.split(flip_key, len(streams) + len(net.gates))
+    fault_model = _check_fault_args(bitflip_rate, fault_model, flip_key)
+    inject = _faults.injecting(bitflip_rate, fault_model)
+    if inject:
+        fk = flip_key if flip_key is not None else jax.random.key(0)
+        fkeys = jax.random.split(fk, len(streams) + len(net.gates))
         for i, name in enumerate(sorted(streams)):
-            streams[name] = sc_ops.flip_bits(fkeys[i], streams[name], bitflip_rate)
+            streams[name] = _faults.apply_faults(fkeys[i], streams[name],
+                                                 bitflip_rate, fault_model)
 
     if not net.is_sequential:
         # Snapshot the PI-stream count: gate outputs are appended to the env
@@ -649,8 +713,9 @@ def _execute_reference(net: Netlist, values: dict[str, jax.Array],
         n_streams = len(streams)
         for gi, g in enumerate(net.gates):
             out = bs.GATE_FNS[g.gtype](*[streams[i] for i in g.inputs])
-            if bitflip_rate > 0.0:
-                out = sc_ops.flip_bits(fkeys[n_streams + gi], out, bitflip_rate)
+            if inject:
+                out = _faults.apply_faults(fkeys[n_streams + gi], out,
+                                           bitflip_rate, fault_model)
             streams[g.output] = out
         return {o: streams[o] for o in net.outputs}
 
@@ -690,8 +755,9 @@ def _execute_reference(net: Netlist, values: dict[str, jax.Array],
         # in bits 1..31 of the per-step values, which pack_bits would sum
         # into other bit positions of the word.
         packed_outs[o] = bs.pack_bits(bits & jnp.uint32(1))
-    if bitflip_rate > 0.0:
+    if inject:
         for i, o in enumerate(sorted(packed_outs)):
-            packed_outs[o] = sc_ops.flip_bits(fkeys[len(streams) + i],
-                                              packed_outs[o], bitflip_rate)
+            packed_outs[o] = _faults.apply_faults(fkeys[len(streams) + i],
+                                                  packed_outs[o],
+                                                  bitflip_rate, fault_model)
     return packed_outs

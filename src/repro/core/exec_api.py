@@ -15,10 +15,11 @@ from typing import Any
 
 import jax
 
-from .dispatch import (_as_f32, _check_modes, _dispatch, _dispatch_binary,
-                       _dispatch_many, _execute_compiled,
+from .dispatch import (_as_f32, _check_fault_args, _check_modes, _dispatch,
+                       _dispatch_binary, _dispatch_many, _execute_compiled,
                        _normalize_batch_shapes, _normalize_keys, _stack_keys,
                        execute_bank)
+from .faults import FaultModel
 from .gates import Netlist
 from .plan import BankPlan, ExecutionPlan
 
@@ -35,6 +36,16 @@ class ExecOptions:
     packed binary test-vector words instead of stochastic streams (the
     ``execute_binary`` behavior — ``values`` are then the operand bits and
     the stream fields are ignored).
+
+    ``fault_model`` (a ``core.faults.FaultModel``) generalizes
+    ``bitflip_rate`` to the STT-MRAM fault taxonomy — transient flips plus
+    stuck-at cells, dead rows/columns and endurance wear — keyed by the same
+    ``flip_key`` discipline (required whenever the model has random
+    components); the two fields are mutually exclusive.  ``deadline_ms`` is
+    a *serving* knob: the bank server bounds the request's total wall time
+    (queue + retries + device) by it, failing the ticket with
+    ``DeadlineExceeded`` when it passes; the execution paths themselves
+    ignore it.
     """
 
     backend: str | None = None
@@ -45,6 +56,8 @@ class ExecOptions:
     batch_shape: "tuple[int, ...] | None" = None
     decode: bool = False
     binary: bool = False
+    fault_model: "FaultModel | None" = None
+    deadline_ms: "float | None" = None
 
 
 @dataclasses.dataclass
@@ -84,6 +97,14 @@ class ExecRequest:
     def flip_key(self):
         return self.options.flip_key
 
+    @property
+    def fault_model(self) -> "FaultModel | None":
+        return self.options.fault_model
+
+    @property
+    def deadline_ms(self) -> "float | None":
+        return self.options.deadline_ms
+
 
 # -------------------------------- shim API ----------------------------------------
 
@@ -91,12 +112,15 @@ def execute(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
             bitstream_length: int, bitflip_rate: float = 0.0,
             flip_key: jax.Array | None = None,
             backend: str | None = None, key_mode: str | None = None,
-            batch_shape: tuple[int, ...] | None = None) -> dict[str, jax.Array]:
+            batch_shape: tuple[int, ...] | None = None,
+            fault_model: "FaultModel | None" = None) -> dict[str, jax.Array]:
     """Execute a (possibly sequential) netlist; returns packed output streams.
 
     ``bitflip_rate`` injects faults on the PI streams and on every gate
     output stream (the paper injects at input/output nodes of the
-    arithmetic operations).  ``backend`` selects the execution engine (see
+    arithmetic operations); ``fault_model`` generalizes it to the STT-MRAM
+    taxonomy (stuck-at, dead regions, wear — ``core/faults.py``), keyed by
+    the same ``flip_key``.  ``backend`` selects the execution engine (see
     ``executor`` module docstring); all backends are bit-identical.
     ``key_mode`` selects the stream-generation key discipline (``"batched"``
     default — one fused SNG pass for all PI streams; ``"legacy"`` — one PRNG
@@ -110,14 +134,16 @@ def execute(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
     return run(ExecRequest(net, values, key, ExecOptions(
         backend=backend, key_mode=key_mode,
         bitstream_length=bitstream_length, bitflip_rate=bitflip_rate,
-        flip_key=flip_key, batch_shape=batch_shape)))
+        flip_key=flip_key, batch_shape=batch_shape,
+        fault_model=fault_model)))
 
 
 def execute_value(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
                   bitstream_length: int, bitflip_rate: float = 0.0,
                   flip_key: jax.Array | None = None,
                   backend: str | None = None, key_mode: str | None = None,
-                  batch_shape: tuple[int, ...] | None = None) -> dict[str, jax.Array]:
+                  batch_shape: tuple[int, ...] | None = None,
+                  fault_model: "FaultModel | None" = None) -> dict[str, jax.Array]:
     """Execute and decode each output stream to its unipolar value.
 
     On the compiled backends the decode is fused into the execution program
@@ -125,7 +151,8 @@ def execute_value(net: Netlist, values: dict[str, jax.Array], key: jax.Array,
     return run(ExecRequest(net, values, key, ExecOptions(
         backend=backend, key_mode=key_mode,
         bitstream_length=bitstream_length, bitflip_rate=bitflip_rate,
-        flip_key=flip_key, batch_shape=batch_shape, decode=True)))
+        flip_key=flip_key, batch_shape=batch_shape, decode=True,
+        fault_model=fault_model)))
 
 
 def execute_binary(net: Netlist, operand_bits: dict[str, jax.Array],
@@ -246,7 +273,7 @@ def execute_value_many(nets, values_seq, /, *args, **kwargs) -> list:
 # ------------------------------ run() entry point ---------------------------------
 
 _SHARED_OPTION_FIELDS = ("backend", "key_mode", "bitstream_length",
-                         "bitflip_rate", "decode", "binary")
+                         "bitflip_rate", "decode", "binary", "fault_model")
 
 
 def _common_options(reqs: "list[ExecRequest]") -> ExecOptions:
@@ -281,18 +308,20 @@ def _run_one(req: ExecRequest, device=None,
         if backend == "reference":
             raise ValueError("the reference backend interprets netlists; "
                              "pass the Netlist, not its ExecutionPlan")
-        if o.bitflip_rate > 0.0 and flip_key is None:
-            raise ValueError("bitflip_rate > 0 requires flip_key")
+        fault_model = _check_fault_args(o.bitflip_rate, o.fault_model,
+                                        flip_key)
         batch_shape = (tuple(o.batch_shape)
                        if o.batch_shape is not None else None)
         values = {k: _as_f32(v) for k, v in values.items()}
         return _execute_compiled(req.net, values, key, flip_key,
                                  o.bitstream_length, float(o.bitflip_rate),
                                  backend == "compiled_pallas", decode=o.decode,
-                                 key_mode=key_mode, batch_shape=batch_shape)
+                                 key_mode=key_mode, batch_shape=batch_shape,
+                                 fault_model=fault_model)
     return _dispatch(req.net, values, key, o.bitstream_length,
                      o.bitflip_rate, flip_key, o.backend, decode=o.decode,
-                     key_mode=o.key_mode, batch_shape=o.batch_shape)
+                     key_mode=o.key_mode, batch_shape=o.batch_shape,
+                     fault_model=o.fault_model)
 
 
 def _run_many(reqs: "list[ExecRequest]", device=None,
@@ -307,11 +336,12 @@ def _run_many(reqs: "list[ExecRequest]", device=None,
             raise TypeError("run([...]) merges netlists into one bank; pass "
                             "template= to execute a prebuilt BankPlan")
     rate = float(shared.bitflip_rate)
+    model = shared.fault_model
     flip_keys = None
-    if rate > 0.0:
+    if rate > 0.0 or (model is not None and model.needs_keys):
         flip_keys = [r.options.flip_key for r in reqs]
         if any(fk is None for fk in flip_keys):
-            raise ValueError("bitflip_rate > 0 requires a flip_key on every "
+            raise ValueError("fault injection requires a flip_key on every "
                              "request")
     batch_shapes = [r.options.batch_shape for r in reqs]
     if all(b is None for b in batch_shapes):
@@ -327,7 +357,7 @@ def _run_many(reqs: "list[ExecRequest]", device=None,
                           shared.bitstream_length, rate, flip_keys,
                           shared.backend, shared.decode,
                           key_mode=shared.key_mode,
-                          batch_shapes=batch_shapes)
+                          batch_shapes=batch_shapes, fault_model=model)
 
 
 def _run_template(reqs, bank: BankPlan, active=None, device=None,
@@ -345,6 +375,8 @@ def _run_template(reqs, bank: BankPlan, active=None, device=None,
     if shared.binary:
         raise ValueError("run: binary requests execute one at a time")
     rate = float(shared.bitflip_rate)
+    model = shared.fault_model
+    need_keys = rate > 0.0 or (model is not None and model.needs_keys)
     if active is None:
         active = [r is not None for r in reqs]
     # Placeholder rows for unbound slots: any same-impl key works (masked
@@ -359,18 +391,18 @@ def _run_template(reqs, bank: BankPlan, active=None, device=None,
         values_seq[i] = r.values
         key_rows[i] = r.key
         batch_shapes[i] = r.options.batch_shape
-        if rate > 0.0:
+        if need_keys:
             if r.options.flip_key is None:
-                raise ValueError("bitflip_rate > 0 requires a flip_key on "
+                raise ValueError("fault injection requires a flip_key on "
                                  "every request")
             flip_rows[i] = r.options.flip_key
     return execute_bank(
         bank, values_seq, _stack_keys(key_rows), shared.bitstream_length,
         active=active, bitflip_rate=rate,
-        flip_keys=_stack_keys(flip_rows) if rate > 0.0 else None,
+        flip_keys=_stack_keys(flip_rows) if need_keys else None,
         backend=shared.backend, key_mode=shared.key_mode,
         batch_shapes=batch_shapes, decode=shared.decode,
-        device=device, donate=donate)
+        device=device, donate=donate, fault_model=model)
 
 
 def run(request_or_requests, *, template: BankPlan | None = None,

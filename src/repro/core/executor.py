@@ -50,15 +50,17 @@ Every name importable from here before the split still is.
 """
 from __future__ import annotations
 
-from .dispatch import (_BANK_STATIC, _as_f32, _check_modes, _dispatch,  # noqa: F401
-                       _dispatch_binary, _dispatch_many, _execute_bank,
-                       _execute_bank_donating, _execute_bank_impl,
-                       _execute_binary_compiled, _execute_compiled,
-                       _execute_reference, _is_host_scalar, _key_data_host,
-                       _normalize_active, _normalize_batch_shapes,
-                       _normalize_keys, _pack_values_seq, _plan_for,
-                       _restrict, _stack_keys, _unpack_values_seq,
-                       execute_bank, generate_bank_streams)
+from .dispatch import (_BANK_STATIC, _as_f32, _check_fault_args,  # noqa: F401
+                       _check_modes, _dispatch, _dispatch_binary,
+                       _dispatch_many, _execute_bank, _execute_bank_donating,
+                       _execute_bank_impl, _execute_binary_compiled,
+                       _execute_compiled, _execute_reference, _is_host_scalar,
+                       _key_data_host, _normalize_active,
+                       _normalize_batch_shapes, _normalize_keys,
+                       _pack_values_seq, _plan_for, _restrict, _stack_keys,
+                       _unpack_values_seq, execute_bank,
+                       generate_bank_streams)
+from .faults import FaultModel, apply_faults  # noqa: F401
 from .exec_api import (_MANY_TAIL, ExecOptions, ExecRequest,  # noqa: F401
                        _common_options, _many_shim, _many_tail, _run_many,
                        _run_one, _run_template, execute, execute_binary,
@@ -69,6 +71,7 @@ from .streams import (_BACKENDS, _KEY_MODES, DEFAULT_BACKEND,  # noqa: F401
 
 __all__ = [
     "DEFAULT_BACKEND", "DEFAULT_KEY_MODE", "ExecOptions", "ExecRequest",
-    "execute", "execute_bank", "execute_binary", "execute_many",
-    "execute_value", "execute_value_many", "generate_bank_streams", "run",
+    "FaultModel", "execute", "execute_bank", "execute_binary",
+    "execute_many", "execute_value", "execute_value_many",
+    "generate_bank_streams", "run",
 ]

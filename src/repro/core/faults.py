@@ -1,0 +1,243 @@
+"""STT-MRAM fault models lowered to deterministic packed-word masks.
+
+The paper's reliability story (Table 4 bitflip tolerance, the 4.9X/216.3X
+lifetime claims) rests on more than uniform soft errors: real STT-MRAM
+arrays fail through *stuck-at* cells (pinned MTJ free layers, shorted
+tunnel barriers), *dead rows/subarrays* (driver or word-line failures) and
+*write-endurance wear* (repeated RWC passes degrading cells toward
+stuck-at-0).  :class:`FaultModel` captures that taxonomy and lowers every
+kind to word-level masks over packed uint32 bitstreams, applied at exactly
+the injection points the existing ``bitflip_rate`` path uses (PI streams,
+gate outputs, sequential outputs) under the same ``flip_key`` discipline:
+
+* the **transient** component consumes the injection point's *raw* fault
+  key through ``sc_ops.flip_bits`` — ``FaultModel(flip_rate=r)`` is
+  bit-identical to the legacy ``bitflip_rate=r`` path;
+* **persistent** components (stuck-at cells, dead rows) draw their cell
+  maps from ``fold_in``-derived subkeys of the same fault key, so a faulty
+  run is exactly reproducible (same circuit, same ``flip_key`` -> same
+  masks on every backend, key_mode, device, bank slot) while never
+  perturbing the transient draw;
+* **static** components (``dead_cols`` spans, explicit ``sa0_words`` /
+  ``sa1_words`` cell maps) are position-dependent only — the de Lima-style
+  measured fault map case — and need no key at all.
+
+``fault_model=None`` everywhere is bit-identical to today's clean path.
+A ``FaultModel`` is frozen and hashable: it rides through the executor's
+jit boundaries as a static argument next to ``bitflip_rate``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitstream as bs
+from . import sc_ops
+
+#: fold_in tags deriving the persistent-fault subkeys from an injection
+#: point's fault key.  The raw (untagged) key is reserved for the transient
+#: draw so the legacy bitflip path reproduces bit-exactly.
+_STUCK0_TAG = 1
+_STUCK1_TAG = 2
+_DEAD_ROW_TAG = 3
+
+
+def _check_rate(name: str, rate: float) -> float:
+    rate = float(rate)
+    if not 0.0 <= rate <= 1.0:
+        raise ValueError(f"{name} must be in [0, 1], got {rate}")
+    return rate
+
+
+def _check_words(name: str, words) -> "tuple[int, ...] | None":
+    if words is None:
+        return None
+    words = tuple(int(w) for w in words)
+    for w in words:
+        if not 0 <= w <= 0xFFFFFFFF:
+            raise ValueError(f"{name} entries must be uint32 words, got {w:#x}")
+    return words
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """One deterministic STT-MRAM fault configuration.
+
+    Parameters
+    ----------
+    flip_rate:
+        Transient (soft-error / RWC disturb) per-bit flip probability at
+        every injection point — the generalization of ``bitflip_rate``.
+    stuck0_rate / stuck1_rate:
+        Per-cell probability that a cell is permanently stuck at 0 / 1.
+        Cell maps are drawn per injection point from ``fold_in`` subkeys of
+        its fault key: each node's stream occupies its own rows of the
+        array, so distinct nodes see distinct (but reproducible) cell maps.
+    dead_row_rate:
+        Probability that a whole 32-cell row (= one packed word) is dead
+        and reads all-zeros — word-line/driver failures.
+    dead_cols:
+        Static ``(start, stop)`` bit-position spans (half-open, in
+        ``[0, BL)``) stuck at 0 in *every* stream — dead bit-lines shared
+        by all rows of the subarray.
+    sa0_words / sa1_words:
+        Explicit per-word cell maps (tuple of uint32, length ``BL // 32``):
+        a set bit marks a cell stuck at 0 / 1, applied identically to every
+        stream — the measured-fault-map case.  ``sa1`` wins over every
+        zeroing fault (a cell shorted high cannot also read 0).
+    wear_passes / wear_stuck_per_pass:
+        Endurance wear: every recorded pass adds ``wear_stuck_per_pass`` to
+        the effective stuck-at-0 rate (write failures degrade toward the
+        low-resistance state).  Advance with :meth:`worn`.
+    """
+
+    flip_rate: float = 0.0
+    stuck0_rate: float = 0.0
+    stuck1_rate: float = 0.0
+    dead_row_rate: float = 0.0
+    dead_cols: "tuple[tuple[int, int], ...]" = ()
+    sa0_words: "tuple[int, ...] | None" = None
+    sa1_words: "tuple[int, ...] | None" = None
+    wear_passes: int = 0
+    wear_stuck_per_pass: float = 0.0
+
+    def __post_init__(self):
+        set_ = object.__setattr__
+        for f in ("flip_rate", "stuck0_rate", "stuck1_rate", "dead_row_rate",
+                  "wear_stuck_per_pass"):
+            set_(self, f, _check_rate(f, getattr(self, f)))
+        cols = []
+        for span in self.dead_cols:
+            start, stop = (int(span[0]), int(span[1]))
+            if not 0 <= start < stop:
+                raise ValueError(
+                    f"dead_cols span must satisfy 0 <= start < stop, "
+                    f"got ({start}, {stop})")
+            cols.append((start, stop))
+        set_(self, "dead_cols", tuple(cols))
+        set_(self, "sa0_words", _check_words("sa0_words", self.sa0_words))
+        set_(self, "sa1_words", _check_words("sa1_words", self.sa1_words))
+        if int(self.wear_passes) < 0:
+            raise ValueError("wear_passes must be >= 0")
+        set_(self, "wear_passes", int(self.wear_passes))
+
+    # ------------------------------ derived views ---------------------------------
+
+    @property
+    def effective_stuck0(self) -> float:
+        """Stuck-at-0 rate including accumulated endurance wear."""
+        return min(1.0, self.stuck0_rate
+                   + self.wear_passes * self.wear_stuck_per_pass)
+
+    @property
+    def is_null(self) -> bool:
+        """True when the model injects nothing (== ``fault_model=None``)."""
+        return (self.flip_rate == 0.0 and self.effective_stuck0 == 0.0
+                and self.stuck1_rate == 0.0 and self.dead_row_rate == 0.0
+                and not self.dead_cols and not self.sa0_words
+                and not self.sa1_words)
+
+    @property
+    def needs_keys(self) -> bool:
+        """True when any component draws random masks (requires flip_key)."""
+        return (self.flip_rate > 0.0 or self.effective_stuck0 > 0.0
+                or self.stuck1_rate > 0.0 or self.dead_row_rate > 0.0)
+
+    def worn(self, n_passes: int = 1) -> "FaultModel":
+        """The same model after ``n_passes`` further write passes."""
+        if n_passes < 0:
+            raise ValueError("n_passes must be >= 0")
+        return dataclasses.replace(self,
+                                   wear_passes=self.wear_passes + n_passes)
+
+
+def normalize_fault_model(fault_model: "FaultModel | None") -> "FaultModel | None":
+    """Canonicalize for dispatch: a null model is the clean path (and must
+    share its jit cache entry with ``fault_model=None``)."""
+    if fault_model is None:
+        return None
+    if not isinstance(fault_model, FaultModel):
+        raise TypeError(f"fault_model must be a FaultModel or None, "
+                        f"got {type(fault_model).__name__}")
+    return None if fault_model.is_null else fault_model
+
+
+def _cell_mask(key: jax.Array, shape: tuple, rate: float) -> jax.Array:
+    """Packed per-cell Bernoulli(rate) mask of packed-word ``shape``."""
+    if rate >= 1.0:
+        # The thresholded draw below covers [0, 2^32 - 1) — exact only
+        # below 1.0; a fully-stuck array must mask every cell.
+        return jnp.full(shape, jnp.uint32(0xFFFFFFFF))
+    u = jax.random.bits(key, shape=shape + (bs.WORD_BITS,), dtype=jnp.uint32)
+    thresh = jnp.uint32(min(round(rate * 4294967296.0), 4294967295))
+    return bs.pack_bits((u < thresh).astype(jnp.uint32))
+
+
+def _static_keep_mask(model: FaultModel, n_words: int) -> "np.ndarray | None":
+    """Host-side (W,) uint32 keep-mask for the static zeroing faults
+    (``dead_cols`` spans + ``sa0_words``); None when neither is set."""
+    if not model.dead_cols and model.sa0_words is None:
+        return None
+    keep = np.full(n_words, 0xFFFFFFFF, np.uint32)
+    bl = n_words * bs.WORD_BITS
+    for start, stop in model.dead_cols:
+        for b in range(start, min(stop, bl)):
+            keep[b // bs.WORD_BITS] &= np.uint32(
+                0xFFFFFFFF ^ (1 << (b % bs.WORD_BITS)))
+    if model.sa0_words is not None:
+        if len(model.sa0_words) != n_words:
+            raise ValueError(
+                f"sa0_words: got {len(model.sa0_words)} words for "
+                f"W={n_words} (bitstream_length {bl})")
+        keep &= ~np.asarray(model.sa0_words, np.uint32)
+    return keep
+
+
+def apply_faults(fkey: jax.Array, words: jax.Array, bitflip_rate: float,
+                 fault_model: "FaultModel | None") -> jax.Array:
+    """Inject one injection point's faults into packed stream ``words``.
+
+    The drop-in generalization of ``sc_ops.flip_bits``: with
+    ``fault_model=None`` it IS ``flip_bits(fkey, words, bitflip_rate)``
+    (bit-identical legacy path); with a model, ``model.flip_rate`` replaces
+    ``bitflip_rate`` for the transient draw (same raw ``fkey``) and the
+    persistent/static masks follow.  Application order — transient flips,
+    then every zeroing fault (random stuck-0 incl. wear, dead rows, dead
+    columns, explicit sa0), then the setting faults (random stuck-1,
+    explicit sa1) — so stuck-at-1 wins, matching a cell shorted high.
+    """
+    if fault_model is None:
+        return sc_ops.flip_bits(fkey, words, bitflip_rate)
+    w = sc_ops.flip_bits(fkey, words, fault_model.flip_rate)
+    s0 = fault_model.effective_stuck0
+    if s0 > 0.0:
+        w = w & ~_cell_mask(jax.random.fold_in(fkey, _STUCK0_TAG),
+                            w.shape, s0)
+    if fault_model.dead_row_rate > 0.0:
+        u = jax.random.uniform(jax.random.fold_in(fkey, _DEAD_ROW_TAG),
+                               shape=w.shape)
+        w = jnp.where(u < fault_model.dead_row_rate, jnp.uint32(0), w)
+    keep = _static_keep_mask(fault_model, w.shape[-1])
+    if keep is not None:
+        w = w & jnp.asarray(keep)
+    if fault_model.stuck1_rate > 0.0:
+        w = w | _cell_mask(jax.random.fold_in(fkey, _STUCK1_TAG),
+                           w.shape, fault_model.stuck1_rate)
+    if fault_model.sa1_words is not None:
+        if len(fault_model.sa1_words) != w.shape[-1]:
+            raise ValueError(
+                f"sa1_words: got {len(fault_model.sa1_words)} words for "
+                f"W={w.shape[-1]}")
+        w = w | jnp.asarray(np.asarray(fault_model.sa1_words, np.uint32))
+    return w
+
+
+def injecting(bitflip_rate: float, fault_model: "FaultModel | None") -> bool:
+    """Does this (rate, model) pair inject anything at all?
+
+    The shared gating predicate for every dispatch path: when False, the
+    run takes the exact clean code path (fused plans, no fkey splits)."""
+    return bitflip_rate > 0.0 or fault_model is not None

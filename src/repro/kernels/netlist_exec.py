@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import bitstream as bs
-from ..core import sc_ops
+from ..core import faults as _faults
 from ..core.plan import FUSED_MUX, ExecutionPlan
 from .packed_logic import packed_logic
 
@@ -62,15 +62,21 @@ def _apply_pass(op: str, ins: list[jax.Array], use_pallas: bool,
 def run_combinational(plan: ExecutionPlan, env: dict[str, jax.Array],
                       gate_fkeys: jax.Array | None = None,
                       bitflip_rate: float = 0.0,
-                      use_pallas: bool = False) -> dict[str, jax.Array]:
+                      use_pallas: bool = False,
+                      fault_model=None) -> dict[str, jax.Array]:
     """Evaluate the plan's levels in-place over ``env`` (node -> words).
 
     ``gate_fkeys``: per-gate fault keys indexed by original gate id; when
-    given (with ``bitflip_rate > 0``) every pass output is flipped with its
-    gate's own key — matching the interpreter's injection points, which
-    requires an unfused plan (``compile_plan(net, fuse_mux=False)``).
+    given (with ``bitflip_rate > 0`` or a non-null ``fault_model``) every
+    pass output is faulted with its gate's own key — matching the
+    interpreter's injection points, which requires an unfused plan
+    (``compile_plan(net, fuse_mux=False)``).  ``fault_model`` generalizes
+    the flat rate to the STT-MRAM taxonomy (``core/faults.py``): each gate's
+    output stream occupies its own array rows, so its stuck/dead masks
+    derive from that gate's key.
     """
-    inject = gate_fkeys is not None and bitflip_rate > 0.0
+    inject = gate_fkeys is not None and \
+        _faults.injecting(bitflip_rate, fault_model)
     if inject and plan.fused:
         raise ValueError("per-gate fault injection requires an unfused plan")
     for level in plan.levels:
@@ -82,7 +88,8 @@ def run_combinational(plan: ExecutionPlan, env: dict[str, jax.Array],
             else:
                 outs = _batched_pass(cop, env, use_pallas)
             if inject:
-                outs = [sc_ops.flip_bits(gate_fkeys[gid], o, bitflip_rate)
+                outs = [_faults.apply_faults(gate_fkeys[gid], o,
+                                             bitflip_rate, fault_model)
                         for gid, o in zip(cop.gids, outs)]
             for name, o in zip(cop.outputs, outs):
                 env[name] = o

@@ -7,12 +7,15 @@ lazily: they pull in the whole ``repro.models`` stack, which the SC serving
 path does not need.
 """
 from ..core.executor import ExecOptions, ExecRequest
+from ..core.faults import FaultModel
 from .apps import app_netlist, app_request, circuit_request
-from .sc_engine import BankServer, BankServerStats, SCRequest, Ticket
+from .sc_engine import (BankServer, BankServerStats, DeadlineExceeded,
+                        RequestShed, SCRequest, ServerClosed, Ticket)
 
 __all__ = [
-    "BankServer", "BankServerStats", "ExecOptions", "ExecRequest",
-    "SCRequest", "Ticket",
+    "BankServer", "BankServerStats", "DeadlineExceeded", "ExecOptions",
+    "ExecRequest", "FaultModel", "RequestShed", "SCRequest", "ServerClosed",
+    "Ticket",
     "app_netlist", "app_request", "circuit_request",
     "make_decode_step", "make_prefill", "greedy_generate",
 ]

@@ -37,6 +37,7 @@ def app_netlist(app: str) -> Netlist:
 def app_request(app: str, key, bl: int = 256, *,
                 batch_shape: "tuple[int, ...] | None" = None,
                 bitflip_rate: float = 0.0, flip_key=None,
+                fault_model=None, deadline_ms: "float | None" = None,
                 **inputs: Any) -> SCRequest:
     """Build a BankServer request for one application evaluation.
 
@@ -49,12 +50,15 @@ def app_request(app: str, key, bl: int = 256, *,
     return SCRequest(net=app_netlist(app),
                      values=core_apps.appnet_inputs(app, **inputs),
                      key=key, bitstream_length=bl, batch_shape=batch_shape,
-                     bitflip_rate=bitflip_rate, flip_key=flip_key)
+                     bitflip_rate=bitflip_rate, flip_key=flip_key,
+                     fault_model=fault_model, deadline_ms=deadline_ms)
 
 
 def circuit_request(net: Netlist, values: dict, key, bl: int = 256, *,
                     batch_shape: "tuple[int, ...] | None" = None,
-                    bitflip_rate: float = 0.0, flip_key=None) -> SCRequest:
+                    bitflip_rate: float = 0.0, flip_key=None,
+                    fault_model=None,
+                    deadline_ms: "float | None" = None) -> SCRequest:
     """Build a BankServer request for a raw circuit netlist.
 
     Reuse the same ``net`` object across requests of equal structure (e.g.
@@ -63,4 +67,5 @@ def circuit_request(net: Netlist, values: dict, key, bl: int = 256, *,
     """
     return SCRequest(net=net, values=values, key=key, bitstream_length=bl,
                      batch_shape=batch_shape, bitflip_rate=bitflip_rate,
-                     flip_key=flip_key)
+                     flip_key=flip_key, fault_model=fault_model,
+                     deadline_ms=deadline_ms)

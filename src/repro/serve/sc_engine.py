@@ -38,9 +38,40 @@ subarrays computing concurrently.  ``BankServer`` models both axes:
     regardless of device, bucket, or slot (pinned by tests/test_serve.py and
     tests/test_serve_multibank.py).
 
+Reliability (fault-tolerant serving):
+
+  * **bounded admission** — ``max_queue`` caps the waiting queue; overload
+    either rejects the *new* request or sheds the *oldest* queued one
+    (``overload="reject" | "shed_oldest"``), failing its ticket with a
+    typed :class:`RequestShed` — no unbounded memory growth behind a
+    stalled device.
+  * **deadlines** — ``ExecOptions.deadline_ms`` bounds a request's total
+    wall time (queue + retries + device); a passed deadline fails the
+    ticket with :class:`DeadlineExceeded` (permanent — distinct from the
+    retryable ``TimeoutError`` of ``Ticket.result(timeout=)``).
+  * **bounded retry** — ``max_retries`` re-admits a failed batch's requests
+    with exponential backoff (``retry_backoff_s * 2**attempt``); the
+    request (and its keys) is unchanged, so a successful retry is
+    **bit-identical** to a clean first-shot run.
+  * **per-device circuit breaker** — ``quarantine_after`` consecutive batch
+    failures on one device quarantine it for ``quarantine_s`` (doubling on
+    repeated failure); its in-flight batches re-dispatch to healthy devices
+    (without consuming retry budget), a health probe re-admits it, and the
+    last healthy device is never quarantined.
+  * **shutdown** — ``close()`` / context manager: drain mode resolves every
+    queued/in-flight ticket (retries included); non-drain fails undispatched
+    tickets with :class:`ServerClosed` and finalizes in-flight work.  The
+    engine is synchronous (no threads), so close can never leak one.
+  * **chaos hook** — ``fault_injector`` is called before every batch launch
+    (and during health probes); raising simulates a device failure —
+    the harness ``benchmarks/fault_campaign.py`` drives device kills
+    through it.
+
 ``stats()`` reports serving health: bucket hit rate (how warm the
 template/jit caches run), padding waste, join count, p50/p99 request
-latency, throughput, and per-device batch/request counts.
+latency, throughput, per-device batch/request counts, and the reliability
+counters (``shed_requests`` / ``retries`` / ``quarantines`` /
+``redispatched_requests`` / ``deadline_exceeded``).
 """
 from __future__ import annotations
 
@@ -54,9 +85,29 @@ import numpy as np
 
 from ..core import executor
 from ..core.arch import _plan_schedule_cycles
+from ..core.dispatch import _check_fault_args
 from ..core.executor import ExecOptions, ExecRequest
+from ..core.faults import injecting, normalize_fault_model
 from ..core.gates import Netlist
 from ..core.plan import compile_bank_members, compile_plan, template_members
+
+
+class DeadlineExceeded(Exception):
+    """The request's ``deadline_ms`` passed before its result was delivered.
+
+    Permanent: the ticket is failed and will not be retried.  Deliberately
+    NOT a ``TimeoutError`` subclass — ``Ticket.result(timeout=)`` raises
+    ``TimeoutError`` for a *retryable* bounded wait, while a deadline is a
+    property of the request itself.
+    """
+
+
+class RequestShed(Exception):
+    """The request was shed by admission backpressure (queue full)."""
+
+
+class ServerClosed(Exception):
+    """The server was closed before this request could be served."""
 
 
 def _layout_sig_of(req: ExecRequest) -> tuple:
@@ -86,7 +137,12 @@ class SCRequest(ExecRequest):
     ``repro.serve.apps``); ``values`` its PI values; ``key`` the request's
     own PRNG key (the bit-identity anchor).  ``batch_shape`` declares the
     stream batch shape when values alone cannot (all-const PIs).
-    ``bitflip_rate``/``flip_key`` inject per-request faults.
+    ``bitflip_rate``/``flip_key`` inject per-request transient faults;
+    ``fault_model`` is the full STT-MRAM fault description
+    (:class:`repro.core.faults.FaultModel` — subsumes ``bitflip_rate``).
+    ``deadline_ms`` bounds the request's total wall time in the server
+    (queue + retries + device); past it the ticket fails with
+    :class:`DeadlineExceeded`.
 
     Values are canonicalized to *host* float32 at admission: a request is
     dispatched exactly once but its leaves are touched on every hot-path
@@ -101,13 +157,15 @@ class SCRequest(ExecRequest):
                  bitstream_length: int = 256,
                  batch_shape: "tuple[int, ...] | None" = None,
                  bitflip_rate: float = 0.0, flip_key: Any = None,
+                 fault_model=None, deadline_ms: "float | None" = None,
                  options: "ExecOptions | None" = None):
         if options is None:
             options = ExecOptions(
                 bitstream_length=bitstream_length,
                 batch_shape=(tuple(batch_shape)
                              if batch_shape is not None else None),
-                bitflip_rate=float(bitflip_rate), flip_key=flip_key)
+                bitflip_rate=float(bitflip_rate), flip_key=flip_key,
+                fault_model=fault_model, deadline_ms=deadline_ms)
         values = {k: v if isinstance(v, jax.Array)
                   else np.asarray(v, np.float32)
                   for k, v in values.items()}
@@ -121,10 +179,12 @@ class Ticket:
     ``done()`` turns True once the request's batch has been *dispatched*
     (results are then async jax arrays, possibly still computing) or failed.
     ``result()`` forces the wait and raises the batch's exception, if any.
+    A retried request's ticket transiently drops back to not-done while it
+    re-queues; ``result()`` drives the server until it settles.
     """
 
     __slots__ = ("_server", "_result", "_error", "_batch", "_done",
-                 "submitted_at", "latency_s")
+                 "submitted_at", "latency_s", "deadline_at")
 
     def __init__(self, server: "BankServer"):
         self._server = server
@@ -134,28 +194,72 @@ class Ticket:
         self._done = False
         self.submitted_at = time.perf_counter()
         self.latency_s: float | None = None
+        self.deadline_at: "float | None" = None
 
     def done(self) -> bool:
         return self._done
 
     def result(self, timeout: "float | None" = None):
-        """The request's output dict; flushes the server if still pending.
+        """The request's output dict; drives the server until it settles.
 
-        ``timeout`` (seconds) bounds the wait on an already-dispatched
-        batch: raises ``TimeoutError`` if its device work has not finished
-        in time (the ticket stays valid — call ``result()`` again).  If the
-        batch failed, the execution exception re-raises on *every* ticket
-        of that batch.
+        ``timeout`` (seconds) bounds this *call*: raises ``TimeoutError``
+        if the result has not landed in time (retryable — the ticket stays
+        valid, call ``result()`` again).  The request's own ``deadline_ms``
+        instead fails the ticket *permanently* with
+        :class:`DeadlineExceeded`.  If the batch failed (after exhausting
+        any retry budget), the original execution exception re-raises on
+        every ticket of that batch.
         """
-        if not self._done:
-            self._server.flush()
-        if not self._done:                      # pragma: no cover - safety
-            raise RuntimeError("ticket unresolved after flush")
-        if self._error is None and self._batch is not None:
-            self._server._wait_batch(self._batch, timeout)
-        if self._error is not None:
-            raise self._error
-        return self._result
+        srv = self._server
+        t_end = None if timeout is None else time.perf_counter() + timeout
+        while True:
+            if not self._done:
+                srv._drive()
+            if self._done:
+                if self._error is not None:
+                    raise self._error
+                batch = self._batch
+                if batch is not None and not batch.finalized:
+                    limit = t_end
+                    if self.deadline_at is not None:
+                        limit = self.deadline_at if limit is None \
+                            else min(limit, self.deadline_at)
+                    if limit is None:
+                        srv._finalize(batch)
+                    else:
+                        try:
+                            srv._wait_batch(
+                                batch,
+                                max(0.0, limit - time.perf_counter()))
+                        except TimeoutError:
+                            if self.deadline_at is not None and \
+                                    time.perf_counter() >= self.deadline_at:
+                                srv._stats.deadline_exceeded += 1
+                                self._fail(DeadlineExceeded(
+                                    "deadline passed while the batch was "
+                                    "still in flight"))
+                                raise self._error from None
+                            raise
+                    # Finalize may have failed or re-queued (retry) this
+                    # very ticket — re-examine from the top.
+                    continue
+                if self._error is not None:
+                    raise self._error
+                return self._result
+            # Not done: queued (possibly backing off for retry) or staged.
+            now = time.perf_counter()
+            if self.deadline_at is not None and now >= self.deadline_at:
+                srv._expire_deadlines()
+                if not self._done:
+                    srv._stats.deadline_exceeded += 1
+                    self._fail(DeadlineExceeded(
+                        "deadline passed before dispatch"))
+                continue
+            if t_end is not None and now >= t_end:
+                raise TimeoutError(
+                    f"Ticket.result timed out after {timeout:g}s; request "
+                    f"still queued for dispatch")
+            time.sleep(2.5e-4)
 
     def _fulfil(self, result, batch: "_Batch") -> None:
         self._result = result
@@ -166,12 +270,22 @@ class Ticket:
         self._error = exc
         self._done = True
 
+    def _reset(self) -> None:
+        """Return to not-done for a retry / re-dispatch (keeps
+        ``submitted_at`` — latency and deadline measure from admission)."""
+        self._result = None
+        self._error = None
+        self._batch = None
+        self._done = False
+
 
 @dataclasses.dataclass
 class _Pending:
     req: SCRequest
     ticket: Ticket
     sig: tuple = ()     # shape signature, computed once at admission
+    retries: int = 0    # failed-dispatch retries consumed
+    not_before: float = 0.0   # earliest re-dispatch time (retry backoff)
 
 
 class _Batch:
@@ -205,6 +319,13 @@ class _Batch:
         self.slots.append(dq.popleft())
         self.pendings.append(pending)
         return True
+
+    def unbind(self, idx: int) -> _Pending:
+        """Release bound request ``idx`` (staged batches only): its slot
+        returns to the free pool as a padding slot."""
+        slot = self.slots.pop(idx)
+        self.free[id(self.members[slot])].append(slot)
+        return self.pendings.pop(idx)
 
     def ready(self) -> bool:
         """Non-blocking: have all this batch's device results landed?"""
@@ -253,6 +374,13 @@ class BankServerStats:
     schedule_cycles: int = 0      # Algorithm-1 scheduled cycles (merged bank)
     passes_fused_away: int = 0    # MUX/XOR/AND fusions + NOT absorptions
     nodes_elided: int = 0         # BUFF elisions + CSE merges
+    # Reliability counters.
+    shed_requests: int = 0        # rejected/shed by admission backpressure
+    retries: int = 0              # failed-batch requests re-queued w/ backoff
+    quarantines: int = 0          # device circuit-breaker trips
+    redispatched_requests: int = 0  # in-flight requests moved off a
+    #                                 quarantined device (no retry budget)
+    deadline_exceeded: int = 0    # tickets failed by their deadline_ms
     exec_s: float = 0.0           # busy wall time (>=1 batch in flight)
     latencies_s: "deque[float]" = dataclasses.field(
         default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
@@ -278,6 +406,11 @@ class BankServerStats:
             "schedule_cycles": self.schedule_cycles,
             "passes_fused_away": self.passes_fused_away,
             "nodes_elided": self.nodes_elided,
+            "shed_requests": self.shed_requests,
+            "retries": self.retries,
+            "quarantines": self.quarantines,
+            "redispatched_requests": self.redispatched_requests,
+            "deadline_exceeded": self.deadline_exceeded,
             "p50_ms": _percentile(lat, 0.50) * 1e3,
             "p99_ms": _percentile(lat, 0.99) * 1e3,
             "mean_ms": (sum(lat) / len(lat) * 1e3) if lat else 0.0,
@@ -327,6 +460,32 @@ class BankServer:
     donate:
         Donate the per-batch key buffers to XLA (best-effort; see
         ``executor.execute_bank``).
+    max_queue:
+        Admission-queue bound (``None`` = unbounded, the historic
+        behavior).  At the bound, ``overload`` decides: ``"reject"`` fails
+        the *new* request's ticket with :class:`RequestShed` (submit does
+        not raise — the shed notice is delivered through the ticket);
+        ``"shed_oldest"`` fails the oldest queued request and admits the
+        new one.
+    max_retries:
+        Failed-batch retry budget per request.  A batch failure re-queues
+        its requests with exponential backoff
+        (``retry_backoff_s * 2**attempt``); past the budget the *original*
+        exception fails the ticket.  Retries re-run the identical request
+        (same keys), so a successful retry is bit-identical to a clean
+        first-shot run.  Default 0: failures propagate immediately.
+    quarantine_after / quarantine_s:
+        Per-device circuit breaker: after ``quarantine_after`` consecutive
+        batch failures on one device it is quarantined for
+        ``quarantine_s`` seconds (doubling while it keeps failing its
+        health probe).  Its in-flight batches re-dispatch to healthy
+        devices without consuming retry budget.  The last healthy device
+        is never quarantined.
+    fault_injector:
+        Chaos hook ``fn(device, batch_or_None)`` called immediately before
+        every batch launch (batch) and during health probes (None);
+        raising makes the launch/probe fail.  Used by the chaos harness to
+        kill devices mid-run.
 
     Results are bit-identical per request to standalone
     ``executor.execute[_value]`` with the same key — see module docstring.
@@ -338,13 +497,25 @@ class BankServer:
                  key_mode: str | None = None, backend: str | None = None,
                  decode: bool = True,
                  devices: "list | None" = None, max_inflight: int = 2,
-                 placement: str = "affinity", donate: bool = False):
+                 placement: str = "affinity", donate: bool = False,
+                 max_queue: "int | None" = None, overload: str = "reject",
+                 max_retries: int = 0, retry_backoff_s: float = 0.02,
+                 quarantine_after: int = 3, quarantine_s: float = 0.5,
+                 fault_injector=None):
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
         if max_inflight < 0:
             raise ValueError("max_inflight must be >= 0")
         if placement not in _PLACEMENTS:
             raise ValueError(f"placement must be one of {_PLACEMENTS}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None)")
+        if overload not in ("reject", "shed_oldest"):
+            raise ValueError("overload must be 'reject' or 'shed_oldest'")
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if quarantine_after < 1:
+            raise ValueError("quarantine_after must be >= 1")
         self.max_slots = max_slots
         self.window_s = window_s
         self.pad_counts = pad_counts
@@ -359,6 +530,13 @@ class BankServer:
         self.max_inflight = max_inflight
         self.placement = placement
         self.donate = donate
+        self.max_queue = max_queue
+        self.overload = overload
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.quarantine_after = quarantine_after
+        self.quarantine_s = quarantine_s
+        self.fault_injector = fault_injector
         # jax's own default placement: when a batch lands here anyway,
         # skipping the explicit commit avoids the committed-argument
         # bookkeeping jit pays per input leaf (measurably slower than the
@@ -371,6 +549,11 @@ class BankServer:
         self._rr = 0
         self._held = False
         self._busy_since: "float | None" = None
+        self._closed = False
+        self._accepting = True          # False: close() disabled retries
+        self._consec_failures: "dict[Any, int]" = {}
+        self._quarantined: "dict[Any, float]" = {}   # device -> retest time
+        self._quarantine_backoff: "dict[Any, float]" = {}
         # All three maps are LRU-bounded: heterogeneous traffic mints new
         # plan tuples / exec signatures indefinitely, and strong references
         # here must not defeat plan.py's bank-cache cap.
@@ -382,7 +565,8 @@ class BankServer:
         # Member layout -> set of devices that have executed it (jit warm).
         self._warm: OrderedDict = OrderedDict()
         self._stats = BankServerStats()
-        self._dev_stats = {d: {"n_batches": 0, "n_requests": 0}
+        self._dev_stats = {d: {"n_batches": 0, "n_requests": 0,
+                               "quarantines": 0}
                            for d in self.devices}
 
     # ------------------------------ admission ------------------------------------
@@ -392,10 +576,27 @@ class BankServer:
 
         Batch formation/dispatch runs opportunistically inside the call
         (there is no background thread), but dispatched work proceeds
-        asynchronously on its device."""
-        if req.bitflip_rate > 0.0 and req.flip_key is None:
-            raise ValueError("bitflip_rate > 0 requires flip_key")
+        asynchronously on its device.  Raises :class:`ServerClosed` after
+        ``close()``; under ``max_queue`` backpressure a shed request's
+        ticket is returned already failed with :class:`RequestShed`."""
+        if self._closed:
+            raise ServerClosed("submit() on a closed BankServer")
+        _check_fault_args(req.bitflip_rate, req.fault_model, req.flip_key)
         ticket = Ticket(self)
+        if req.deadline_ms is not None:
+            ticket.deadline_at = \
+                ticket.submitted_at + float(req.deadline_ms) / 1e3
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            self._pump()        # formation may drain the queue into batches
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            self._stats.shed_requests += 1
+            if self.overload == "reject":
+                ticket._fail(RequestShed(
+                    f"admission queue full (max_queue={self.max_queue})"))
+                return ticket
+            oldest = self._queue.pop(0)
+            oldest.ticket._fail(RequestShed(
+                f"shed by a newer arrival (max_queue={self.max_queue})"))
         self._queue.append(_Pending(req, ticket, self._shape_sig(req)))
         self._pump()
         return ticket
@@ -422,8 +623,11 @@ class BankServer:
 
         Does NOT block on results — tickets resolve to async arrays and
         ``Ticket.result()`` performs the wait.  Dispatches even while
-        ``hold()`` is in effect."""
+        ``hold()`` is in effect.  Requests backing off for retry are left
+        queued until their backoff expires."""
         n0 = self._stats.n_batches
+        self._expire_deadlines()
+        self._check_quarantine()
         self._reap()
         self._join_staged()
         self._form_all()
@@ -440,12 +644,18 @@ class BankServer:
             self._launch(batch, device)
         return self._stats.n_batches - n0
 
+    def _drive(self) -> None:
+        """One blocking-wait scheduler step (Ticket.result's engine)."""
+        self.flush()
+
     # ------------------------------ scheduling -----------------------------------
 
     def _pump(self) -> None:
         """One scheduler step: reap ready work, join queued requests into
         staged batches, form newly-triggered batches, dispatch while device
         capacity allows.  Called at submit/release boundaries."""
+        self._expire_deadlines()
+        self._check_quarantine()
         self._reap()
         self._join_staged()
         if self.window_s is not None and self._queue and \
@@ -460,7 +670,10 @@ class BankServer:
     @staticmethod
     def _group_key(req: SCRequest) -> tuple:
         # Static execution parameters that cannot share one bank dispatch.
-        return (req.bitstream_length, float(req.bitflip_rate))
+        # The fault model is normalized (null -> None) so a no-op model
+        # batches with clean traffic on the clean jit program.
+        return (req.bitstream_length, float(req.bitflip_rate),
+                normalize_fault_model(req.fault_model))
 
     @staticmethod
     def _shape_sig(req: SCRequest) -> tuple:
@@ -476,17 +689,22 @@ class BankServer:
                 pass
         return sig
 
-    def _plan_of(self, req: SCRequest, rate: float):
+    def _plan_of(self, req: SCRequest, group: tuple):
+        # Gate-level fault injection needs the unfused plan (per-gate fkeys).
         return compile_plan(req.net,
-                            fuse_mux=rate == 0.0 or req.net.is_sequential)
+                            fuse_mux=not injecting(group[1], group[2])
+                            or req.net.is_sequential)
 
     def _form_triggered(self) -> None:
         # A group that accumulates max_slots waiting requests launches alone —
         # other groups keep building toward their own triggers.
+        now = time.perf_counter()
         while True:
             counts: "dict[tuple, int]" = defaultdict(int)
             trigger = None
             for p in self._queue:
+                if p.not_before > now:
+                    continue
                 g = self._group_key(p.req)
                 counts[g] += 1
                 if counts[g] >= self.max_slots:
@@ -494,22 +712,28 @@ class BankServer:
                     break
             if trigger is None:
                 return
-            self._form_group(trigger)
+            self._form_group(trigger, now)
 
     def _form_all(self) -> None:
-        while self._queue:
-            self._form_group(self._group_key(self._queue[0].req))
+        now = time.perf_counter()
+        while True:
+            ready = next((p for p in self._queue if p.not_before <= now),
+                         None)
+            if ready is None:
+                return
+            self._form_group(self._group_key(ready.req), now)
 
-    def _form_group(self, group: tuple) -> None:
-        take = [p for p in self._queue
-                if self._group_key(p.req) == group][:self.max_slots]
+    def _form_group(self, group: tuple, now: "float | None" = None) -> None:
+        if now is None:
+            now = time.perf_counter()
+        take = [p for p in self._queue if p.not_before <= now
+                and self._group_key(p.req) == group][:self.max_slots]
         taken = set(map(id, take))
         self._queue = [p for p in self._queue if id(p) not in taken]
         self._staged.append(self._make_batch(group, take))
 
     def _make_batch(self, group: tuple, take: "list[_Pending]") -> _Batch:
-        rate = group[1]
-        plans = [self._plan_of(p.req, rate) for p in take]
+        plans = [self._plan_of(p.req, group) for p in take]
         # Canonical request order (plan serial, then value shapes): identical
         # traffic mixes bind identically, so the jit signature repeats even
         # when arrival order shuffles.
@@ -537,15 +761,19 @@ class BankServer:
         of staged (formed, not yet dispatched) batches of the same group."""
         if not self._queue or not self._staged:
             return
+        now = time.perf_counter()
         keep: "list[_Pending]" = []
         for p in self._queue:
+            if p.not_before > now:      # still backing off: may not join
+                keep.append(p)
+                continue
             g = self._group_key(p.req)
             plan = None
             for b in self._staged:
                 if b.group != g:
                     continue
                 if plan is None:
-                    plan = self._plan_of(p.req, g[1])
+                    plan = self._plan_of(p.req, g)
                 if b.bind(p, plan):
                     self._stats.joined_requests += 1
                     break
@@ -562,8 +790,12 @@ class BankServer:
             len(self._inflight[device]) < self.max_inflight
 
     def _pick_device(self, batch: _Batch):
-        """A device with in-flight capacity for ``batch``, or None."""
+        """A healthy device with in-flight capacity for ``batch``, or None."""
         devs = self.devices
+        if self._quarantined:
+            healthy = tuple(d for d in devs if d not in self._quarantined)
+            if healthy:         # safety: never strand traffic entirely
+                devs = healthy
         if len(devs) == 1:
             return devs[0] if self._capacity(devs[0]) else None
         if self.placement == "round_robin":
@@ -596,10 +828,10 @@ class BankServer:
     def _launch(self, batch: _Batch, device) -> None:
         """Dispatch one batch asynchronously; resolve its tickets.
 
-        Dispatch-time failures (bad request values, trace errors) fail every
-        ticket in the batch immediately; device-side failures surface at
-        finalize/``result()``."""
-        bl, rate = batch.group
+        Dispatch-time failures (bad request values, trace errors) and
+        device-side failures (surfacing at finalize/``result()``) both run
+        the retry/circuit-breaker policy via ``_on_batch_failure``."""
+        bl, rate, model = batch.group
         multi = len(self.devices) > 1
         # Per-device template scope partitions the bank cache so each
         # device's jit executable stays keyed to its own bank identity.
@@ -612,10 +844,10 @@ class BankServer:
         active = [r is not None for r in slot_reqs]
         shared = ExecOptions(backend=self.backend, key_mode=self.key_mode,
                              bitstream_length=bl, bitflip_rate=rate,
-                             decode=self.decode)
+                             fault_model=model, decode=self.decode)
         sig_order = sorted(range(len(batch.pendings)),
                            key=lambda i: batch.slots[i])
-        signature = (bank.serial, bl, rate, tuple(active),
+        signature = (bank.serial, bl, rate, model, tuple(active),
                      tuple(batch.pendings[i].sig for i in sig_order))
         hit = signature in self._seen_signatures
         self._seen_signatures[signature] = None
@@ -646,13 +878,13 @@ class BankServer:
         dev_arg = device if multi and device is not self._default_device \
             else None
         try:
+            if self.fault_injector is not None:
+                self.fault_injector(device, batch)
             outs = executor.run(slot_reqs, template=bank, active=active,
                                 device=dev_arg,
                                 donate=self.donate, options=shared)
         except Exception as exc:
-            batch.finalized = True
-            for p in batch.pendings:
-                p.ticket._fail(exc)
+            self._on_batch_failure(batch, exc, device)
             return
         batch.device = device
         batch.dispatched_at = t0
@@ -680,7 +912,8 @@ class BankServer:
                 self._finalize(dq[0])
 
     def _finalize(self, batch: _Batch) -> None:
-        """Wait out one in-flight batch; record latencies or fail tickets."""
+        """Wait out one in-flight batch; record latencies, or run the
+        failure policy (retry / circuit breaker) on its requests."""
         if batch.finalized:
             return
         batch.finalized = True
@@ -696,13 +929,21 @@ class BankServer:
         except ValueError:                      # pragma: no cover - safety
             pass
         if err is not None:
-            for p in batch.pendings:
-                p.ticket._fail(err)
+            self._on_batch_failure(batch, err, batch.device)
         else:
+            self._consec_failures[batch.device] = 0
             for p in batch.pendings:
-                p.ticket.latency_s = t_done - p.ticket.submitted_at
-            self._stats.latencies_s.extend(
-                p.ticket.latency_s for p in batch.pendings)
+                t = p.ticket
+                if t._error is not None:
+                    continue    # already settled (deadline hit mid-flight)
+                if t.deadline_at is not None and t_done >= t.deadline_at:
+                    self._stats.deadline_exceeded += 1
+                    t._fail(DeadlineExceeded(
+                        f"deadline_ms={p.req.deadline_ms:g} passed before "
+                        f"the batch completed"))
+                    continue
+                t.latency_s = t_done - t.submitted_at
+                self._stats.latencies_s.append(t.latency_s)
         if self._busy_since is not None and \
                 not any(self._inflight.values()):
             self._stats.exec_s += t_done - self._busy_since
@@ -725,12 +966,215 @@ class BankServer:
             time.sleep(min(5e-4, deadline - now))
         self._finalize(batch)
 
+    # ------------------------------ reliability ----------------------------------
+
+    @staticmethod
+    def _note_exception(exc: BaseException, batch: _Batch, device) -> None:
+        # Attach serving context to the ORIGINAL exception (PEP 678) so the
+        # user sees both where it failed and what it was doing — without
+        # wrapping (isinstance checks and tracebacks stay intact).
+        if getattr(exc, "_bankserver_noted", False):
+            return
+        note = (f"[BankServer] raised while executing a bank batch of "
+                f"{len(batch.pendings)} request(s) on {device}")
+        try:
+            if hasattr(exc, "add_note"):        # Python >= 3.11
+                exc.add_note(note)
+            else:                               # emulate PEP 678 storage
+                notes = getattr(exc, "__notes__", None)
+                if notes is None:
+                    notes = []
+                    exc.__notes__ = notes
+                notes.append(note)
+            exc._bankserver_noted = True
+        except Exception:                       # pragma: no cover - safety
+            pass
+
+    def _on_batch_failure(self, batch: _Batch, exc: BaseException,
+                          device) -> None:
+        """Failure policy for one failed batch: note the device failure
+        (circuit breaker input) and retry or fail each request."""
+        batch.finalized = True
+        self._note_exception(exc, batch, device)
+        self._note_device_failure(device)
+        now = time.perf_counter()
+        for p in batch.pendings:
+            self._retry_or_fail(p, exc, now)
+
+    def _retry_or_fail(self, p: _Pending, exc: BaseException,
+                       now: float) -> None:
+        t = p.ticket
+        if t._error is not None:
+            return              # already settled (deadline hit mid-flight)
+        if self._accepting and p.retries < self.max_retries:
+            backoff = self.retry_backoff_s * (2.0 ** p.retries)
+            if t.deadline_at is None or now + backoff < t.deadline_at:
+                p.retries += 1
+                p.not_before = now + backoff
+                t._reset()
+                self._queue.append(p)
+                self._stats.retries += 1
+                return
+        t._fail(exc)
+
+    def _note_device_failure(self, device) -> None:
+        n = self._consec_failures.get(device, 0) + 1
+        self._consec_failures[device] = n
+        if n >= self.quarantine_after and device not in self._quarantined:
+            healthy = [d for d in self.devices
+                       if d not in self._quarantined]
+            if len(healthy) > 1:    # never quarantine the last device
+                self._quarantine(device)
+
+    def _quarantine(self, device) -> None:
+        """Trip the circuit breaker: stop placing batches on ``device`` and
+        re-dispatch its in-flight work to healthy devices (no retry budget
+        consumed — the requests did nothing wrong)."""
+        backoff = self._quarantine_backoff.get(device, self.quarantine_s)
+        self._quarantined[device] = time.perf_counter() + backoff
+        self._quarantine_backoff[device] = backoff * 2.0
+        self._stats.quarantines += 1
+        self._dev_stats[device]["quarantines"] += 1
+        dq = self._inflight[device]
+        while dq:
+            b = dq.popleft()
+            if b.finalized:                     # pragma: no cover - safety
+                continue
+            b.finalized = True
+            for p in b.pendings:
+                if p.ticket._error is not None:
+                    continue    # already settled (deadline hit mid-flight)
+                p.ticket._reset()
+                p.not_before = 0.0
+                self._queue.append(p)
+                self._stats.redispatched_requests += 1
+        if self._busy_since is not None and \
+                not any(self._inflight.values()):
+            self._stats.exec_s += time.perf_counter() - self._busy_since
+            self._busy_since = None
+
+    def _check_quarantine(self) -> None:
+        """Health-check quarantined devices whose retest time has come:
+        re-admit on a passing probe, else double the quarantine."""
+        if not self._quarantined:
+            return
+        now = time.perf_counter()
+        for device, until in list(self._quarantined.items()):
+            if now < until:
+                continue
+            if self._probe(device):
+                del self._quarantined[device]
+                self._consec_failures[device] = 0
+                self._quarantine_backoff.pop(device, None)
+            else:
+                backoff = self._quarantine_backoff.get(
+                    device, self.quarantine_s)
+                self._quarantined[device] = now + backoff
+                self._quarantine_backoff[device] = backoff * 2.0
+
+    def _probe(self, device) -> bool:
+        """One round-trip health check (tiny transfer) on ``device``."""
+        try:
+            if self.fault_injector is not None:
+                self.fault_injector(device, None)
+            jax.block_until_ready(jax.device_put(np.uint32(0), device))
+            return True
+        except Exception:
+            return False
+
+    def _expire_deadlines(self) -> None:
+        """Fail queued/staged requests whose deadline already passed —
+        don't waste a device on work nobody can use."""
+        now = time.perf_counter()
+        if self._queue and any(
+                p.ticket.deadline_at is not None
+                and now >= p.ticket.deadline_at for p in self._queue):
+            keep: "list[_Pending]" = []
+            for p in self._queue:
+                dl = p.ticket.deadline_at
+                if dl is not None and now >= dl:
+                    self._stats.deadline_exceeded += 1
+                    p.ticket._fail(DeadlineExceeded(
+                        f"deadline_ms={p.req.deadline_ms:g} passed while "
+                        f"queued"))
+                else:
+                    keep.append(p)
+            self._queue = keep
+        drop = False
+        for b in self._staged:
+            for i in range(len(b.pendings) - 1, -1, -1):
+                t = b.pendings[i].ticket
+                if t.deadline_at is not None and now >= t.deadline_at:
+                    p = b.unbind(i)
+                    self._stats.deadline_exceeded += 1
+                    p.ticket._fail(DeadlineExceeded(
+                        f"deadline_ms={p.req.deadline_ms:g} passed while "
+                        f"staged"))
+                    drop = drop or not b.pendings
+        if drop:
+            self._staged = [b for b in self._staged if b.pendings]
+
+    # ------------------------------ shutdown -------------------------------------
+
+    def close(self, drain: bool = True,
+              timeout: "float | None" = None) -> None:
+        """Shut the server down; every outstanding ticket settles.
+
+        ``drain=True`` (default) keeps dispatching until every queued,
+        staged and in-flight request has a result or a typed error (retries
+        and quarantine recovery included; ``timeout`` bounds the drain,
+        after which it degrades to the fast path).  ``drain=False`` fails
+        undispatched tickets with :class:`ServerClosed`, disables retries,
+        and finalizes in-flight batches.  Idempotent; the engine has no
+        threads, so nothing can leak."""
+        if self._closed:
+            return
+        self._closed = True
+        t_end = None if timeout is None else time.perf_counter() + timeout
+        if drain:
+            while self._queue or self._staged or \
+                    any(self._inflight.values()):
+                if t_end is not None and time.perf_counter() >= t_end:
+                    drain = False
+                    break
+                self._drive()
+                for dq in list(self._inflight.values()):
+                    while dq:
+                        self._finalize(dq[0])
+                if self._queue and not self._staged:
+                    # Everything left is backing off — wait it out.
+                    time.sleep(5e-4)
+        if not drain:
+            self._accepting = False     # no further retries
+            for p in self._queue:
+                if not p.ticket._done:
+                    p.ticket._fail(ServerClosed(
+                        "server closed before dispatch"))
+            self._queue.clear()
+            for b in self._staged:
+                for p in b.pendings:
+                    if not p.ticket._done:
+                        p.ticket._fail(ServerClosed(
+                            "server closed before dispatch"))
+            self._staged.clear()
+            for dq in list(self._inflight.values()):
+                while dq:
+                    self._finalize(dq[0])
+
+    def __enter__(self) -> "BankServer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # Exiting on an exception still drains: tickets must never dangle.
+        self.close(drain=True)
+
     # -------------------------------- stats --------------------------------------
 
     def stats(self) -> dict:
         d = self._stats.as_dict()
         d["n_devices"] = len(self.devices)
-        d["devices"] = [{"device": str(dev), **dict(st)}
+        d["devices"] = [{"device": str(dev), **dict(st),
+                         "quarantined": dev in self._quarantined}
                         for dev, st in self._dev_stats.items()]
         return d
 
@@ -738,6 +1182,7 @@ class BankServer:
         """Zero the counters; keeps the bucket/jit caches warm (for
         measuring steady-state serving after a warmup pass)."""
         self._stats = BankServerStats()
-        self._dev_stats = {d: {"n_batches": 0, "n_requests": 0}
+        self._dev_stats = {d: {"n_batches": 0, "n_requests": 0,
+                               "quarantines": 0}
                            for d in self.devices}
         self._busy_since = None
