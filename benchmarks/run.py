@@ -31,9 +31,9 @@ def main(argv=None):
 
     t0 = time.time()
     from . import (bank_plan_bench, fault_campaign, fig10_energy,
-                   fig11_lifetime, plan_exec_bench, sc_matmul_bench,
-                   serve_bench, serve_multibank_bench, sng_bench,
-                   table2_arith, table3_apps, table4_bitflip)
+                   fig11_lifetime, megakernel_bench, plan_exec_bench,
+                   sc_matmul_bench, serve_bench, serve_multibank_bench,
+                   sng_bench, table2_arith, table3_apps, table4_bitflip)
 
     print("=" * 72)
     print("Stoch-IMC reproduction benchmarks (paper: 10.1016/j.aeue.2024.155614)")
@@ -74,6 +74,9 @@ def main(argv=None):
     # (`python -m benchmarks.fault_campaign --smoke`, like the serve
     # benches); the chaos half skips itself below 2 devices.
     fc = None if args.smoke else fault_campaign.run()
+    # Megakernel/streaming bench: smoke runs it as its own CI step too
+    # (`python -m benchmarks.megakernel_bench --smoke`).
+    mk = None if args.smoke else megakernel_bench.run()
 
     with open(args.bench_out, "w") as f:
         json.dump(pe, f, indent=2)
@@ -92,11 +95,15 @@ def main(argv=None):
     if fc is not None:
         with open("BENCH_faults.json", "w") as f:
             json.dump(fc, f, indent=2)
+    if mk is not None:
+        with open("BENCH_megakernel.json", "w") as f:
+            json.dump(mk, f, indent=2)
     print(f"\nwrote {args.bench_out} and {sng_out}"
           + ("" if bp is None else " and BENCH_bank_plan.json")
           + ("" if sv is None else " and BENCH_serve.json")
           + ("" if mb is None else " and BENCH_serve_multibank.json")
-          + ("" if fc is None else " and BENCH_faults.json"))
+          + ("" if fc is None else " and BENCH_faults.json")
+          + ("" if mk is None else " and BENCH_megakernel.json"))
 
     s = t3["summary"]
     print("\n" + "=" * 72)
@@ -159,6 +166,15 @@ def main(argv=None):
                      f"{ch['lost_tickets'] + ch['failed_tickets']}", "0",
                      ch["lost_tickets"] == 0 and ch["failed_tickets"] == 0
                      and ch["bit_identical"]))
+        wc = mk["wallclock"]
+        kde_peak = mk["banks"]["kde"]["peak_live_words"]["16384"]["reduction"]
+        checks.append(
+            ("Streamed peak-live words (KDE bank)",
+             f"{kde_peak:.1f}X", ">=4X (target)", kde_peak >= 4.0))
+        checks.append(
+            ("Chunked-stream vs one-shot exec",
+             f"{wc['chunked_speedup']:.1f}X", ">=1.3X (target)",
+             wc["chunked_speedup"] >= 1.3 and wc["bit_identical"]))
     ok = True
     for name, got, paper, passed in checks:
         mark = "PASS" if passed else "FAIL"

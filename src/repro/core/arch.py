@@ -251,10 +251,25 @@ class BankPlanCost:
     #: Same pricing for a per-active-member dispatch loop (each member's own
     #: schedule + init, one accumulation hierarchy per dispatch).
     looped_schedule_cycles: int = 0
+    #: Peak simultaneously-live node streams across the bank's group plans
+    #: (the compiler liveness stage's scratch high-water mark) and the naive
+    #: one-row-per-node count it replaces.  Live streams occupy subarray rows
+    #: for the duration of a pass wave, so ``max_live`` — not node count — is
+    #: what bounds how many instances share a subarray.
+    max_live: int = 0
+    naive_live: int = 0
+    #: ``max_live`` as a fraction of one subarray's rows (> 1.0 means the
+    #: bank's wave spills across subarrays even with liveness-driven reuse).
+    live_occupancy_frac: float = 0.0
 
     @property
     def simd_speedup(self) -> float:
         return self.looped_cycles / max(self.merged_cycles, 1)
+
+    @property
+    def live_reduction(self) -> float:
+        """Row-footprint shrink from liveness-driven reuse (naive / peak)."""
+        return self.naive_live / max(self.max_live, 1)
 
     @property
     def schedule_speedup(self) -> float:
@@ -332,6 +347,9 @@ def evaluate_bank_plan(bank, cfg: StochIMCConfig,
     merged_sched = sum(_plan_schedule_cycles(g)
                        for g in (bank.comb, bank.seq) if g is not None)
     looped_sched = sum(_plan_schedule_cycles(m) for m in active_plans)
+    group_plans = [g for g in (bank.comb, bank.seq) if g is not None]
+    max_live = max((g.max_live for g in group_plans), default=0)
+    naive_live = max((g.naive_live for g in group_plans), default=0)
     return BankPlanCost(
         n_members=bank.n_members,
         merged_passes=bank.n_passes,
@@ -347,6 +365,9 @@ def evaluate_bank_plan(bank, cfg: StochIMCConfig,
         schedule_cycles=merged_sched * pipeline + acc,
         looped_schedule_cycles=looped_sched * pipeline
         + acc * len(active_plans),
+        max_live=max_live,
+        naive_live=naive_live,
+        live_occupancy_frac=max_live / max(cfg.subarray_rows, 1),
     )
 
 

@@ -49,6 +49,12 @@ class CompiledOp:
     the base op is applied — how absorbed lone NOT gates survive inside their
     consuming pass (``()`` means no complemented inputs).  Gates only batch
     with same-(op, neg) peers, so the mask is pass-wide.
+
+    ``slots``/``free_after`` are filled by the ``liveness`` pipeline stage:
+    ``slots[i]`` is the scratch-pool slot (in ``[0, plan.max_live)``) holding
+    ``outputs[i]``, and ``free_after`` lists the node names whose last use is
+    this pass — the executor drops them from its environment once the pass
+    has run, and the megakernel recycles their slots from the next pass on.
     """
 
     op: str
@@ -56,6 +62,8 @@ class CompiledOp:
     inputs: tuple[tuple[str, ...], ...]   # arity x n_batched
     outputs: tuple[str, ...]
     neg: tuple[bool, ...] = ()            # per-input complement mask
+    slots: tuple[int, ...] = ()           # scratch slot per batched output
+    free_after: tuple[str, ...] = ()      # nodes dead once this pass ran
 
     @property
     def n_batched(self) -> int:
@@ -131,6 +139,13 @@ class ExecutionPlan:
     deterministic canonical order (bank templates sort members by it) without
     hashing structures on the serving hot path.
 
+    ``max_live``/``pi_slots`` come from the ``liveness`` pipeline stage:
+    ``max_live`` is the peak number of simultaneously-live node streams under
+    the plan's pass order (the scratch-pool size a register-allocation-style
+    executor needs, vs ``naive_live`` for keeping every node resident), and
+    ``pi_slots[i]`` is the scratch slot assigned to ``pis[i]`` (``-1`` for a
+    PI no pass reads and no output re-exposes — never materialized).
+
     ``schedule`` is the Algorithm-1 ``scheduler.Schedule`` of the plan's
     fused passes (pipeline stage "schedule"): each pass maps to one SIMD
     V_SL drive over the subarray, so ``schedule.logic_cycles`` prices the
@@ -158,6 +173,8 @@ class ExecutionPlan:
     n_not_absorbed: int = 0
     serial: int = -1
     schedule: Any = None                          # scheduler.Schedule | None
+    max_live: int = 0                             # liveness: peak live nodes
+    pi_slots: tuple[int, ...] = ()                # liveness: slot per PI
 
     @property
     def is_sequential(self) -> bool:
@@ -179,6 +196,14 @@ class ExecutionPlan:
     def n_elided(self) -> int:
         """Nodes removed from the pass schedule by BUFF elision and CSE."""
         return self.n_buff_elided + self.n_cse_elided
+
+    @property
+    def naive_live(self) -> int:
+        """Node streams a keep-everything executor holds live at once (every
+        PI plus every pass output) — the baseline ``max_live`` is measured
+        against when pricing scratch occupancy."""
+        return len(self.pis) + sum(cop.n_batched
+                                   for level in self.levels for cop in level)
 
     def stream_pi_names(self) -> tuple[str, ...]:
         """Non-state PIs, in declaration order (the streams the executor

@@ -3,7 +3,8 @@
 One explicit ``PassPipeline`` replaces the three divergent compile paths that
 used to live inline in ``plan.py``:
 
-    normalize -> elide_cse -> fuse -> level -> schedule -> stream_table -> emit
+    normalize -> elide_cse -> fuse -> level -> schedule -> liveness
+              -> stream_table -> emit
 
 * ``lower_netlist`` runs the full pipeline on a single ``Netlist`` (the
   ``compile_plan`` path; ``fuse=False`` turns the structural stages into
@@ -11,9 +12,10 @@ used to live inline in ``plan.py``:
 * ``merge_plans`` merges already-lowered member plans level-by-level
   (cross-member type batching) and enters the SAME pipeline at the
   ``schedule`` stage — merged-bank and padded-template compilation share the
-  single tail (schedule -> stream_table -> emit) with the single-netlist
-  path, so every ``ExecutionPlan``, merged or not, carries an Algorithm-1
-  ``Schedule`` and a stream table built by the same stages.
+  single tail (schedule -> liveness -> stream_table -> emit) with the
+  single-netlist path, so every ``ExecutionPlan``, merged or not, carries an
+  Algorithm-1 ``Schedule``, a liveness scratch assignment, and a stream
+  table built by the same stages.
 
 Stages communicate through a mutable ``Lowering`` context; each stage is a
 pure function of it, so alternative pipelines (e.g. a no-schedule variant for
@@ -31,7 +33,8 @@ from ..gates import Netlist
 from .ir import (FUSED_MUX, FUSED_XOR, BankPlan, CompiledOp, ExecutionPlan,
                  build_stream_table, member_prefix)
 from .stages import (_WGate, _WOp, _absorb_nots, _elide_and_cse, _find_mux_fusions,
-                     _find_xor_fusions, _fold_ands, level_ops, schedule_passes)
+                     _find_xor_fusions, _fold_ands, assign_liveness, level_ops,
+                     schedule_passes)
 
 # Monotone compile stamp shared by plans and banks (ExecutionPlan.serial /
 # BankPlan.serial).  Deliberately NOT reset by plan.clear_cache(): serial
@@ -74,6 +77,8 @@ class Lowering:
         "xor_fused": 0, "and_fused": 0, "not_absorbed": 0})
     stream_table: Any = None
     schedule: Any = None
+    max_live: int = 0
+    pi_slots: tuple = ()
     plan: ExecutionPlan | None = None
 
 
@@ -157,6 +162,23 @@ def stage_schedule(ctx: Lowering) -> None:
     ctx.schedule = schedule_passes(ctx.name, ctx.pis, ctx.levels)
 
 
+def stage_liveness(ctx: Lowering) -> None:
+    """Last-use analysis + scratch-slot assignment over the leveled passes.
+
+    Runs after ``schedule`` (the pass order is final) and before
+    ``stream_table``, and — like both — on every compile path: single
+    netlists, merged BankPlans, and padded templates all enter at or before
+    this stage, so every ``ExecutionPlan`` carries ``max_live``/``pi_slots``
+    and per-op ``slots``/``free_after``.  Observable nodes are protected
+    through the alias map: an elided output's survivor must stay live for the
+    executor's re-expose step.
+    """
+    observable = set(ctx.outputs) | set(ctx.state_drivers)
+    protected = {ctx.alias.get(nm, nm) for nm in observable}
+    ctx.levels, ctx.pi_slots, ctx.max_live = assign_liveness(
+        ctx.levels, (p.name for p in ctx.pis), protected)
+
+
 def stage_stream_table(ctx: Lowering) -> None:
     """Lay out the batched-SNG stream table over the plan's PIs."""
     ctx.stream_table = build_stream_table(ctx.pis)
@@ -185,6 +207,8 @@ def stage_emit(ctx: Lowering) -> None:
         n_not_absorbed=c["not_absorbed"],
         serial=next_serial(),
         schedule=ctx.schedule,
+        max_live=ctx.max_live,
+        pi_slots=ctx.pi_slots,
     )
 
 
@@ -223,6 +247,7 @@ DEFAULT_PIPELINE = PassPipeline((
     ("fuse", stage_fuse),
     ("level", stage_level),
     ("schedule", stage_schedule),
+    ("liveness", stage_liveness),
     ("stream_table", stage_stream_table),
     ("emit", stage_emit),
 ))

@@ -29,6 +29,7 @@ SBG input-initialization cycles — instead of raw pass counts.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from collections import defaultdict
 
 from ..gates import ALL_ROWS, Netlist
@@ -307,6 +308,89 @@ def level_ops(ops: "list[_WOp]", pi_names) -> tuple:
             ))
         levels.append(tuple(lvl_ops))
     return tuple(levels)
+
+
+# ------------------------------- liveness stage ------------------------------------
+
+def assign_liveness(levels, pi_names, protected):
+    """Last-use analysis + register-allocation-style scratch assignment.
+
+    Walks the plan's passes in execution order and computes, for every node
+    stream (PI or pass output), the pass after which it is dead.  Dead nodes
+    release their scratch slot back to a free pool; live ones hold it — so
+    the pool's high-water mark (``max_live``) is the peak number of
+    simultaneously-resident streams, the VMEM scratch size the megakernel
+    allocates and the subarray-occupancy metric ``arch`` prices (vs
+    ``naive_live`` for a keep-everything executor).
+
+    Allocation is conservative within a pass: slots freed by pass ``i`` are
+    reusable from pass ``i+1``, never by pass ``i``'s own outputs — a batched
+    pass computes its gates one after another, so reusing a dying input's
+    slot for an earlier gate's output could clobber a later gate's operand.
+    Freed slots are recycled lowest-numbered-first, keeping the assignment
+    deterministic.
+
+    ``protected`` nodes (plan outputs, state drivers — resolved through the
+    alias map so an elided observable protects its survivor) are never freed.
+    Returns ``(levels, pi_slots, max_live)`` where ``levels`` carries the
+    per-op ``slots``/``free_after`` fields and ``pi_slots[i]`` is the slot of
+    the i-th PI (``-1`` when no pass reads it and nothing re-exposes it).
+    """
+    pi_names = list(pi_names)
+    passes = [cop for level in levels for cop in level]
+    last_use: dict[str, int] = {}
+    for i, cop in enumerate(passes):
+        for row in cop.inputs:
+            for nm in row:
+                last_use[nm] = i
+
+    slot_of: dict[str, int] = {}
+    free_pool: list[int] = []
+    n_slots = 0
+
+    def alloc(name: str) -> int:
+        nonlocal n_slots
+        if free_pool:
+            s = heapq.heappop(free_pool)
+        else:
+            s = n_slots
+            n_slots += 1
+        slot_of[name] = s
+        return s
+
+    live = {nm for nm in pi_names if nm in last_use or nm in protected}
+    for nm in pi_names:
+        if nm in live:
+            alloc(nm)
+    pi_slots = tuple(slot_of.get(nm, -1) for nm in pi_names)
+    # PIs nothing reads (and nothing re-exposes) are dropped up front: the
+    # executor deletes them after the first pass, the megakernel never loads
+    # them.  They still count toward naive_live — a keep-everything executor
+    # holds them for the whole plan.
+    unused_pis = [nm for nm in pi_names
+                  if nm not in last_use and nm not in protected]
+
+    new_passes = []
+    for i, cop in enumerate(passes):
+        slots = tuple(alloc(o) for o in cop.outputs)
+        dying = sorted(
+            {nm for row in cop.inputs for nm in row
+             if last_use[nm] == i and nm not in protected}
+            | {o for o in cop.outputs
+               if o not in last_use and o not in protected})
+        if i == 0:
+            dying = sorted(set(dying) | set(unused_pis))
+        for nm in dying:
+            if nm in slot_of:
+                heapq.heappush(free_pool, slot_of.pop(nm))
+        new_passes.append(dataclasses.replace(cop, slots=slots,
+                                              free_after=tuple(dying)))
+
+    out_levels, k = [], 0
+    for level in levels:
+        out_levels.append(tuple(new_passes[k:k + len(level)]))
+        k += len(level)
+    return tuple(out_levels), pi_slots, n_slots
 
 
 # ------------------------------- schedule stage ------------------------------------

@@ -40,14 +40,18 @@ from .streams import (_BACKENDS, _KEY_MODES, DEFAULT_BACKEND, DEFAULT_KEY_MODE,
 
 @partial(jax.jit, static_argnames=("plan", "bitstream_length", "bitflip_rate",
                                    "use_pallas", "decode", "key_mode",
-                                   "batch_shape", "fault_model"))
+                                   "batch_shape", "fault_model", "word_chunk",
+                                   "megakernel", "interpret"))
 def _execute_compiled(plan: ExecutionPlan, values: dict[str, jax.Array],
                       key: jax.Array, flip_key, bitstream_length: int,
                       bitflip_rate: float, use_pallas: bool,
                       decode: bool = False,
                       key_mode: str = DEFAULT_KEY_MODE,
                       batch_shape: tuple[int, ...] | None = None,
-                      fault_model: FaultModel | None = None) -> dict[str, jax.Array]:
+                      fault_model: FaultModel | None = None,
+                      word_chunk: int | None = None,
+                      megakernel: bool = False,
+                      interpret: bool | None = None) -> dict[str, jax.Array]:
     """Whole-netlist execution as one XLA program.
 
     Mirrors the reference interpreter's key discipline exactly (whatever the
@@ -65,15 +69,49 @@ def _execute_compiled(plan: ExecutionPlan, values: dict[str, jax.Array],
     bit-identical to the legacy rate path.  Static-only models (dead
     columns, explicit cell maps) need no ``flip_key``; a placeholder key
     feeds the (unconsumed) splits.
+
+    ``word_chunk`` streams a combinational run ``word_chunk`` words at a
+    time via ``lax.scan`` instead of materializing full-length node streams:
+    peak live words drop from ``plan.naive_live * W`` to roughly
+    ``plan.max_live * word_chunk``.  In batched key mode each chunk's PI
+    words are *regenerated* in place (the counter-based SNG is
+    word-addressable — see ``bs.generate_batch_seeded``); legacy mode
+    generates once and slices, so only intermediate streams are bounded.
+    Exact either way: chunks of an i.i.d. bitstream are independent, every
+    op is word-local, and reassembly is a pure transpose.
+    ``megakernel``/``interpret`` select the whole-plan Pallas kernel for the
+    logic passes (``kernels/plan_megakernel``).
     """
     from ..kernels import netlist_exec
+
+    inject = _faults.injecting(bitflip_rate, fault_model)
+    if word_chunk is not None:
+        if plan.is_sequential:
+            raise ValueError(
+                "word_chunk streams combinational plans only: a sequential "
+                "plan's state recurrence already scans over words "
+                "(kernels/netlist_exec.run_sequential) and cannot be "
+                "re-chunked; drop word_chunk for this netlist")
+        if inject:
+            raise ValueError(
+                "word_chunk cannot combine with fault injection: "
+                "stuck/dead masks index absolute stream positions")
+        w = bs.n_words(bitstream_length)
+        if word_chunk <= 0 or w % word_chunk != 0:
+            raise ValueError(
+                f"word_chunk={word_chunk} must be positive and divide the "
+                f"stream length in words ({w} for BL={bitstream_length})")
+        if word_chunk != w:
+            return _execute_chunked(plan, values, key, bitstream_length,
+                                    use_pallas, decode, key_mode, batch_shape,
+                                    word_chunk, megakernel, interpret)
 
     streams = _gen_pi_streams(plan.pis, values, key, bitstream_length,
                               key_mode=key_mode, batch_shape=batch_shape,
                               use_pallas=use_pallas, table=plan.stream_table)
 
     gate_fkeys = None
-    if _faults.injecting(bitflip_rate, fault_model):
+    if inject:
         fk = flip_key if flip_key is not None else jax.random.key(0)
         fkeys = jax.random.split(fk, len(streams) + plan.n_gates)
         for i, name in enumerate(sorted(streams)):
@@ -86,12 +124,16 @@ def _execute_compiled(plan: ExecutionPlan, values: dict[str, jax.Array],
         netlist_exec.run_combinational(plan, env, gate_fkeys=gate_fkeys,
                                        bitflip_rate=bitflip_rate,
                                        fault_model=fault_model,
-                                       use_pallas=use_pallas)
+                                       use_pallas=use_pallas,
+                                       megakernel=megakernel,
+                                       interpret=interpret)
         packed_outs = {o: env[o] for o in plan.outputs}
     else:
         packed_outs = netlist_exec.run_sequential(
             plan, streams, use_pallas=use_pallas,
-            n_words=bs.n_words(bitstream_length))
+            n_words=bs.n_words(bitstream_length),
+            batch_shape=batch_shape,
+            megakernel=megakernel, interpret=interpret)
         if gate_fkeys is not None:
             for i, o in enumerate(sorted(packed_outs)):
                 packed_outs[o] = _faults.apply_faults(gate_fkeys[i],
@@ -100,6 +142,58 @@ def _execute_compiled(plan: ExecutionPlan, values: dict[str, jax.Array],
     if decode:
         return {o: bs.to_value(w, bitstream_length)
                 for o, w in packed_outs.items()}
+    return packed_outs
+
+
+def _execute_chunked(plan: ExecutionPlan, values, key, bitstream_length: int,
+                     use_pallas: bool, decode: bool, key_mode: str,
+                     batch_shape, word_chunk: int, megakernel: bool,
+                     interpret: bool | None) -> dict[str, jax.Array]:
+    """Word-tiled streaming execution of a combinational plan.
+
+    One ``lax.scan`` over ``W / word_chunk`` chunks; each step holds at most
+    ``plan.max_live`` streams of ``word_chunk`` words.  Batched key mode
+    regenerates each chunk's PI words by absolute position
+    (``word_window``); legacy threefry streams are not word-addressable, so
+    that mode pre-generates once and the scan body slices (the live-words
+    bound then covers intermediates only).  Chunk outputs stack on a leading
+    axis and reassemble by a transpose — bit-identical to the one-shot run.
+    """
+    from ..kernels import netlist_exec
+
+    w = bs.n_words(bitstream_length)
+    n_chunks = w // word_chunk
+    full = None
+    if key_mode != "batched":
+        full = _gen_pi_streams(plan.pis, values, key, bitstream_length,
+                               key_mode=key_mode, batch_shape=batch_shape,
+                               use_pallas=use_pallas, table=plan.stream_table)
+
+    def body(carry, ci):
+        if full is None:
+            streams = _gen_pi_streams(
+                plan.pis, values, key, bitstream_length, key_mode=key_mode,
+                batch_shape=batch_shape, use_pallas=use_pallas,
+                table=plan.stream_table,
+                word_window=(ci * jnp.uint32(word_chunk), word_chunk))
+        else:
+            streams = {nm: jax.lax.dynamic_slice_in_dim(
+                           v, ci * jnp.uint32(word_chunk), word_chunk, axis=-1)
+                       for nm, v in full.items()}
+        env = dict(streams)
+        netlist_exec.run_combinational(plan, env, use_pallas=use_pallas,
+                                       megakernel=megakernel,
+                                       interpret=interpret)
+        return carry, tuple(env[o] for o in plan.outputs)
+
+    _, ys = jax.lax.scan(body, 0, jnp.arange(n_chunks, dtype=jnp.uint32))
+    packed_outs = {}
+    for o, y in zip(plan.outputs, ys):      # y: (n_chunks, *batch, word_chunk)
+        y = jnp.moveaxis(y, 0, -2)
+        packed_outs[o] = y.reshape(y.shape[:-2] + (w,))
+    if decode:
+        return {o: bs.to_value(v, bitstream_length)
+                for o, v in packed_outs.items()}
     return packed_outs
 
 
@@ -186,12 +280,18 @@ def _dispatch(net: Netlist, values, key, bitstream_length: int,
               bitflip_rate: float, flip_key, backend: str | None,
               decode: bool, key_mode: str | None = None,
               batch_shape: tuple[int, ...] | None = None,
-              fault_model: FaultModel | None = None) -> dict[str, jax.Array]:
+              fault_model: FaultModel | None = None,
+              word_chunk: int | None = None,
+              interpret: bool | None = None) -> dict[str, jax.Array]:
     backend, key_mode = _check_modes(backend, key_mode)
     if batch_shape is not None:
         batch_shape = tuple(batch_shape)   # hashable for the jit static arg
     fault_model = _check_fault_args(bitflip_rate, fault_model, flip_key)
     if backend == "reference":
+        if word_chunk is not None:
+            raise ValueError("word_chunk requires a compiled backend; the "
+                             "reference interpreter always materializes "
+                             "full streams")
         outs = _execute_reference(net, values, key, bitstream_length,
                                   bitflip_rate, flip_key, key_mode=key_mode,
                                   batch_shape=batch_shape,
@@ -205,7 +305,10 @@ def _dispatch(net: Netlist, values, key, bitstream_length: int,
                              float(bitflip_rate),
                              backend == "compiled_pallas", decode=decode,
                              key_mode=key_mode, batch_shape=batch_shape,
-                             fault_model=fault_model)
+                             fault_model=fault_model,
+                             word_chunk=word_chunk,
+                             megakernel=backend == "compiled_megakernel",
+                             interpret=interpret)
 
 
 def _dispatch_binary(net: Netlist, operand_bits: dict[str, jax.Array],
@@ -301,7 +404,9 @@ def _execute_bank_impl(bank: BankPlan, values_seq, keys, flip_keys,
                        use_pallas: bool, decode: bool,
                        key_mode: str = DEFAULT_KEY_MODE, batch_shapes=None,
                        active=None, scalar_names=None,
-                       fault_model: FaultModel | None = None):
+                       fault_model: FaultModel | None = None,
+                       megakernel: bool = False,
+                       interpret: bool | None = None):
     """Whole-bank execution of N member netlists as one XLA program.
 
     Stream generation and fault keying stay *per member*: member ``i``'s
@@ -368,7 +473,9 @@ def _execute_bank_impl(bank: BankPlan, values_seq, keys, flip_keys,
         netlist_exec.run_combinational(bank.comb, comb_env, gate_fkeys=gf,
                                        bitflip_rate=bitflip_rate,
                                        fault_model=fault_model,
-                                       use_pallas=use_pallas)
+                                       use_pallas=use_pallas,
+                                       megakernel=megakernel,
+                                       interpret=interpret)
         for i in bank.comb_members:
             if active is not None and not active[i]:
                 continue
@@ -377,7 +484,8 @@ def _execute_bank_impl(bank: BankPlan, values_seq, keys, flip_keys,
     if bank.seq is not None:
         packed = netlist_exec.run_sequential(
             bank.seq, seq_words, use_pallas=use_pallas,
-            n_words=bs.n_words(bitstream_length))
+            n_words=bs.n_words(bitstream_length),
+            megakernel=megakernel, interpret=interpret)
         for i in bank.seq_members:
             if active is not None and not active[i]:
                 continue
@@ -399,7 +507,7 @@ def _execute_bank_impl(bank: BankPlan, values_seq, keys, flip_keys,
 
 _BANK_STATIC = ("bank", "bitstream_length", "bitflip_rate", "use_pallas",
                 "decode", "key_mode", "batch_shapes", "active",
-                "scalar_names", "fault_model")
+                "scalar_names", "fault_model", "megakernel", "interpret")
 _execute_bank = partial(jax.jit, static_argnames=_BANK_STATIC)(
     _execute_bank_impl)
 #: Donating variant (its own jit cache): XLA reuses the stacked key rows'
@@ -567,7 +675,8 @@ def _dispatch_many(nets, values_seq, keys, bitstream_length: int,
     outs = _execute_bank(bank, values_seq, keys, flip_keys, bitstream_length,
                          float(bitflip_rate), backend == "compiled_pallas",
                          decode, key_mode=key_mode, batch_shapes=batch_shapes,
-                         scalar_names=scalar_names, fault_model=fault_model)
+                         scalar_names=scalar_names, fault_model=fault_model,
+                         megakernel=backend == "compiled_megakernel")
     return list(outs)
 
 
@@ -576,7 +685,8 @@ def execute_bank(bank: BankPlan, values_seq, keys, bitstream_length: int,
                  backend: str | None = None, key_mode: str | None = None,
                  batch_shapes=None, decode: bool = False,
                  device=None, donate: bool = False,
-                 fault_model: FaultModel | None = None) -> list:
+                 fault_model: FaultModel | None = None,
+                 interpret: bool | None = None) -> list:
     """Execute a prebuilt (possibly padded) BankPlan slot-wise.
 
     The serving-engine entry point (``repro.serve.sc_engine``): ``bank`` is
@@ -628,7 +738,9 @@ def execute_bank(bank: BankPlan, values_seq, keys, bitstream_length: int,
     args = (bank, values_seq, keys, flip_keys, bitstream_length,
             float(bitflip_rate), backend == "compiled_pallas", decode)
     kw = dict(key_mode=key_mode, batch_shapes=batch_shapes, active=active,
-              scalar_names=scalar_names, fault_model=fault_model)
+              scalar_names=scalar_names, fault_model=fault_model,
+              megakernel=backend == "compiled_megakernel",
+              interpret=interpret)
     if donate:
         # Donation is best-effort: when no output can alias a key-row buffer
         # (the common case — outputs are packed words, not keys) XLA ignores

@@ -46,6 +46,15 @@ class ExecOptions:
     (queue + retries + device) by it, failing the ticket with
     ``DeadlineExceeded`` when it passes; the execution paths themselves
     ignore it.
+
+    ``word_chunk`` (words, must divide ``bitstream_length / 32``) streams a
+    combinational execution chunk-by-chunk via ``lax.scan`` instead of
+    materializing full-length node streams — peak live words drop to about
+    ``plan.max_live * word_chunk`` (see the compiler's liveness stage).
+    Single-request compiled paths only; bit-identical to unchunked runs.
+    ``interpret`` forces Pallas interpret mode on (True) or off (False) for
+    the pallas/megakernel backends; ``None`` auto-detects (compiled on TPU,
+    interpret elsewhere).
     """
 
     backend: str | None = None
@@ -58,6 +67,8 @@ class ExecOptions:
     binary: bool = False
     fault_model: "FaultModel | None" = None
     deadline_ms: "float | None" = None
+    word_chunk: "int | None" = None
+    interpret: "bool | None" = None
 
 
 @dataclasses.dataclass
@@ -273,7 +284,8 @@ def execute_value_many(nets, values_seq, /, *args, **kwargs) -> list:
 # ------------------------------ run() entry point ---------------------------------
 
 _SHARED_OPTION_FIELDS = ("backend", "key_mode", "bitstream_length",
-                         "bitflip_rate", "decode", "binary", "fault_model")
+                         "bitflip_rate", "decode", "binary", "fault_model",
+                         "word_chunk", "interpret")
 
 
 def _common_options(reqs: "list[ExecRequest]") -> ExecOptions:
@@ -317,11 +329,15 @@ def _run_one(req: ExecRequest, device=None,
                                  o.bitstream_length, float(o.bitflip_rate),
                                  backend == "compiled_pallas", decode=o.decode,
                                  key_mode=key_mode, batch_shape=batch_shape,
-                                 fault_model=fault_model)
+                                 fault_model=fault_model,
+                                 word_chunk=o.word_chunk,
+                                 megakernel=backend == "compiled_megakernel",
+                                 interpret=o.interpret)
     return _dispatch(req.net, values, key, o.bitstream_length,
                      o.bitflip_rate, flip_key, o.backend, decode=o.decode,
                      key_mode=o.key_mode, batch_shape=o.batch_shape,
-                     fault_model=o.fault_model)
+                     fault_model=o.fault_model, word_chunk=o.word_chunk,
+                     interpret=o.interpret)
 
 
 def _run_many(reqs: "list[ExecRequest]", device=None,
@@ -331,6 +347,9 @@ def _run_many(reqs: "list[ExecRequest]", device=None,
     shared = options or _common_options(reqs)
     if shared.binary:
         raise ValueError("run: binary requests execute one at a time")
+    if shared.word_chunk is not None:
+        raise ValueError("run: word_chunk streams single-plan executions; "
+                         "bank-merged batches run unchunked")
     for r in reqs:
         if not isinstance(r.net, Netlist):
             raise TypeError("run([...]) merges netlists into one bank; pass "
@@ -374,6 +393,9 @@ def _run_template(reqs, bank: BankPlan, active=None, device=None,
     shared = options or _common_options([r for _, r in bound])
     if shared.binary:
         raise ValueError("run: binary requests execute one at a time")
+    if shared.word_chunk is not None:
+        raise ValueError("run: word_chunk streams single-plan executions; "
+                         "template banks run unchunked")
     rate = float(shared.bitflip_rate)
     model = shared.fault_model
     need_keys = rate > 0.0 or (model is not None and model.needs_keys)
@@ -402,7 +424,8 @@ def _run_template(reqs, bank: BankPlan, active=None, device=None,
         flip_keys=_stack_keys(flip_rows) if need_keys else None,
         backend=shared.backend, key_mode=shared.key_mode,
         batch_shapes=batch_shapes, decode=shared.decode,
-        device=device, donate=donate, fault_model=model)
+        device=device, donate=donate, fault_model=model,
+        interpret=shared.interpret)
 
 
 def run(request_or_requests, *, template: BankPlan | None = None,

@@ -28,7 +28,7 @@ from .plan import BankPlan, StreamTable, build_stream_table
 #: Default backend for execute()/execute_value()/execute_binary().
 DEFAULT_BACKEND = "compiled"
 
-_BACKENDS = ("compiled", "compiled_pallas", "reference")
+_BACKENDS = ("compiled", "compiled_pallas", "compiled_megakernel", "reference")
 
 #: Default key discipline for PI-stream generation (see ``_gen_pi_streams``).
 DEFAULT_KEY_MODE = "batched"
@@ -65,13 +65,21 @@ def _gen_pi_streams(pis, values: dict[str, jax.Array], key: jax.Array,
                     bitstream_length: int, key_mode: str = DEFAULT_KEY_MODE,
                     batch_shape: tuple[int, ...] | None = None,
                     use_pallas: bool = False,
-                    table: StreamTable | None = None) -> dict[str, jax.Array]:
+                    table: StreamTable | None = None,
+                    word_window: tuple | None = None) -> dict[str, jax.Array]:
     """Generate packed streams for every PI, honoring correlation groups and
     independent-copy indices.  ``pis`` is any sequence of PrimaryInput.
 
     ``key_mode`` selects the key discipline (see module docstring).  The two
     modes differ bit-wise but are statistically equivalent (same Bernoulli
     marginals, same correlation structure).
+
+    ``word_window=(start, n)`` (batched mode only) generates just words
+    ``[start, start + n)`` of each stream — bit-identical to slicing the full
+    streams, because the counter-based RNG indexes absolute bit positions.
+    The chunked streaming executor regenerates each chunk's PI words this way
+    instead of holding full-length streams live.  The legacy threefry
+    discipline draws all words in one monolithic call and cannot window.
     """
     shape = _pi_shape(values, batch_shape)
     if key_mode == "batched":
@@ -82,8 +90,12 @@ def _gen_pi_streams(pis, values: dict[str, jax.Array], key: jax.Array,
         ps = _stack_table_values(table, values, shape)
         words = bs.generate_batch(key, ps, bitstream_length,
                                   lanes=jnp.asarray(table.lanes, jnp.uint32),
-                                  use_pallas=use_pallas)
+                                  use_pallas=use_pallas,
+                                  word_window=word_window)
         return {name: words[i] for i, name in enumerate(table.names)}
+    if word_window is not None:
+        raise ValueError("word_window requires key_mode='batched': legacy "
+                         "threefry streams are not word-addressable")
     if key_mode != "legacy":
         raise ValueError(f"unknown key_mode {key_mode!r}; "
                          f"expected one of {_KEY_MODES}")

@@ -39,21 +39,26 @@ _PALLAS_OPS = {"NOT": "not", "AND": "and", "NAND": "nand", "OR": "or",
 
 
 def _apply_pass(op: str, ins: list[jax.Array], use_pallas: bool,
-                neg: tuple[bool, ...] = ()) -> jax.Array:
+                neg: tuple[bool, ...] = (),
+                interpret: bool | None = None) -> jax.Array:
     """One fused pass over stacked packed words (any leading batch shape).
 
     ``neg[j]`` complements input ``j`` first — the absorbed-lone-NOT form of
     ``core/plan.py``'s NOT fusion (an exact identity: complementing inside
-    the pass equals materializing the NOT's output stream).
+    the pass equals materializing the NOT's output stream).  On the Pallas
+    path the mask folds into the kernel itself (an in-register read), so no
+    separate full-tensor complement op ever materializes; ``interpret``
+    forwards to ``packed_logic`` (None = auto-detect off-TPU).
     """
+    if use_pallas and op in _PALLAS_OPS and ins[0].ndim >= 2:
+        shape = ins[0].shape
+        flat = [x.reshape(-1, shape[-1]) for x in ins]
+        return packed_logic(_PALLAS_OPS[op], *flat, neg=tuple(neg),
+                            interpret=interpret).reshape(shape)
     if any(neg):
         ins = [~x if nb else x for x, nb in zip(ins, neg)]
     if op == "BUFF":
         return ins[0]
-    if use_pallas and op in _PALLAS_OPS and ins[0].ndim >= 2:
-        shape = ins[0].shape
-        flat = [x.reshape(-1, shape[-1]) for x in ins]
-        return packed_logic(_PALLAS_OPS[op], *flat).reshape(shape)
     if op == FUSED_MUX:
         return bs.mux(*ins)
     return bs.GATE_FNS[op](*ins)
@@ -63,7 +68,9 @@ def run_combinational(plan: ExecutionPlan, env: dict[str, jax.Array],
                       gate_fkeys: jax.Array | None = None,
                       bitflip_rate: float = 0.0,
                       use_pallas: bool = False,
-                      fault_model=None) -> dict[str, jax.Array]:
+                      fault_model=None,
+                      megakernel: bool = False,
+                      interpret: bool | None = None) -> dict[str, jax.Array]:
     """Evaluate the plan's levels in-place over ``env`` (node -> words).
 
     ``gate_fkeys``: per-gate fault keys indexed by original gate id; when
@@ -74,25 +81,49 @@ def run_combinational(plan: ExecutionPlan, env: dict[str, jax.Array],
     the flat rate to the STT-MRAM taxonomy (``core/faults.py``): each gate's
     output stream occupies its own array rows, so its stuck/dead masks
     derive from that gate's key.
+
+    ``megakernel=True`` lowers the whole plan into ONE Pallas kernel
+    (``plan_megakernel``) when it can — homogeneous PI shapes and a
+    liveness-annotated plan — silently falling back to the per-pass path
+    otherwise.  Fault injection faults individual pass outputs, which the
+    fused kernel never materializes, so the combination is rejected.
+
+    The per-pass path releases dead intermediates as it goes: after each
+    pass, every node in ``cop.free_after`` (computed by the compiler's
+    liveness stage) is dropped from ``env``, bounding eager/interpret
+    residency at ``plan.max_live`` streams instead of one per node.
     """
     inject = gate_fkeys is not None and \
         _faults.injecting(bitflip_rate, fault_model)
     if inject and plan.fused:
         raise ValueError("per-gate fault injection requires an unfused plan")
+    if megakernel:
+        if inject:
+            raise ValueError(
+                "megakernel execution cannot inject per-gate faults: "
+                "intermediate pass outputs never leave the kernel")
+        from .plan_megakernel import combinational_megakernel
+        res = combinational_megakernel(plan, env, interpret=interpret)
+        if res is not None:
+            env.update(res)
+            return env
     for level in plan.levels:
         for cop in level:
             k = cop.n_batched
             if k == 1:
                 ins = [env[names[0]] for names in cop.inputs]
-                outs = [_apply_pass(cop.op, ins, use_pallas, cop.neg)]
+                outs = [_apply_pass(cop.op, ins, use_pallas, cop.neg,
+                                    interpret)]
             else:
-                outs = _batched_pass(cop, env, use_pallas)
+                outs = _batched_pass(cop, env, use_pallas, interpret)
             if inject:
                 outs = [_faults.apply_faults(gate_fkeys[gid], o,
                                              bitflip_rate, fault_model)
                         for gid, o in zip(cop.gids, outs)]
             for name, o in zip(cop.outputs, outs):
                 env[name] = o
+            for name in cop.free_after:
+                env.pop(name, None)
     # Re-expose nodes elided by BUFF elision / CSE: each aliases the surviving
     # node computing the identical stream, so outputs and state drivers that
     # were deduplicated away stay readable (zero extra passes).
@@ -101,8 +132,8 @@ def run_combinational(plan: ExecutionPlan, env: dict[str, jax.Array],
     return env
 
 
-def _batched_pass(cop, env: dict[str, jax.Array],
-                  use_pallas: bool) -> list[jax.Array]:
+def _batched_pass(cop, env: dict[str, jax.Array], use_pallas: bool,
+                  interpret: bool | None = None) -> list[jax.Array]:
     """Execute one multi-gate CompiledOp, allowing heterogeneous batch shapes.
 
     Bank-merged plans batch gates from different member netlists into one op,
@@ -125,10 +156,10 @@ def _batched_pass(cop, env: dict[str, jax.Array],
         if len(idxs) == 1:
             i = idxs[0]
             outs[i] = _apply_pass(cop.op, [row[i] for row in rows], use_pallas,
-                                  cop.neg)
+                                  cop.neg, interpret)
             continue
         ins = [jnp.stack([row[i] for i in idxs]) for row in rows]
-        stacked = _apply_pass(cop.op, ins, use_pallas, cop.neg)
+        stacked = _apply_pass(cop.op, ins, use_pallas, cop.neg, interpret)
         for j, i in enumerate(idxs):
             outs[i] = stacked[j]
     return outs
@@ -136,7 +167,10 @@ def _batched_pass(cop, env: dict[str, jax.Array],
 
 def run_sequential(plan: ExecutionPlan, pi_words: dict[str, jax.Array],
                    use_pallas: bool = False,
-                   n_words: int | None = None) -> dict[str, jax.Array]:
+                   n_words: int | None = None,
+                   batch_shape: tuple[int, ...] | None = None,
+                   megakernel: bool = False,
+                   interpret: bool | None = None) -> dict[str, jax.Array]:
     """Run a stateful plan as scan-over-words with an inner 32-bit loop.
 
     ``pi_words``: packed streams for every non-state PI, shape (..., W).
@@ -151,7 +185,12 @@ def run_sequential(plan: ExecutionPlan, pi_words: dict[str, jax.Array],
     every op is elementwise, so restriction commutes with the recurrence).
     Plans with zero stream PIs (state-only recurrences, e.g. a NOT-feedback
     oscillator) have nothing to stack — ``n_words`` then supplies the scan
-    length that is otherwise read off the stacked words.
+    length that is otherwise read off the stacked words, and ``batch_shape``
+    the batch shape that is otherwise read off the stacked words' leading
+    dims (without it a batched request would silently collapse to scalar
+    state and outputs).
+
+    ``megakernel``/``interpret`` forward to the per-bit combinational body.
     """
     names = plan.stream_pi_names()
     if names:
@@ -169,7 +208,7 @@ def run_sequential(plan: ExecutionPlan, pi_words: dict[str, jax.Array],
             raise ValueError(
                 f"plan {plan.name} has no stream PIs; pass n_words "
                 "(= bitstream_length // 32) to size the scan")
-        batch = ()
+        batch = tuple(batch_shape) if batch_shape else ()
         xs = jnp.zeros((n_words, 0), jnp.uint32)               # (W, 0)
 
     state0 = tuple(jnp.full(batch, jnp.uint32(round(init)))
@@ -186,7 +225,8 @@ def run_sequential(plan: ExecutionPlan, pi_words: dict[str, jax.Array],
                    for j, n in enumerate(names)}
             for s_name, s_val in zip(plan.state_pis, state):
                 env[s_name] = s_val
-            run_combinational(plan, env, use_pallas=use_pallas)
+            run_combinational(plan, env, use_pallas=use_pallas,
+                              megakernel=megakernel, interpret=interpret)
             new_state = tuple(env[d] for d in plan.state_drivers)
             # Mask to bit 0 before packing: inverting gates (~x) carry
             # garbage in bits 1..31 of the per-bit env values.

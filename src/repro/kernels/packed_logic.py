@@ -6,8 +6,14 @@ the "subarray" of DESIGN.md §2.  The MUX (scaled addition) fuses 4 gates
 (NOT + 2xNAND + NAND) into one pass, where the 2T-1MTJ method takes 4 cycles;
 fusion is the beyond-paper win available on TPU (no per-gate cell writes).
 
+Per-input complement masks (``neg``) are folded into the kernel itself: an
+absorbed lone NOT costs zero extra passes AND zero extra XLA ops — the
+complement happens on the VMEM-resident tile, not as a separate full-tensor
+pass before the pallas_call.
+
 Block shapes: (BM, BW) words; BM a multiple of 8 rows, BW a multiple of 128
-lanes to match the (8, 128) vreg tiling for 32-bit types.
+lanes to match the (8, 128) vreg tiling for 32-bit types.  ``interpret=None``
+(the default) auto-selects: compiled on TPU, interpret mode everywhere else.
 """
 from __future__ import annotations
 
@@ -17,18 +23,26 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .common import on_tpu
+
 _OPS1 = {"not"}
 _OPS2 = {"and", "nand", "or", "nor", "xor"}
 _OPS3 = {"mux"}
 
 
-def _kernel1(op, a_ref, o_ref):
-    a = a_ref[...]
+def _load(ref, nb: bool) -> jax.Array:
+    """Read a tile, complementing in-register when its neg-mask bit is set."""
+    x = ref[...]
+    return ~x if nb else x
+
+
+def _kernel1(op, neg, a_ref, o_ref):
+    a = _load(a_ref, neg[0])
     o_ref[...] = ~a
 
 
-def _kernel2(op, a_ref, b_ref, o_ref):
-    a, b = a_ref[...], b_ref[...]
+def _kernel2(op, neg, a_ref, b_ref, o_ref):
+    a, b = _load(a_ref, neg[0]), _load(b_ref, neg[1])
     if op == "and":
         o_ref[...] = a & b
     elif op == "nand":
@@ -41,16 +55,26 @@ def _kernel2(op, a_ref, b_ref, o_ref):
         o_ref[...] = a ^ b
 
 
-def _kernel3(op, a_ref, b_ref, s_ref, o_ref):
-    a, b, s = a_ref[...], b_ref[...], s_ref[...]
+def _kernel3(op, neg, a_ref, b_ref, s_ref, o_ref):
+    a, b = _load(a_ref, neg[0]), _load(b_ref, neg[1])
+    s = _load(s_ref, neg[2])
     o_ref[...] = (a & s) | (b & ~s)  # fused scaled addition
 
 
 @functools.partial(jax.jit, static_argnames=("op", "block_rows", "block_words",
-                                             "interpret"))
+                                             "interpret", "neg"))
 def packed_logic(op: str, *args: jax.Array, block_rows: int = 8,
-                 block_words: int = 128, interpret: bool = True) -> jax.Array:
-    """Apply a packed logic op over (rows, words) uint32 tensors."""
+                 block_words: int = 128, interpret: bool | None = None,
+                 neg: tuple[bool, ...] = ()) -> jax.Array:
+    """Apply a packed logic op over (rows, words) uint32 tensors.
+
+    ``neg[j]`` complements operand ``j`` inside the kernel before the op
+    (``CompiledOp.neg``, the absorbed-lone-NOT mask); ``()`` means none.
+    ``interpret=None`` resolves to interpret mode unless running on a real
+    TPU (``common.on_tpu``).
+    """
+    if interpret is None:
+        interpret = not on_tpu()
     a = args[0]
     rows, words = a.shape
     bm = min(block_rows, rows)
@@ -59,18 +83,22 @@ def packed_logic(op: str, *args: jax.Array, block_rows: int = 8,
     spec = pl.BlockSpec((bm, bw), lambda i, j: (i, j))
 
     if op in _OPS1:
-        kernel, n_in = functools.partial(_kernel1, op), 1
+        kernel, n_in = _kernel1, 1
     elif op in _OPS2:
-        kernel, n_in = functools.partial(_kernel2, op), 2
+        kernel, n_in = _kernel2, 2
     elif op in _OPS3:
-        kernel, n_in = functools.partial(_kernel3, op), 3
+        kernel, n_in = _kernel3, 3
     else:
         raise ValueError(op)
     if len(args) != n_in:
         raise ValueError(f"{op} expects {n_in} operands")
+    if neg and len(neg) != n_in:
+        raise ValueError(f"{op} neg mask has {len(neg)} entries "
+                         f"for {n_in} operands")
+    full_neg = tuple(neg) if neg else (False,) * n_in
 
     return pl.pallas_call(
-        kernel,
+        functools.partial(kernel, op, full_neg),
         grid=grid,
         in_specs=[spec] * n_in,
         out_specs=spec,

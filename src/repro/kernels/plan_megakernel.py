@@ -1,0 +1,166 @@
+"""Whole-plan Pallas megakernel: an ExecutionPlan as ONE fused kernel.
+
+The per-pass path (``netlist_exec``) issues one kernel per fused pass, so
+every intermediate node stream round-trips through HBM-equivalent buffers
+between passes.  This module lowers an entire combinational plan (or the
+combinational body of a sequential plan's scan step) into a single
+``pallas_call`` gridded over ``(row_tiles, word_tiles)``:
+
+  * each tile's PI streams load once into a VMEM scratch *pool* sized by the
+    liveness stage's ``plan.max_live`` — NOT by node count — and every
+    level's bitwise passes run without the tile ever leaving VMEM;
+  * per-input complement masks (``CompiledOp.neg``) fold into the in-register
+    reads, and the fused MUX/XOR/AND plan-level ops execute as single
+    expressions;
+  * only the plan's declared outputs (and state drivers) write back.
+
+This is the TPU analogue of the paper's intra-subarray residency: a gate
+level's operands and results stay inside the array (here: VMEM) instead of
+streaming in and out per gate pass.  Exact, not approximate — combinational
+SC streams are word-parallel, every op is bitwise, and the scratch assignment
+never recycles a slot while its node is still live (``stages.assign_liveness``
+releases a pass's dying inputs only after the pass, so batched gates cannot
+clobber a sibling's operand).  Off-TPU the kernel runs in interpret mode,
+bit-identical to the jnp per-pass path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core import bitstream as bs
+from ..core.plan import FUSED_MUX, ExecutionPlan
+from .common import on_tpu
+
+#: program instruction: (op, neg, in_slot_rows, out_slots) — all static.
+
+
+def _plan_program(plan: ExecutionPlan):
+    """Compile the plan's levels into a static slot program.
+
+    Returns ``(program, slot_of)`` where ``slot_of`` maps every materialized
+    node name to its scratch slot, or ``None`` when the plan carries no
+    liveness assignment (pre-liveness plans have empty ``pi_slots``).
+    """
+    if len(plan.pi_slots) != len(plan.pis):
+        return None
+    slot_of = {pi.name: s for pi, s in zip(plan.pis, plan.pi_slots) if s >= 0}
+    program = []
+    for level in plan.levels:
+        for cop in level:
+            if len(cop.slots) != len(cop.outputs):
+                return None
+            in_rows = tuple(tuple(slot_of[nm] for nm in row)
+                            for row in cop.inputs)
+            neg = cop.neg if cop.neg else (False,) * len(cop.inputs)
+            program.append((cop.op, neg, in_rows, cop.slots))
+            for nm, s in zip(cop.outputs, cop.slots):
+                slot_of[nm] = s
+    return program, slot_of
+
+
+def _apply_op(op: str, args: list[jax.Array]) -> jax.Array:
+    if op == FUSED_MUX:
+        return bs.mux(*args)
+    return bs.GATE_FNS[op](*args)
+
+
+def _kernel(program, pi_slots, out_slots, pi_ref, out_ref, scratch):
+    # Load this tile's PI streams into their scratch slots.
+    for k, s in enumerate(pi_slots):
+        scratch[s] = pi_ref[k]
+    # Every level's passes, gate by gate — static Python loops, fully
+    # unrolled at trace time; slots recycle per the liveness assignment.
+    for op, neg, in_rows, slots in program:
+        for g, out_slot in enumerate(slots):
+            args = []
+            for row, nb in zip(in_rows, neg):
+                v = scratch[row[g]]
+                args.append(~v if nb else v)
+            scratch[out_slot] = _apply_op(op, args)
+    # Only declared outputs leave VMEM.
+    for k, s in enumerate(out_slots):
+        out_ref[k] = scratch[s]
+
+
+def combinational_megakernel(plan: ExecutionPlan,
+                             env: dict[str, jax.Array], *,
+                             block_rows: int = 8, block_words: int = 128,
+                             interpret: bool | None = None,
+                             ) -> dict[str, jax.Array] | None:
+    """Run a combinational plan as one fused Pallas kernel.
+
+    ``env`` maps every stream/state PI name to its packed words (any common
+    shape; the kernel flattens to (rows, words)).  Returns the plan's
+    observable streams — outputs and state drivers, aliases resolved — or
+    ``None`` when the plan cannot lower (no liveness info, or heterogeneous
+    PI shapes, as in a merged bank serving mixed batch shapes); the caller
+    then falls back to the per-pass path.
+    """
+    prog = _plan_program(plan)
+    if prog is None:
+        return None
+    program, slot_of = prog
+
+    alias = dict(plan.aliases)
+    out_names: list[str] = []
+    for nm in (*plan.outputs, *plan.state_drivers):
+        r = alias.get(nm, nm)
+        if r not in out_names:
+            out_names.append(r)
+    if not out_names:
+        return {}
+
+    pi_names = [pi.name for pi, s in zip(plan.pis, plan.pi_slots) if s >= 0]
+    shapes = {env[nm].shape for nm in pi_names}
+    if len(shapes) != 1:
+        return None
+    (shape,) = shapes
+    if plan.max_live == 0 or not pi_names:
+        return None
+
+    words = shape[-1] if len(shape) >= 1 else 1
+    rows = 1
+    for d in shape[:-1]:
+        rows *= d
+    stacked = jnp.stack([env[nm].reshape(rows, words) for nm in pi_names])
+    out = _megakernel_call(
+        plan, tuple(slot_of[nm] for nm in pi_names),
+        tuple(slot_of[nm] for nm in out_names), len(out_names),
+        stacked, block_rows, block_words, interpret)
+    return {nm: out[out_names.index(alias.get(nm, nm))].reshape(shape)
+            for nm in (*plan.outputs, *plan.state_drivers)}
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "plan", "pi_slots", "out_slots", "n_out", "block_rows", "block_words",
+    "interpret"))
+def _megakernel_call(plan: ExecutionPlan, pi_slots, out_slots, n_out: int,
+                     stacked: jax.Array, block_rows: int, block_words: int,
+                     interpret: bool | None) -> jax.Array:
+    """The jitted pallas_call: (P, rows, words) PI stack -> (O, rows, words).
+
+    The plan is a static arg (interned, identity-hashed), so the slot program
+    rebuilds only per plan per shape — one trace, one kernel.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    program, _ = _plan_program(plan)
+    p, rows, words = stacked.shape
+    bm = min(block_rows, rows)
+    bw = min(block_words, words)
+    grid = (pl.cdiv(rows, bm), pl.cdiv(words, bw))
+    kernel = functools.partial(_kernel, program, pi_slots, out_slots)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((p, bm, bw), lambda i, j: (0, i, j))],
+        out_specs=pl.BlockSpec((n_out, bm, bw), lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_out, rows, words), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((plan.max_live, bm, bw), jnp.uint32)],
+        interpret=interpret,
+    )(stacked)

@@ -83,7 +83,9 @@ def sc_matmul_ref(a: jax.Array, w: jax.Array, bitstream_length: int,
     return out.astype(jnp.float32) / jnp.float32(bitstream_length)
 
 
-def sng_words_ref(row_seeds: jax.Array, thr: jax.Array, n_words: int) -> jax.Array:
+def sng_words_ref(row_seeds: jax.Array, thr: jax.Array, n_words: int,
+                  word_offset: jax.Array | None = None,
+                  total_words: int | None = None) -> jax.Array:
     """Batched SNG oracle over a stream table: (N, B) thresholds -> (N, B, W).
 
     ``row_seeds``: (N,) pre-mixed per-row seeds (``common.mix_seed``); rows
@@ -93,13 +95,24 @@ def sng_words_ref(row_seeds: jax.Array, thr: jax.Array, n_words: int) -> jax.Arr
     over *bit space* per element, so output is independent of how rows are
     stacked or batches are tiled.
 
+    ``word_offset``/``total_words`` generate a *window*: words
+    ``[word_offset, word_offset + n_words)`` of a conceptual
+    ``total_words``-long stream.  Because the counter is the absolute bit
+    index, the window is bit-identical to the same slice of a whole-stream
+    call — the chunked streaming executor relies on this exactness.
+    ``word_offset`` may be traced (a ``lax.scan`` chunk index).
+
     Packs by compare-and-accumulate over the 32 lane shifts: only packed-size
     (N, B, W) tensors are ever materialized, never the (N, B, W, 32) unpacked
     bit tensor — mirroring the Pallas kernel's in-register accumulation.
     """
     b = thr.shape[-1]
-    base = ((jnp.arange(b, dtype=jnp.uint32)[:, None] * jnp.uint32(n_words)
-             + jnp.arange(n_words, dtype=jnp.uint32)[None, :])
+    total = jnp.uint32(n_words if total_words is None else total_words)
+    word_idx = jnp.arange(n_words, dtype=jnp.uint32)
+    if word_offset is not None:
+        word_idx = word_idx + jnp.asarray(word_offset, jnp.uint32)
+    base = ((jnp.arange(b, dtype=jnp.uint32)[:, None] * total
+             + word_idx[None, :])
             * jnp.uint32(WORD_BITS))                       # (B, W) bit counters
     acc = jnp.zeros(thr.shape + (n_words,), jnp.uint32)
     seeds = row_seeds[:, None, None]

@@ -55,10 +55,13 @@ def _kernel(seed_ref, thr_ref, o_ref, *, n_words: int, be: int):
 
 
 @functools.partial(jax.jit, static_argnames=("n_words", "use_pallas",
-                                             "block_elems", "interpret"))
+                                             "block_elems", "interpret",
+                                             "total_words"))
 def sng_words(row_seeds: jax.Array, thr: jax.Array, n_words: int,
               use_pallas: bool = False, block_elems: int = 256,
-              interpret: bool | None = None) -> jax.Array:
+              interpret: bool | None = None,
+              word_offset: jax.Array | None = None,
+              total_words: int | None = None) -> jax.Array:
     """Batched SNG over a stream table: (N, B) thresholds -> (N, B, W) words.
 
     ``row_seeds``: (N,) pre-mixed per-row seeds (``lane_seeds``); rows with
@@ -66,18 +69,27 @@ def sng_words(row_seeds: jax.Array, thr: jax.Array, n_words: int,
     under XOR).  ``thr``: (N, B) uint32 compare thresholds.  The jnp fallback
     (``use_pallas=False``, the executor default) and the Pallas kernel are
     bit-identical; ``interpret=None`` auto-selects interpret mode off-TPU.
+
+    ``word_offset``/``total_words`` request a word *window* of a conceptual
+    ``total_words``-long stream (see ``ref.sng_words_ref``) — exact because
+    the counter is the absolute bit index.  Windowed generation always runs
+    the jnp path: ``word_offset`` is typically a traced scan index, which the
+    grid-blocked Pallas kernel cannot take as a static.
     """
-    if thr.shape[-1] * n_words * WORD_BITS > 1 << 32:
+    total = n_words if total_words is None else total_words
+    if thr.shape[-1] * total * WORD_BITS > 1 << 32:
         # Bit counters are uint32 per (row, element, bit): past 2^32 bits per
         # row they wrap, silently duplicating uniforms between far-apart
         # elements (streams assumed independent become perfectly correlated).
         # The legacy threefry discipline has no such cliff, so refuse loudly.
         raise ValueError(
             f"batched SNG counter space exhausted: {thr.shape[-1]} elements x "
-            f"{n_words * WORD_BITS} bits > 2^32 bits per stream row; shard "
+            f"{total * WORD_BITS} bits > 2^32 bits per stream row; shard "
             "the batch across keys or use key_mode='legacy'")
-    if not use_pallas:
-        return ref.sng_words_ref(row_seeds, thr, n_words)
+    windowed = word_offset is not None or total != n_words
+    if not use_pallas or windowed:
+        return ref.sng_words_ref(row_seeds, thr, n_words,
+                                 word_offset=word_offset, total_words=total)
     n, b = thr.shape
     be = min(block_elems, b)
     kernel = functools.partial(_kernel, n_words=n_words, be=be)

@@ -374,6 +374,9 @@ class BankServerStats:
     schedule_cycles: int = 0      # Algorithm-1 scheduled cycles (merged bank)
     passes_fused_away: int = 0    # MUX/XOR/AND fusions + NOT absorptions
     nodes_elided: int = 0         # BUFF elisions + CSE merges
+    max_live_peak: int = 0        # peak liveness (scratch slots) over all
+    #                               launched banks' group plans
+    naive_live_peak: int = 0      # one-row-per-node peak it replaces
     # Reliability counters.
     shed_requests: int = 0        # rejected/shed by admission backpressure
     retries: int = 0              # failed-batch requests re-queued w/ backoff
@@ -406,6 +409,8 @@ class BankServerStats:
             "schedule_cycles": self.schedule_cycles,
             "passes_fused_away": self.passes_fused_away,
             "nodes_elided": self.nodes_elided,
+            "max_live_peak": self.max_live_peak,
+            "naive_live_peak": self.naive_live_peak,
             "shed_requests": self.shed_requests,
             "retries": self.retries,
             "quarantines": self.quarantines,
@@ -875,6 +880,8 @@ class BankServer:
             st.passes_fused_away += (g.n_fused_mux + g.n_fused_xor
                                      + g.n_fused_and + g.n_not_absorbed)
             st.nodes_elided += g.n_elided
+            st.max_live_peak = max(st.max_live_peak, g.max_live)
+            st.naive_live_peak = max(st.naive_live_peak, g.naive_live)
         dev_arg = device if multi and device is not self._default_device \
             else None
         try:

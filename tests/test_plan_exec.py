@@ -330,6 +330,11 @@ def test_app_pass_counters_no_drift(app):
     got = {k: after.get(k, 0) - before[k] for k in _DRIFT_KEYS}
     got["merged_passes"] = bank.n_passes
     got["looped_passes"] = bank.n_passes_looped
+    # Liveness pin: the merged bank's peak simultaneously-live streams
+    # (scratch slots).  Drift means the liveness stage's allocation — and so
+    # megakernel scratch sizing and subarray occupancy — changed.
+    got["max_live"] = max(g.max_live
+                          for g in (bank.comb, bank.seq) if g is not None)
     assert got == want, app
 
 
@@ -404,3 +409,151 @@ def test_pallas_backend_bit_identical():
         pal = executor.execute(net, vals, KEY, 256, backend="compiled_pallas")
         for o in ref:
             assert (ref[o] == pal[o]).all()
+
+
+# ------------------- word-tiled streaming & megakernel goldens --------------------
+# The chunked-jnp scan path and the whole-plan Pallas megakernel must both
+# reproduce the pre-refactor golden digests bit for bit, in both key modes —
+# streaming/fusing the execution may never change a single output bit.
+
+_CLEAN_CASES = sorted(c for c in _GOLD["digests"] if c.endswith("/fused"))
+
+
+def _is_sequential_case(name: str) -> bool:
+    net, _, _ = _golden_case(name)
+    return net.is_sequential
+
+
+@pytest.mark.parametrize(
+    "case", [c for c in _CLEAN_CASES if not _is_sequential_case(c.split("/")[0])])
+def test_chunked_streaming_matches_golden_digest(case):
+    name, key_mode, _ = case.split("/")
+    net, vals, bl = _golden_case(name)
+    w = bl // 32
+    for chunk in (1, w // 2):
+        streams = executor.run(executor.ExecRequest(
+            net, vals, GOLD_KEY, executor.ExecOptions(
+                bitstream_length=bl, key_mode=key_mode, word_chunk=chunk)))
+        assert _digest(streams, net.outputs) == _GOLD["digests"][case], \
+            (case, chunk)
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("case", _CLEAN_CASES)
+def test_megakernel_matches_golden_digest(case):
+    name, key_mode, _ = case.split("/")
+    net, vals, bl = _golden_case(name)
+    streams = executor.run(executor.ExecRequest(
+        net, vals, GOLD_KEY, executor.ExecOptions(
+            bitstream_length=bl, key_mode=key_mode,
+            backend="compiled_megakernel", interpret=True)))
+    assert _digest(streams, net.outputs) == _GOLD["digests"][case], case
+
+
+@pytest.mark.pallas
+def test_chunked_megakernel_composes():
+    # word_chunk + megakernel: the scan body runs the fused kernel per chunk.
+    net, vals, bl = _golden_case("sc_exp")
+    case = "sc_exp/batched/fused"
+    streams = executor.run(executor.ExecRequest(
+        net, vals, GOLD_KEY, executor.ExecOptions(
+            bitstream_length=bl, word_chunk=4,
+            backend="compiled_megakernel", interpret=True)))
+    assert _digest(streams, net.outputs) == _GOLD["digests"][case]
+
+
+def _state_only_oscillator() -> Netlist:
+    from repro.core.gates import PIKind
+    n = Netlist("osc")
+    q = n.add_pi("Q", kind=PIKind.STATE)
+    qn = n.add_gate("NOT", [q], "Qn")
+    n.bind_state(q, qn, init=0.0)
+    n.set_outputs([qn])
+    return n
+
+
+def test_sequential_zero_stream_pi_respects_batch_shape():
+    # Regression: a sequential plan with zero stream PIs used to ignore
+    # batch_shape= entirely — the scan fell back to scalar state, returning
+    # (W,) outputs for a (5,)-batched request.
+    net = _state_only_oscillator()
+    out = executor.execute(net, {}, KEY, 256, batch_shape=(5,))
+    assert out["Qn"].shape == (5, 8)
+    base = executor.execute(net, {}, KEY, 256)
+    assert base["Qn"].shape == (8,)
+    for i in range(5):
+        assert (out["Qn"][i] == base["Qn"]).all()
+
+
+def test_sequential_zero_stream_pi_word_chunk_raises():
+    # The streaming executor cannot re-chunk a state recurrence; asking for
+    # word_chunk on such a plan must fail loudly, not silently ignore it.
+    net = _state_only_oscillator()
+    with pytest.raises(ValueError, match="word_chunk"):
+        executor.run(executor.ExecRequest(
+            net, {}, KEY, executor.ExecOptions(
+                bitstream_length=256, batch_shape=(5,), word_chunk=2)))
+
+
+def test_word_chunk_rejects_injection_and_bad_sizes():
+    net, vals, bl = _golden_case("sc_multiply")
+    with pytest.raises(ValueError, match="fault injection"):
+        executor.run(executor.ExecRequest(
+            net, vals, GOLD_KEY, executor.ExecOptions(
+                bitstream_length=bl, word_chunk=4,
+                bitflip_rate=0.05, flip_key=GOLD_FLIP)))
+    with pytest.raises(ValueError, match="divide"):
+        executor.run(executor.ExecRequest(
+            net, vals, GOLD_KEY, executor.ExecOptions(
+                bitstream_length=bl, word_chunk=5)))
+    with pytest.raises(ValueError, match="single-plan"):
+        executor.run([executor.ExecRequest(
+            net, vals, GOLD_KEY, executor.ExecOptions(
+                bitstream_length=bl, word_chunk=4))] * 2)
+
+
+def test_liveness_annotation_invariants():
+    # Every compiled plan carries a valid register-allocation: slots stay
+    # below max_live, a slot is never reassigned while its node is live, and
+    # outputs/state drivers are never freed.
+    for name in ("sc_exp", "sc_sqrt", "appnet_ol", "appnet_hdp"):
+        net, _, _ = _golden_case(name)
+        p = compile_plan(net)
+        assert 0 < p.max_live <= p.naive_live
+        alias = dict(p.aliases)
+        protected = {alias.get(nm, nm)
+                     for nm in (*p.outputs, *p.state_drivers)}
+        slot_of = {pi.name: s for pi, s in zip(p.pis, p.pi_slots) if s >= 0}
+        live = dict(slot_of)
+        for level in p.levels:
+            for cop in level:
+                assert len(cop.slots) == len(cop.outputs)
+                for nm, s in zip(cop.outputs, cop.slots):
+                    assert 0 <= s < p.max_live
+                    # Slot must be free: no OTHER live node holds it.
+                    holders = [n for n, ls in live.items() if ls == s]
+                    assert holders in ([], [nm]), (name, nm, holders)
+                    live[nm] = s
+                for nm in cop.free_after:
+                    assert nm not in protected, (name, nm)
+                    live.pop(nm, None)
+        assert max(live.values(), default=-1) < p.max_live
+
+
+def test_free_after_releases_dead_intermediates():
+    # The per-pass executor drops dead nodes from env as it goes: after a
+    # full run only live-at-exit names (plus aliases) remain.
+    net, vals, bl = _golden_case("sc_exp")
+    p = compile_plan(net)
+    from repro.core.streams import _gen_pi_streams
+    from repro.kernels.netlist_exec import run_combinational
+    env = dict(_gen_pi_streams(p.pis, {k: jnp.float32(v) for k, v in
+                                       vals.items()}, GOLD_KEY, bl))
+    n_pis = len(env)
+    run_combinational(p, env)
+    # env holds at most the liveness bound plus re-exposed aliases — not one
+    # entry per node (sc_exp has 13 gates + PIs).
+    assert len(env) <= p.max_live + len(p.aliases)
+    assert n_pis + p.n_gates > p.max_live  # the bound actually binds
+    for o in p.outputs:
+        assert o in env
