@@ -131,6 +131,11 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
         "merged_ms": round(merged_ms, 3),
         "gen_ms": round(gen_ms, 3),
         "pass_ms": round(max(merged_ms - gen_ms, 0.0), 3),
+        "phases": {
+            "gen_ms": round(gen_ms, 3),
+            "pass_ms": round(max(merged_ms - gen_ms, 0.0), 3),
+            "total_ms": round(merged_ms, 3),
+        },
         "speedup": round(looped_ms / merged_ms, 2),
         "merged_passes": bank.n_passes,
         "looped_passes": bank.n_passes_looped,

@@ -94,8 +94,8 @@ def check_pair(smoke_path: str, committed_path: str,
                 f"{got:.2f}X vs committed {want:.2f}X in {committed_path} "
                 f"(< {tolerance:.0%} of committed)")
         else:
-            lines.append(f"::notice::{field}: smoke {got:.2f}X vs committed "
-                         f"{want:.2f}X  ok")
+            lines.append(f"::notice::{smoke_path}: {field} smoke {got:.2f}X "
+                         f"vs committed {want:.2f}X in {committed_path}  ok")
     return lines
 
 

@@ -93,3 +93,40 @@ def time_ms(fn, iters: int) -> float:
         jax.block_until_ready(fn())
         best = min(best, time.perf_counter() - t0)
     return best * 1e3
+
+
+def traced_phases(fn, trace=None) -> dict:
+    """One traced run of ``fn``: per-span-name total times + wall-clock.
+
+    The BENCH_*.json phase-breakdown helper (Table-8 style attribution):
+    runs ``fn`` once under a fresh ``core.obs`` trace (untimed — the timed
+    measurement stays untraced) and flattens the trace summary into
+    ``{"<span>_ms": total, ..., "wall_ms": wall}``.  Host-side spans only;
+    see docs/OBSERVABILITY.md for what each span covers.
+    """
+    from repro.core import obs
+    tr = trace if trace is not None else obs.Trace("bench-phases")
+    t0 = time.perf_counter()
+    with obs.tracing(tr):
+        jax.block_until_ready(fn())
+    wall_ms = (time.perf_counter() - t0) * 1e3
+    phases = {f"{name}_ms": agg["total_ms"]
+              for name, agg in sorted(tr.summary()["spans"].items())}
+    phases["wall_ms"] = round(wall_ms, 3)
+    return phases
+
+
+def request_phases(stats: dict) -> "dict | None":
+    """Lift the serve engine's per-request phase histograms out of a traced
+    server's ``stats()`` into a flat BENCH-record block (mean ms per phase:
+    queued → staged → inflight, plus end-to-end latency)."""
+    hists = stats.get("metrics", {}).get("histograms", {})
+    if not hists:
+        return None
+    out = {}
+    for phase in ("queued", "staged", "inflight", "latency"):
+        h = hists.get(f"serve.{phase}_ms")
+        if h and h.get("count"):
+            out[f"{phase}_mean_ms"] = round(h["mean"], 3)
+            out[f"{phase}_p99_ms"] = round(h["p99"], 3)
+    return out or None

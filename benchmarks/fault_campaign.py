@@ -58,7 +58,7 @@ import numpy as np
 from repro.core import apps, circuits, executor
 from repro.core.faults import FaultModel
 
-from .common import fmt_table
+from .common import fmt_table, request_phases
 from .table4_bitflip import _cases
 
 RATES = (0.0, 0.05, 0.10, 0.15, 0.20)
@@ -234,6 +234,13 @@ def chaos_trace(verbose: bool = True, smoke: bool = False) -> "dict | None":
         clean.reset_stats()
         s, _, _, _ = _replay(clean, reqs)
         clean_s = min(clean_s, s)
+    # One extra traced replay (untimed): per-request queued/staged/inflight
+    # attribution for the clean baseline.  Timed replays stay untraced.
+    from repro.core import obs
+    clean.trace = obs.Trace("fault-campaign-clean")
+    _replay(clean, reqs)
+    phases = request_phases(clean.stats())
+    clean.trace = None
     clean.close()
 
     # Chaos replay: the injector rotates kills across all devices; retries
@@ -267,6 +274,7 @@ def chaos_trace(verbose: bool = True, smoke: bool = False) -> "dict | None":
         "clean_s": round(clean_s, 4),
         "chaos_s": round(chaos_s, 4),
         "chaos_vs_clean_speedup": round(clean_s / chaos_s, 3),
+        "phases": phases,
     }
     if verbose:
         print(f"\n== Chaos serving trace: {n_requests} requests, "

@@ -37,7 +37,7 @@ import numpy as np
 
 from repro.core import apps, arch, bitstream as bs, executor
 from repro.core.appnet import APP_NETLISTS
-from repro.core.plan import compile_bank_plan
+from repro.core.plan import compile_bank_plan, compile_plan
 
 from .common import fmt_table, time_ms
 
@@ -90,11 +90,22 @@ def _wallclock(bl: int, batch: int, chunks, iters: int) -> dict:
     chunk_out = run(chunk)
     identical = all(bool((chunk_out[k] == base_out[k]).all())
                     for k in base_out)
+    # Phase breakdown: the unchunked run's stream-generation phase on its
+    # own jitted entry; the chunked scan interleaves gen with passes, so
+    # only the unchunked split is separable.
+    plan = compile_plan(net)
+    gen_fn = jax.jit(lambda k: executor._gen_pi_streams(
+        tuple(plan.pis), vals, k, bl))
+    gen_ms = time_ms(lambda: gen_fn(key), iters)
+    phases = {"gen_ms": round(gen_ms, 3),
+              "pass_ms": round(max(base_ms - gen_ms, 0.0), 3),
+              "total_ms": round(base_ms, 3)}
     return {"app": "kde_appnet", "bitstream_length": bl, "batch": batch,
             "word_chunk": chunk,
             "unchunked_ms": round(base_ms, 3),
             "chunked_ms": round(chunked_ms, 3),
             "chunked_speedup": round(base_ms / chunked_ms, 2),
+            "phases": phases,
             "bit_identical": identical}
 
 

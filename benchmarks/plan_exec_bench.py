@@ -84,8 +84,23 @@ def run(verbose=True, smoke=False) -> dict:
                for name, net, vals in _appnet_cases(smoke)]
 
     g = geomean([o["speedup"] for o in ops])
+
+    # Phase breakdown for one representative op (Table-8 style attribution):
+    # stream generation on its own jitted entry vs the full compiled run.
+    pname, pbuilder, pvalues = TABLE2_OPS[1]        # multiply
+    pnet = pbuilder()
+    pvals = {k: jnp.float32(x) for k, x in pvalues.items()}
+    gen_fn = jax.jit(lambda k: executor._gen_pi_streams(
+        tuple(pnet.pis), pvals, k, bl))
+    gen_ms = time_ms(lambda: gen_fn(key), iters)
+    total_ms = next(o["compiled_ms"] for o in ops if o["op"] == pname)
+    phases = {"op": pname, "gen_ms": round(gen_ms, 4),
+              "pass_ms": round(max(total_ms - gen_ms, 0.0), 4),
+              "total_ms": total_ms}
+
     results = {"bitstream_length": bl, "ops": ops,
-               "geomean_speedup_table2": round(g, 2), "appnets": appnets}
+               "geomean_speedup_table2": round(g, 2), "appnets": appnets,
+               "phases": phases}
     if verbose:
         rows = [[o["op"], o["gates"], o["passes"], o["fused_mux"],
                  f"{o['interpreter_ms']:.3f}", f"{o['compiled_ms']:.3f}",

@@ -38,6 +38,8 @@ import jax.numpy as jnp
 from repro.core import circuits, executor, plan
 from repro.serve import BankServer, circuit_request
 
+from .common import request_phases
+
 # One netlist object per structure (reused across the trace, so the warm
 # paths hit the plan memo the way a real server would).
 _STRUCTS = {
@@ -169,6 +171,15 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
         if s < server_s:
             server_s, stats = s, server.stats()
 
+    # One extra traced replay (untimed) for the phase breakdown: the engine
+    # stamps admit/stage/launch/reap per request and its histograms give the
+    # queued/staged/inflight attribution.  Timed replays stay untraced.
+    from repro.core import obs
+    server.trace = obs.Trace("serve-bench")
+    _replay_server(server, bursts, bl)
+    phases = request_phases(server.stats())
+    server.trace = None
+
     _replay_per_request(bursts, bl)             # warm the per-request jits
     per_request_s = min(_replay_per_request(bursts, bl)
                         for _ in range(reps))
@@ -193,6 +204,7 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
         "cold_many_rps": round(n_requests / cold_many_s, 2),
         "speedup_vs_cold": round(cold_many_s / server_s, 2),
         "speedup_vs_per_request": round(per_request_s / server_s, 2),
+        "phases": phases,
     }
     if verbose:
         print(f"\n== Serve bench: dynamic bank serving "

@@ -53,6 +53,8 @@ from repro.core import executor
 from repro.core.apps import KDE_N
 from repro.serve import BankServer, app_request
 
+from .common import request_phases
+
 # Four bursts of (n_lit, n_kde) sum to 8 LIT + 8 KDE: each 16-request
 # admission window packs one power-of-two bank with zero padding, so the
 # async server's continuous batching gets full credit for widening banks.
@@ -158,6 +160,14 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
         if s < multi_s:
             multi_s, multi_stats = s, multi.stats()
 
+    # One extra traced replay (untimed) for the per-request phase breakdown
+    # (queued/staged/inflight histograms).  Timed replays stay untraced.
+    from repro.core import obs
+    multi.trace = obs.Trace("serve-multibank-bench")
+    _replay_async(multi, bursts)
+    phases = request_phases(multi.stats())
+    multi.trace = None
+
     results = {
         "bitstream_length": bl,
         "n_requests": n_requests,
@@ -178,6 +188,7 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
                       for k, v in multi_stats.items()
                       if not isinstance(v, list)},
         "multibank_devices": multi_stats["devices"],
+        "phases": phases,
     }
     if verbose:
         print(f"\n== Multi-bank serve bench: {n_requests} requests, "

@@ -81,6 +81,15 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
             "batched_ms": round(gen_only["batched"], 3),
             "speedup": round(gen_only["legacy"] / gen_only["batched"], 2),
         },
+        # Phase breakdown (Table-8 style): the gen-only microbench is the
+        # stream-generation phase of the batched end-to-end run; the rest
+        # is logic passes + decode.
+        "phases": {
+            "gen_ms": round(gen_only["batched"], 3),
+            "pass_ms": round(max(end_to_end["batched"]
+                                 - gen_only["batched"], 0.0), 3),
+            "total_ms": round(end_to_end["batched"], 3),
+        },
     }
     if verbose:
         print(f"\n== SNG bench: batched vs per-PI generation "

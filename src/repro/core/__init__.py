@@ -9,15 +9,16 @@ Layers:
   plan       — execution-plan compiler (leveled, type-batched fused passes)
   executor   — netlist execution: compiled plans + gate-by-gate reference
   faults     — STT-MRAM fault models (stuck-at / dead regions / wear)
+  obs        — zero-dependency tracing + metrics (spans, chrome export)
   sc_ops     — vectorized functional stochastic arithmetic
   energy     — Eq. (3)-(4) energy model (paper SPICE gate energies)
   arch       — Stoch-IMC [n, m] architecture model + baselines (Table 3)
   apps       — LIT / OL / HDP / KDE applications (Fig. 9, Tables 3-4)
 """
 from . import (apps, arch, bitstream, circuits, energy, executor, faults,
-               gates, mtj, plan, sc_ops, scheduler)
+               gates, mtj, obs, plan, sc_ops, scheduler)
 
 __all__ = [
     "apps", "arch", "bitstream", "circuits", "energy", "executor", "faults",
-    "gates", "mtj", "plan", "sc_ops", "scheduler",
+    "gates", "mtj", "obs", "plan", "sc_ops", "scheduler",
 ]

@@ -29,6 +29,7 @@ import dataclasses
 import itertools
 from typing import Any, Callable
 
+from .. import obs
 from ..gates import Netlist
 from .ir import (FUSED_MUX, FUSED_XOR, BankPlan, CompiledOp, ExecutionPlan,
                  build_stream_table, member_prefix)
@@ -229,11 +230,16 @@ class PassPipeline:
         return tuple(name for name, _ in self.stages)
 
     def run(self, ctx: Lowering, start: str | None = None) -> ExecutionPlan:
+        tr = obs.current_trace()
         started = start is None
         for name, fn in self.stages:
             started = started or name == start
             if started:
-                fn(ctx)
+                if tr is None:
+                    fn(ctx)
+                else:
+                    with tr.span(f"compile.{name}", plan=ctx.name):
+                        fn(ctx)
         if not started:
             raise ValueError(f"unknown pipeline stage {start!r}; "
                              f"have {self.stage_names}")

@@ -29,6 +29,7 @@ import numpy as np
 
 from . import bitstream as bs
 from . import faults as _faults
+from . import obs
 from .faults import FaultModel
 from .gates import Netlist
 from .plan import BankPlan, ExecutionPlan, compile_bank_plan, compile_plan, member_prefix
@@ -301,14 +302,16 @@ def _dispatch(net: Netlist, values, key, bitstream_length: int,
         return outs
     plan = _plan_for(net, bitflip_rate, fault_model)
     values = {k: jnp.asarray(v, jnp.float32) for k, v in values.items()}
-    return _execute_compiled(plan, values, key, flip_key, bitstream_length,
-                             float(bitflip_rate),
-                             backend == "compiled_pallas", decode=decode,
-                             key_mode=key_mode, batch_shape=batch_shape,
-                             fault_model=fault_model,
-                             word_chunk=word_chunk,
-                             megakernel=backend == "compiled_megakernel",
-                             interpret=interpret)
+    with obs.span("exec.dispatch", plan=plan.name,
+                  bitstream_length=bitstream_length):
+        return _execute_compiled(plan, values, key, flip_key, bitstream_length,
+                                 float(bitflip_rate),
+                                 backend == "compiled_pallas", decode=decode,
+                                 key_mode=key_mode, batch_shape=batch_shape,
+                                 fault_model=fault_model,
+                                 word_chunk=word_chunk,
+                                 megakernel=backend == "compiled_megakernel",
+                                 interpret=interpret)
 
 
 def _dispatch_binary(net: Netlist, operand_bits: dict[str, jax.Array],
@@ -376,9 +379,11 @@ def generate_bank_streams(bank: BankPlan, values_seq, keys,
     batch_shapes = _normalize_batch_shapes(batch_shapes, bank.n_members,
                                            "members")
     active = _normalize_active(active, bank.n_members)
-    return _generate_bank_streams_jit(bank, values_seq, keys,
-                                      bitstream_length, key_mode, use_pallas,
-                                      batch_shapes, active)
+    with obs.span("exec.stream_gen", bank=bank.name,
+                  bitstream_length=bitstream_length):
+        return _generate_bank_streams_jit(bank, values_seq, keys,
+                                          bitstream_length, key_mode,
+                                          use_pallas, batch_shapes, active)
 
 
 def _unpack_values_seq(values_seq, scalar_names):
@@ -724,33 +729,42 @@ def execute_bank(bank: BankPlan, values_seq, keys, bitstream_length: int,
     n = bank.n_members
     if len(values_seq) != n:
         raise ValueError(f"values: got {len(values_seq)} for {n} slots")
-    values_seq, scalar_names = _pack_values_seq(values_seq)
-    keys = _normalize_keys(keys, n)
-    batch_shapes = _normalize_batch_shapes(batch_shapes, n, "slots")
-    active = _normalize_active(active, n)
-    fault_model = _check_fault_args(bitflip_rate, fault_model, flip_keys,
-                                    "flip_keys")
-    flip_keys = _fault_flip_keys(flip_keys, n, bitflip_rate, fault_model)
+    with obs.span("exec.pack_values", slots=n):
+        values_seq, scalar_names = _pack_values_seq(values_seq)
+    with obs.span("exec.stage_keys"):
+        keys = _normalize_keys(keys, n)
+        batch_shapes = _normalize_batch_shapes(batch_shapes, n, "slots")
+        active = _normalize_active(active, n)
+        fault_model = _check_fault_args(bitflip_rate, fault_model, flip_keys,
+                                        "flip_keys")
+        flip_keys = _fault_flip_keys(flip_keys, n, bitflip_rate, fault_model)
     if device is not None:
-        keys = jax.device_put(keys, device)
-        if flip_keys is not None:
-            flip_keys = jax.device_put(flip_keys, device)
+        with obs.span("exec.device_transfer", device=str(device)):
+            keys = jax.device_put(keys, device)
+            if flip_keys is not None:
+                flip_keys = jax.device_put(flip_keys, device)
     args = (bank, values_seq, keys, flip_keys, bitstream_length,
             float(bitflip_rate), backend == "compiled_pallas", decode)
     kw = dict(key_mode=key_mode, batch_shapes=batch_shapes, active=active,
               scalar_names=scalar_names, fault_model=fault_model,
               megakernel=backend == "compiled_megakernel",
               interpret=interpret)
-    if donate:
-        # Donation is best-effort: when no output can alias a key-row buffer
-        # (the common case — outputs are packed words, not keys) XLA ignores
-        # it and jax warns; that advisory is noise on a hot serving path.
-        with warnings.catch_warnings():
-            warnings.filterwarnings("ignore",
-                                    message="Some donated buffers were not")
-            outs = _execute_bank_donating(*args, **kw)
-    else:
-        outs = _execute_bank(*args, **kw)
+    # NOTE: the dispatch span measures host time to *enqueue* the jitted
+    # program (plus trace/lower cost on a cache miss) — jax dispatch is
+    # async, so device compute lands in the caller's block/reap interval.
+    with obs.span("exec.dispatch", bank=bank.name, slots=n,
+                  bitstream_length=bitstream_length):
+        if donate:
+            # Donation is best-effort: when no output can alias a key-row
+            # buffer (the common case — outputs are packed words, not keys)
+            # XLA ignores it and jax warns; that advisory is noise on a hot
+            # serving path.
+            with warnings.catch_warnings():
+                warnings.filterwarnings("ignore",
+                                        message="Some donated buffers were not")
+                outs = _execute_bank_donating(*args, **kw)
+        else:
+            outs = _execute_bank(*args, **kw)
     return list(outs)
 
 

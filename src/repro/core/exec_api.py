@@ -15,6 +15,7 @@ from typing import Any
 
 import jax
 
+from . import obs
 from .dispatch import (_as_f32, _check_fault_args, _check_modes, _dispatch,
                        _dispatch_binary, _dispatch_many, _execute_compiled,
                        _normalize_batch_shapes, _normalize_keys, _stack_keys,
@@ -55,6 +56,26 @@ class ExecOptions:
     ``interpret`` forces Pallas interpret mode on (True) or off (False) for
     the pallas/megakernel backends; ``None`` auto-detects (compiled on TPU,
     interpret elsewhere).
+
+    ``trace`` (a ``core.obs.Trace``, default None = tracing off) makes that
+    trace current for the duration of the ``run()`` call, so host-side
+    executor spans (value packing, key staging, device transfer, dispatch)
+    and compiler per-stage spans land in it.  Tracing never perturbs
+    outputs — results are bit-identical with it on or off (pinned by
+    tests) — and the field is excluded from options equality, so it does
+    not affect batch option-agreement.
+
+    Example::
+
+        from repro.core import circuits, executor, obs
+        import jax
+        tr = obs.Trace()
+        net = circuits.sc_multiply()
+        out = executor.run(executor.ExecRequest(
+            net, {"a": 0.5, "b": 0.5}, jax.random.key(0),
+            executor.ExecOptions(bitstream_length=256, decode=True,
+                                 trace=tr)))
+        assert "exec.dispatch" in tr.summary()["spans"]
     """
 
     backend: str | None = None
@@ -69,6 +90,7 @@ class ExecOptions:
     deadline_ms: "float | None" = None
     word_chunk: "int | None" = None
     interpret: "bool | None" = None
+    trace: Any = dataclasses.field(default=None, compare=False)
 
 
 @dataclasses.dataclass
@@ -82,6 +104,16 @@ class ExecRequest:
     standalone, inside a merged bank, or bound to a padded template slot on
     any device.  ``serve.SCRequest`` subclasses this with the serving
     layer's flat constructor.
+
+    Example::
+
+        import jax
+        from repro.core import circuits, executor
+        req = executor.ExecRequest(circuits.sc_multiply(),
+                                   {"a": 0.5, "b": 0.5}, jax.random.key(0),
+                                   executor.ExecOptions(bitstream_length=512,
+                                                        decode=True))
+        out = executor.run(req)        # {"out": ~0.25}
     """
 
     net: Any
@@ -312,9 +344,10 @@ def _run_one(req: ExecRequest, device=None,
         # Commit only the key(s): jit places the program with its committed
         # argument, and uncommitted values follow in one transfer (committing
         # a values pytree leaf-by-leaf costs more than the dispatch).
-        key = jax.device_put(key, device)
-        if flip_key is not None:
-            flip_key = jax.device_put(flip_key, device)
+        with obs.span("exec.device_transfer", device=str(device)):
+            key = jax.device_put(key, device)
+            if flip_key is not None:
+                flip_key = jax.device_put(flip_key, device)
     if isinstance(req.net, ExecutionPlan):
         backend, key_mode = _check_modes(o.backend, o.key_mode)
         if backend == "reference":
@@ -325,14 +358,16 @@ def _run_one(req: ExecRequest, device=None,
         batch_shape = (tuple(o.batch_shape)
                        if o.batch_shape is not None else None)
         values = {k: _as_f32(v) for k, v in values.items()}
-        return _execute_compiled(req.net, values, key, flip_key,
-                                 o.bitstream_length, float(o.bitflip_rate),
-                                 backend == "compiled_pallas", decode=o.decode,
-                                 key_mode=key_mode, batch_shape=batch_shape,
-                                 fault_model=fault_model,
-                                 word_chunk=o.word_chunk,
-                                 megakernel=backend == "compiled_megakernel",
-                                 interpret=o.interpret)
+        with obs.span("exec.dispatch", plan=req.net.name,
+                      bitstream_length=o.bitstream_length):
+            return _execute_compiled(
+                req.net, values, key, flip_key,
+                o.bitstream_length, float(o.bitflip_rate),
+                backend == "compiled_pallas", decode=o.decode,
+                key_mode=key_mode, batch_shape=batch_shape,
+                fault_model=fault_model, word_chunk=o.word_chunk,
+                megakernel=backend == "compiled_megakernel",
+                interpret=o.interpret)
     return _dispatch(req.net, values, key, o.bitstream_length,
                      o.bitflip_rate, flip_key, o.backend, decode=o.decode,
                      key_mode=o.key_mode, batch_shape=o.batch_shape,
@@ -369,9 +404,10 @@ def _run_many(reqs: "list[ExecRequest]", device=None,
     keys = [r.key for r in reqs]
     if device is not None:
         # Commit only the keys (see _run_one): the program follows them.
-        keys = jax.device_put(keys, device)
-        if flip_keys is not None:
-            flip_keys = jax.device_put(flip_keys, device)
+        with obs.span("exec.device_transfer", device=str(device)):
+            keys = jax.device_put(keys, device)
+            if flip_keys is not None:
+                flip_keys = jax.device_put(flip_keys, device)
     return _dispatch_many([r.net for r in reqs], values_seq, keys,
                           shared.bitstream_length, rate, flip_keys,
                           shared.backend, shared.decode,
@@ -449,10 +485,43 @@ def run(request_or_requests, *, template: BankPlan | None = None,
     batch_shape and values always come from each request).  ``device``
     commits the batch inputs to one JAX device before dispatch;
     ``donate`` forwards to ``execute_bank`` (template path only).
+
+    ``key`` semantics are the bit-identity anchor: a request's output bits
+    depend only on its own key (and ``key_mode``), never on which batch,
+    slot, or device it executed in.
+
+    Example::
+
+        import jax
+        from repro.core import circuits, executor
+        net = circuits.sc_multiply()
+        req = executor.ExecRequest(net, {"a": 0.25, "b": 0.5},
+                                   jax.random.key(7),
+                                   executor.ExecOptions(decode=True))
+        alone = executor.run(req)
+        merged = executor.run([req, req])      # one fused bank program
+        assert float(alone["out"]) == float(merged[0]["out"])
     """
     if isinstance(request_or_requests, ExecRequest):
-        return _run_one(request_or_requests, device=device, options=options)
-    reqs = list(request_or_requests)
+        reqs: "list[ExecRequest]" = [request_or_requests]
+        single = True
+    else:
+        reqs = list(request_or_requests)
+        single = False
+    tr = options.trace if options is not None and options.trace is not None \
+        else next((r.options.trace for r in reqs
+                   if r is not None and r.options.trace is not None), None)
+    if tr is None:
+        return _run_any(reqs, single, template, active, device, donate,
+                        options)
+    with obs.tracing(tr):
+        return _run_any(reqs, single, template, active, device, donate,
+                        options)
+
+
+def _run_any(reqs, single, template, active, device, donate, options):
+    if single:
+        return _run_one(reqs[0], device=device, options=options)
     if template is not None:
         return _run_template(reqs, template, active=active, device=device,
                              donate=donate, options=options)

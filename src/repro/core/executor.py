@@ -61,6 +61,7 @@ from .dispatch import (_BANK_STATIC, _as_f32, _check_fault_args,  # noqa: F401
                        _unpack_values_seq, execute_bank,
                        generate_bank_streams)
 from .faults import FaultModel, apply_faults  # noqa: F401
+from . import obs  # noqa: F401  (re-export: executor.obs.Trace etc.)
 from .exec_api import (_MANY_TAIL, ExecOptions, ExecRequest,  # noqa: F401
                        _common_options, _many_shim, _many_tail, _run_many,
                        _run_one, _run_template, execute, execute_binary,
@@ -73,5 +74,5 @@ __all__ = [
     "DEFAULT_BACKEND", "DEFAULT_KEY_MODE", "ExecOptions", "ExecRequest",
     "FaultModel", "execute", "execute_bank", "execute_binary",
     "execute_many", "execute_value", "execute_value_many",
-    "generate_bank_streams", "run",
+    "generate_bank_streams", "obs", "run",
 ]

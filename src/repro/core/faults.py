@@ -92,6 +92,23 @@ class FaultModel:
         Endurance wear: every recorded pass adds ``wear_stuck_per_pass`` to
         the effective stuck-at-0 rate (write failures degrade toward the
         low-resistance state).  Advance with :meth:`worn`.
+
+    Key semantics: a faulty run is deterministic in ``flip_key`` — the
+    transient draw consumes each injection point's raw fault key (so
+    ``FaultModel(flip_rate=r)`` reproduces the legacy ``bitflip_rate=r``
+    bit-exactly) and every persistent component draws its cell map from a
+    ``fold_in`` subkey of the same key.  Same circuit + same ``flip_key``
+    → same masks on every backend, key_mode, device and bank slot.
+
+    Example::
+
+        model = FaultModel(flip_rate=0.05, dead_row_rate=0.01)
+        opts = executor.ExecOptions(bitstream_length=256, decode=True,
+                                    fault_model=model,
+                                    flip_key=jax.random.key(1))
+        out = executor.run(executor.ExecRequest(
+            circuits.sc_multiply(), {"a": 0.5, "b": 0.5},
+            jax.random.key(0), opts))
     """
 
     flip_rate: float = 0.0

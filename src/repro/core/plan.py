@@ -125,8 +125,21 @@ def compile_plan(net: Netlist, fuse_mux: bool = True) -> ExecutionPlan:
     """Compile ``net`` into an ExecutionPlan (structure-cached).
 
     Runs the full staged pipeline (``compiler.DEFAULT_PIPELINE``): normalize
-    → BUFF-elide/CSE → MUX/XOR/AND fusion + NOT absorption → level →
-    schedule → stream-table build → emit.
+    → elide_cse → fuse → level → schedule → liveness → stream_table → emit
+    (see docs/ARCHITECTURE.md for what each stage does).
+
+    Compilation is key-free: the plan fixes each stream PI's *key lane* in
+    its stream table, but randomness is only drawn at execution time from
+    the request's own PRNG key — one structure compiles once and serves any
+    number of keys.
+
+    Example::
+
+        net = circuits.sc_multiply()
+        p = compile_plan(net)
+        p.n_gates, p.n_passes, p.max_live      # provenance + liveness
+        executor.execute_value(net, {"a": 0.5, "b": 0.5},
+                               jax.random.key(0), 256)  # runs this plan
 
     ``fuse_mux=False`` keeps every gate as its own batched op, disabling ALL
     structural optimization (MUX/XOR fusion, BUFF elision, CSE) — required
@@ -210,6 +223,18 @@ def compile_bank_plan(nets: "list[Netlist]", fuse_mux: bool = True,
     compiles combinational members unfused (per-gate fault injection);
     sequential members always fuse — their injection points are PI/output
     streams, outside the plan (mirroring ``executor._plan_for``).
+
+    Member ``i`` of the bank draws its streams from request ``i``'s key
+    exactly as a standalone execute would, so merged execution is
+    bit-identical to a loop of per-member calls.
+
+    Example::
+
+        nets = [circuits.sc_multiply(), circuits.sc_sqrt()]
+        bank = compile_bank_plan(nets)
+        bank.n_passes, bank.n_passes_looped    # cross-member pass sharing
+        executor.run([executor.ExecRequest(n, v, k, opts)
+                      for n, v, k in zip(nets, values, keys)])  # one dispatch
     """
     if not nets:
         raise ValueError("compile_bank_plan: need at least one netlist")
@@ -298,6 +323,16 @@ def compile_bank_template(plans: "list[ExecutionPlan]",
     templates (and the jit executables their serials anchor) another device
     is still serving from, and bucket-warmth bookkeeping keyed on
     ``BankPlan.serial`` is automatically per device.
+
+    Each bound slot still draws from its own request's key (unbound slots
+    generate nothing), so padding never perturbs results.
+
+    Example::
+
+        plans = [compile_plan(circuits.sc_multiply())] * 3
+        tmpl = compile_bank_template(plans)    # 3 slots pad to 4
+        len(tmpl.members), tmpl.members[-1].is_identity  # (4, True)
+        executor.run(slot_reqs, template=tmpl, active=mask)
     """
     if not plans:
         raise ValueError("compile_bank_template: need at least one plan")

@@ -83,7 +83,7 @@ from typing import Any
 import jax
 import numpy as np
 
-from ..core import executor
+from ..core import executor, obs
 from ..core.arch import _plan_schedule_cycles
 from ..core.dispatch import _check_fault_args
 from ..core.executor import ExecOptions, ExecRequest
@@ -286,6 +286,9 @@ class _Pending:
     sig: tuple = ()     # shape signature, computed once at admission
     retries: int = 0    # failed-dispatch retries consumed
     not_before: float = 0.0   # earliest re-dispatch time (retry backoff)
+    seq: int = -1             # admission serial (trace track identity)
+    staged_at: float = 0.0    # last bind into a batch (perf_counter)
+    launched_at: float = 0.0  # last dispatch to a device (perf_counter)
 
 
 class _Batch:
@@ -318,6 +321,7 @@ class _Batch:
             return False
         self.slots.append(dq.popleft())
         self.pendings.append(pending)
+        pending.staged_at = time.perf_counter()
         return True
 
     def unbind(self, idx: int) -> _Pending:
@@ -491,6 +495,18 @@ class BankServer:
         every batch launch (batch) and during health probes (None);
         raising makes the launch/probe fail.  Used by the chaos harness to
         kill devices mid-run.
+    trace:
+        Observability switch (default None = off, zero overhead on the hot
+        path).  Pass a ``core.obs.Trace`` — or ``True`` to have the server
+        create one, reachable as ``server.trace`` — and the engine records
+        per-request lifecycle spans (``request`` with nested
+        ``request.queued`` / ``request.staged`` / ``request.inflight``,
+        partitioning admit → stage → launch → reap exactly), ``serve.launch``
+        host spans with the executor/compiler spans nested inside, instant
+        events for retry / quarantine / re-dispatch / shed / deadline, and
+        mirrors the reliability counters into ``trace.metrics`` (folded
+        into :meth:`stats` as ``"metrics"``).  Tracing never perturbs
+        results — bit-identity on/off is pinned by tests.
 
     Results are bit-identical per request to standalone
     ``executor.execute[_value]`` with the same key — see module docstring.
@@ -506,7 +522,7 @@ class BankServer:
                  max_queue: "int | None" = None, overload: str = "reject",
                  max_retries: int = 0, retry_backoff_s: float = 0.02,
                  quarantine_after: int = 3, quarantine_s: float = 0.5,
-                 fault_injector=None):
+                 fault_injector=None, trace=None):
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
         if max_inflight < 0:
@@ -542,6 +558,8 @@ class BankServer:
         self.quarantine_after = quarantine_after
         self.quarantine_s = quarantine_s
         self.fault_injector = fault_injector
+        self.trace = obs.Trace("bank-server") if trace is True else trace
+        self._req_seq = 0
         # jax's own default placement: when a batch lands here anyway,
         # skipping the explicit commit avoids the committed-argument
         # bookkeeping jit pays per input leaf (measurably slower than the
@@ -583,10 +601,23 @@ class BankServer:
         (there is no background thread), but dispatched work proceeds
         asynchronously on its device.  Raises :class:`ServerClosed` after
         ``close()``; under ``max_queue`` backpressure a shed request's
-        ticket is returned already failed with :class:`RequestShed`."""
+        ticket is returned already failed with :class:`RequestShed`.
+
+        Example::
+
+            import jax
+            from repro.core import circuits
+            from repro.serve import BankServer, circuit_request
+            net = circuits.sc_multiply()
+            with BankServer(max_slots=4) as server:
+                t = server.submit(circuit_request(
+                    net, {"a": 0.5, "b": 0.5}, jax.random.key(0), bl=256))
+                out = t.result()           # {"out": ~0.25}
+        """
         if self._closed:
             raise ServerClosed("submit() on a closed BankServer")
         _check_fault_args(req.bitflip_rate, req.fault_model, req.flip_key)
+        tr = self.trace
         ticket = Ticket(self)
         if req.deadline_ms is not None:
             ticket.deadline_at = \
@@ -595,14 +626,24 @@ class BankServer:
             self._pump()        # formation may drain the queue into batches
         if self.max_queue is not None and len(self._queue) >= self.max_queue:
             self._stats.shed_requests += 1
+            if tr is not None:
+                tr.metrics.inc("serve.shed_requests")
             if self.overload == "reject":
+                if tr is not None:
+                    tr.event("serve.shed", policy="reject")
                 ticket._fail(RequestShed(
                     f"admission queue full (max_queue={self.max_queue})"))
                 return ticket
             oldest = self._queue.pop(0)
+            if tr is not None:
+                tr.event("serve.shed", policy="shed_oldest", seq=oldest.seq)
             oldest.ticket._fail(RequestShed(
                 f"shed by a newer arrival (max_queue={self.max_queue})"))
-        self._queue.append(_Pending(req, ticket, self._shape_sig(req)))
+        p = _Pending(req, ticket, self._shape_sig(req), seq=self._req_seq)
+        self._req_seq += 1
+        if tr is not None:
+            tr.metrics.inc("serve.requests_admitted")
+        self._queue.append(p)
         self._pump()
         return ticket
 
@@ -836,6 +877,20 @@ class BankServer:
         Dispatch-time failures (bad request values, trace errors) and
         device-side failures (surfacing at finalize/``result()``) both run
         the retry/circuit-breaker policy via ``_on_batch_failure``."""
+        tr = self.trace
+        if tr is None:
+            self._launch_impl(batch, device)
+            return
+        # Making the server's trace current for the launch lets the
+        # compiler's per-stage spans and the executor's pack/transfer/
+        # dispatch spans nest under this host-side launch span.
+        with obs.tracing(tr), tr.span("serve.launch", device=str(device),
+                                      n_requests=len(batch.pendings),
+                                      slots=len(batch.members)):
+            self._launch_impl(batch, device)
+        tr.metrics.inc("serve.batches_launched")
+
+    def _launch_impl(self, batch: _Batch, device) -> None:
         bl, rate, model = batch.group
         multi = len(self.devices) > 1
         # Per-device template scope partitions the bank cache so each
@@ -861,6 +916,8 @@ class BankServer:
             self._seen_signatures.popitem(last=False)
 
         t0 = time.perf_counter()
+        for p in batch.pendings:
+            p.launched_at = t0
         st = self._stats
         st.n_requests += len(batch.pendings)
         st.n_batches += 1
@@ -935,6 +992,7 @@ class BankServer:
             dq.remove(batch)
         except ValueError:                      # pragma: no cover - safety
             pass
+        tr = self.trace
         if err is not None:
             self._on_batch_failure(batch, err, batch.device)
         else:
@@ -945,16 +1003,49 @@ class BankServer:
                     continue    # already settled (deadline hit mid-flight)
                 if t.deadline_at is not None and t_done >= t.deadline_at:
                     self._stats.deadline_exceeded += 1
+                    if tr is not None:
+                        tr.metrics.inc("serve.deadline_exceeded")
+                        tr.event("serve.deadline_exceeded", seq=p.seq,
+                                 where="inflight")
                     t._fail(DeadlineExceeded(
                         f"deadline_ms={p.req.deadline_ms:g} passed before "
                         f"the batch completed"))
                     continue
                 t.latency_s = t_done - t.submitted_at
                 self._stats.latencies_s.append(t.latency_s)
+                if tr is not None:
+                    self._emit_request_trace(tr, p, t_done, batch)
         if self._busy_since is not None and \
                 not any(self._inflight.values()):
             self._stats.exec_s += t_done - self._busy_since
             self._busy_since = None
+
+    def _emit_request_trace(self, tr, p: _Pending, t_done: float,
+                            batch: _Batch) -> None:
+        """Retroactive lifecycle spans for one reaped request.
+
+        The child spans partition the root exactly — queued (admit → last
+        bind), staged (bind → launch), inflight (launch → reap) — so their
+        total always accounts for 100% of the request's wall-clock.  Each
+        request renders on its own virtual chrome-trace track."""
+        t = p.ticket
+        t_sub = t.submitted_at
+        t_staged = min(max(p.staged_at, t_sub), t_done)
+        t_launch = min(max(p.launched_at, t_staged), t_done)
+        tid = tr.virtual_tid(f"request-{p.seq}")
+        root = tr.add_span("request", t_sub, t_done, tid=tid, seq=p.seq,
+                           retries=p.retries, device=str(batch.device))
+        tr.add_span("request.queued", t_sub, t_staged, parent=root, tid=tid)
+        tr.add_span("request.staged", t_staged, t_launch, parent=root,
+                    tid=tid)
+        tr.add_span("request.inflight", t_launch, t_done, parent=root,
+                    tid=tid)
+        m = tr.metrics
+        m.inc("serve.requests_completed")
+        m.observe("serve.latency_ms", (t_done - t_sub) * 1e3)
+        m.observe("serve.queued_ms", (t_staged - t_sub) * 1e3)
+        m.observe("serve.staged_ms", (t_launch - t_staged) * 1e3)
+        m.observe("serve.inflight_ms", (t_done - t_launch) * 1e3)
 
     def _wait_batch(self, batch: _Batch, timeout: "float | None") -> None:
         if batch.finalized:
@@ -1021,7 +1112,14 @@ class BankServer:
                 t._reset()
                 self._queue.append(p)
                 self._stats.retries += 1
+                if self.trace is not None:
+                    self.trace.metrics.inc("serve.retries")
+                    self.trace.event("serve.retry", seq=p.seq,
+                                     attempt=p.retries)
                 return
+        if self.trace is not None:
+            self.trace.event("serve.request_failed", seq=p.seq,
+                             error=type(exc).__name__)
         t._fail(exc)
 
     def _note_device_failure(self, device) -> None:
@@ -1042,6 +1140,11 @@ class BankServer:
         self._quarantine_backoff[device] = backoff * 2.0
         self._stats.quarantines += 1
         self._dev_stats[device]["quarantines"] += 1
+        tr = self.trace
+        if tr is not None:
+            tr.metrics.inc("serve.quarantines")
+            tr.event("serve.quarantine", device=str(device),
+                     backoff_s=backoff)
         dq = self._inflight[device]
         while dq:
             b = dq.popleft()
@@ -1055,6 +1158,10 @@ class BankServer:
                 p.not_before = 0.0
                 self._queue.append(p)
                 self._stats.redispatched_requests += 1
+                if tr is not None:
+                    tr.metrics.inc("serve.redispatched_requests")
+                    tr.event("serve.redispatch", seq=p.seq,
+                             device=str(device))
         if self._busy_since is not None and \
                 not any(self._inflight.values()):
             self._stats.exec_s += time.perf_counter() - self._busy_since
@@ -1101,6 +1208,10 @@ class BankServer:
                 dl = p.ticket.deadline_at
                 if dl is not None and now >= dl:
                     self._stats.deadline_exceeded += 1
+                    if self.trace is not None:
+                        self.trace.metrics.inc("serve.deadline_exceeded")
+                        self.trace.event("serve.deadline_exceeded",
+                                         seq=p.seq, where="queued")
                     p.ticket._fail(DeadlineExceeded(
                         f"deadline_ms={p.req.deadline_ms:g} passed while "
                         f"queued"))
@@ -1114,6 +1225,10 @@ class BankServer:
                 if t.deadline_at is not None and now >= t.deadline_at:
                     p = b.unbind(i)
                     self._stats.deadline_exceeded += 1
+                    if self.trace is not None:
+                        self.trace.metrics.inc("serve.deadline_exceeded")
+                        self.trace.event("serve.deadline_exceeded",
+                                         seq=p.seq, where="staged")
                     p.ticket._fail(DeadlineExceeded(
                         f"deadline_ms={p.req.deadline_ms:g} passed while "
                         f"staged"))
@@ -1178,11 +1293,32 @@ class BankServer:
     # -------------------------------- stats --------------------------------------
 
     def stats(self) -> dict:
+        """Serving-health snapshot (plain dict, json-serializable).
+
+        Fields are documented exhaustively in ``docs/OBSERVABILITY.md``:
+        provenance counters (``n_requests`` / ``n_batches`` / bucket
+        hits / joins / padding waste / pass-merge savings), latency
+        aggregates (``p50_ms`` / ``p99_ms`` / ``mean_ms`` /
+        ``throughput_rps`` over the most recent window), reliability
+        counters (``shed_requests`` / ``retries`` / ``quarantines`` /
+        ``redispatched_requests`` / ``deadline_exceeded``) and a
+        per-device breakdown.  When the server was built with ``trace=``,
+        a ``"metrics"`` key carries ``trace.metrics.snapshot()``.
+
+        Example::
+
+            server = BankServer(max_slots=4, trace=True)
+            # ... traffic ...
+            s = server.stats()
+            s["bucket_hit_rate"], s["p99_ms"], s["metrics"]["counters"]
+        """
         d = self._stats.as_dict()
         d["n_devices"] = len(self.devices)
         d["devices"] = [{"device": str(dev), **dict(st),
                          "quarantined": dev in self._quarantined}
                         for dev, st in self._dev_stats.items()]
+        if self.trace is not None:
+            d["metrics"] = self.trace.metrics.snapshot()
         return d
 
     def reset_stats(self) -> None:
